@@ -1,0 +1,100 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: lower a cell under config/mesh variants and
+report the three roofline terms per variant.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb --target xlstm
+  PYTHONPATH=src python -m benchmarks.hillclimb --target command-r
+  PYTHONPATH=src python -m benchmarks.hillclimb --target qwen3
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import mesh as meshlib
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import HARDWARE
+from repro.models.config import SSMConfig
+
+
+def report(tag, r):
+    c = r.flops / HARDWARE["peak_flops"]
+    m = r.bytes_accessed / HARDWARE["hbm_bw"]
+    x = sum(r.collectives.values()) / HARDWARE["ici_bw"]
+    dom = max(("compute", c), ("memory", m), ("collective", x),
+              key=lambda kv: kv[1])
+    print(
+        f"{tag:42s} C={c:9.3e} M={m:9.3e} X={x:9.3e} "
+        f"dom={dom[0]:10s} frac={c/max(c,m,x):5.3f} "
+        f"hbm={(r.argument_bytes+r.temp_bytes)/1e9:6.1f}GB "
+        f"useful={r.model_flops/max(r.flops*256,1):5.2f}"
+    )
+    return {"compute": c, "memory": m, "collective": x, "dom": dom[0]}
+
+
+def climb_xlstm(mesh):
+    arch, cell = "xlstm-1.3b", "train_4k"
+    base = get_config(arch)
+    r = lower_cell(arch, cell, mesh, verbose=False)
+    report("baseline (recurrent mLSTM)", r)
+    for ck in (32, 64, 128, 256):
+        cfg = dataclasses.replace(
+            base, ssm=SSMConfig(slstm_every=8, mlstm_chunk=ck)
+        )
+        r = lower_cell(arch, cell, mesh, verbose=False, cfg_override=cfg)
+        report(f"chunkwise mLSTM chunk={ck}", r)
+
+
+def climb_command_r(mesh):
+    arch, cell = "command-r-35b", "train_4k"
+    base = get_config(arch)
+    r = lower_cell(arch, cell, mesh, verbose=False)
+    report("baseline", r)
+    # hypothesis A: microbatching amortizes FSDP weight gathers worse
+    # (same gathers per microbatch) — fewer microbatches, fewer gathers
+    for micro in (2, 4):
+        r = lower_cell(arch, cell, mesh, verbose=False, micro_override=micro)
+        report(f"microbatches={micro}", r)
+    # hypothesis B: remat policy 'dots' saves matmul outputs -> no second
+    # fwd pass -> fewer per-layer FSDP re-gathers in bwd
+    cfg = dataclasses.replace(base, remat="dots")
+    r = lower_cell(arch, cell, mesh, verbose=False, cfg_override=cfg)
+    report("remat=dots (save matmuls)", r)
+
+
+def climb_qwen3(mesh):
+    arch, cell = "qwen3-moe-30b-a3b", "train_4k"
+    base = get_config(arch)
+    r = lower_cell(arch, cell, mesh, verbose=False)
+    report("baseline (EP, cap 1.25)", r)
+    import repro.models.config as mc
+
+    for cf in (1.0, 2.0):
+        cfg = dataclasses.replace(
+            base,
+            moe=dataclasses.replace(base.moe, capacity_factor=cf),
+        )
+        r = lower_cell(arch, cell, mesh, verbose=False, cfg_override=cfg)
+        report(f"capacity_factor={cf}", r)
+    cfg = dataclasses.replace(base, remat="dots")
+    r = lower_cell(arch, cell, mesh, verbose=False, cfg_override=cfg)
+    report("remat=dots", r)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", required=True,
+                    choices=["xlstm", "command-r", "qwen3"])
+    args = ap.parse_args()
+    mesh = meshlib.make_production_mesh()
+    {"xlstm": climb_xlstm, "command-r": climb_command_r,
+     "qwen3": climb_qwen3}[args.target](mesh)
+
+
+if __name__ == "__main__":
+    main()

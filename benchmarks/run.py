@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure block.
+
+Prints ``name,us_per_call,derived`` CSV. The AC/DC benches reproduce the
+structure of Table 1 (compression, LR/PR2/FaMa × v1..v4, FD variants,
+materialize/one-hot baseline, shared-computation factor) at laptop scale;
+the kernel benches quantify what the Pallas schedules buy.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from benchmarks import bench_acdc, bench_kernels  # noqa: E402
+
+BENCHES = [
+    bench_acdc.bench_compression,
+    bench_acdc.bench_lr,
+    bench_acdc.bench_pr2,
+    bench_acdc.bench_fama,
+    bench_acdc.bench_materialize_baseline,
+    bench_acdc.bench_sharing,
+    bench_kernels.bench_sigma_fused,
+    bench_kernels.bench_seg_outer,
+    bench_kernels.bench_swa_vs_full,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    failures = 0
+    for bench in BENCHES:
+        try:
+            bench(emit)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{bench.__name__},FAILED,", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

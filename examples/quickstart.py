@@ -1,0 +1,48 @@
+"""Quickstart: in-database ridge regression over a multi-relation join.
+
+Builds a tiny retailer database (5 relations), trains LR entirely in the
+database via factorized aggregates + BGD, and verifies against the closed
+form. Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core.api import train
+from repro.core.solver import closed_form_ridge
+from repro.data.retailer import RetailerSpec, features, generate, variable_order
+
+
+def main():
+    db = generate(RetailerSpec(n_locn=15, n_zip=8, n_date=20, n_sku=25))
+    print("relations:", {n: r.num_rows for n, r in db.relations.items()})
+
+    order = variable_order()
+    feats = features()
+    result = train(db, order, feats, response="units", model="lr", lam=1e-2)
+
+    fz = result.plan.fz
+    print(f"|Q(D)| = {int(result.sigma.count)} join rows")
+    print(f"listing representation : {fz.listing_size():>9d} values")
+    print(f"factorized representation: {fz.factorized_size:>7d} values "
+          f"({fz.listing_size()/fz.factorized_size:.1f}x compression)")
+    print(f"parameters (cont+cat)  : {result.sigma.space.total}")
+    print(f"distinct aggregates    : {result.sigma.nnz_distinct}")
+    print(f"aggregate pass         : {result.aggregate_seconds:.2f}s (incl. one-time jit compile)")
+    print(f"BGD converged in {result.solver.iterations} iters "
+          f"({result.converge_seconds:.2f}s), loss {result.loss:.5f}")
+
+    theta_cf = closed_form_ridge(
+        result.sigma.dense(), np.asarray(result.sigma.c), 1e-2
+    )
+    err = np.abs(np.asarray(result.params) - theta_cf).max()
+    print(f"max |theta - closed_form| = {err:.2e}")
+    assert err < 5e-3  # BGD tol vs closed form
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end LM training driver: ~100M-parameter model, few hundred steps,
+full substrate (deterministic data, AdamW + cosine, grad clip, async atomic
+checkpoints, crash-resume).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--params 100]
+(--params in millions; defaults sized so a CPU run finishes in minutes.)
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.launch.train import LoopConfig, train_loop
+from repro.models.config import ModelConfig, Family
+from repro.models.model import LM
+from repro.optim import adamw, cosine_warmup
+
+
+def config_for(params_m: int) -> ModelConfig:
+    if params_m >= 100:
+        # ~100M decoder-only (llama-family — deepseek-7b's reduced cousin)
+        return ModelConfig(
+            name="lm-100m", family=Family.DENSE, n_layers=8, d_model=512,
+            n_heads=8, n_kv=8, head_dim=64, d_ff=2048, vocab=32_000,
+            tie_embeddings=True,
+        )
+    return ModelConfig(
+        name="lm-10m", family=Family.DENSE, n_layers=4, d_model=256,
+        n_heads=4, n_kv=4, head_dim=64, d_ff=1024, vocab=8_192,
+        tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--params", type=int, default=10, help="millions")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = config_for(args.params)
+    model = LM(cfg)
+    print(f"{cfg.name}: {cfg.num_params()/1e6:.1f}M params")
+    data = SyntheticTokens(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch, seed=0
+    )
+    out = train_loop(
+        model,
+        adamw(cosine_warmup(3e-4, 20, args.steps)),
+        data,
+        LoopConfig(total_steps=args.steps, ckpt_every=50,
+                   ckpt_dir=args.ckpt, log_every=10),
+    )
+    first, last = out["history"][0][1], out["history"][-1][1]
+    print(f"loss {first:.3f} -> {last:.3f}")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Regenerate the §Dry-run and §Roofline tables inside EXPERIMENTS.md from
+artifacts/dryrun. Run after a dry-run matrix completes:
+
+    PYTHONPATH=src python scripts/inject_tables.py
+"""
+
+import glob
+import json
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.roofline import build_table, load_artifacts, terms  # noqa: E402
+
+
+def dryrun_table() -> str:
+    out = [
+        "| arch | cell | mesh | compile s | strategy | micro | args GB/dev "
+        "| temp GB/dev | collective mix |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for f in sorted(glob.glob("artifacts/dryrun/*.json")):
+        rows.append(json.load(open(f)))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order[r["cell"]], r["mesh"]))
+    for r in rows:
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | FAILED {r['error']} |")
+            continue
+        tot = sum(r["collectives"].values()) or 1.0
+        mix = " ".join(
+            f"{k.replace('all-','a').replace('collective-permute','cp').replace('reduce-scatter','rs')}:{v/tot:.0%}"
+            for k, v in sorted(r["collectives"].items(), key=lambda kv: -kv[1])[:3]
+        )
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | {r['compile_s']:.0f} "
+            f"| {r.get('strategy','')} | {r.get('microbatches',1)} "
+            f"| {r['argument_bytes']/1e9:.1f} | {r['temp_bytes']/1e9:.1f} | {mix} |"
+        )
+    return "\n".join(out)
+
+
+def replace_between(text: str, marker: str, payload: str) -> str:
+    # payload goes right after the marker line, replacing until a blank line
+    # followed by '#' heading or end marker; simplest: marker line -> payload
+    pattern = re.compile(
+        rf"(<!-- {marker} -->)(.*?)(?=\n## |\n### |\Z)", re.S
+    )
+    return pattern.sub(lambda m: m.group(1) + "\n\n" + payload + "\n", text)
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    md = replace_between(md, "DRYRUN_TABLE", dryrun_table())
+    rows = load_artifacts("artifacts/dryrun", "pod1")
+    md = replace_between(md, "ROOFLINE_TABLE", build_table(rows, 256))
+    open("EXPERIMENTS.md", "w").write(md)
+    print("tables injected:",
+          len(glob.glob("artifacts/dryrun/*.json")), "artifacts")
+
+
+if __name__ == "__main__":
+    main()

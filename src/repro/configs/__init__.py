@@ -1,0 +1,49 @@
+"""Config registry: the 10 assigned architectures (exact published dims),
+their reduced smoke variants, and the paper's own retailer workload.
+
+Usage:  cfg = get_config("qwen3-moe-30b-a3b")          # full
+        cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_ARCHS = [
+    "whisper_base",
+    "hymba_1p5b",
+    "qwen3_moe_30b_a3b",
+    "grok_1_314b",
+    "command_r_35b",
+    "h2o_danube_1p8b",
+    "gemma3_27b",
+    "deepseek_7b",
+    "xlstm_1p3b",
+    "internvl2_26b",
+]
+
+_BY_NAME: Dict[str, str] = {}
+
+
+def _load():
+    if _BY_NAME:
+        return
+    for mod_name in _ARCHS:
+        mod = importlib.import_module(f"repro.configs.{mod_name}")
+        _BY_NAME[mod.CONFIG.name] = mod_name
+
+
+def list_archs() -> List[str]:
+    _load()
+    return sorted(_BY_NAME)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    _load()
+    if name not in _BY_NAME:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_BY_NAME)}")
+    mod = importlib.import_module(f"repro.configs.{_BY_NAME[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG

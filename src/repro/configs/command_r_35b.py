@@ -1,0 +1,37 @@
+"""command-r-35b — dense GQA, parallel attn∥FFN block, no biases
+[hf:CohereForAI/c4ai-command-r-v01; unverified].
+
+40L, d_model=8192, 64H (GQA kv=8, head_dim=128), d_ff=22528, vocab=256000.
+"""
+from repro.models.config import Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family=Family.DENSE,
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv=8,
+    head_dim=128,
+    d_ff=22_528,
+    vocab=256_000,
+    parallel_block=True,
+    rope_base=8_000_000.0,
+    tie_embeddings=True,
+    source="hf:CohereForAI/c4ai-command-r-v01",
+)
+
+SMOKE = ModelConfig(
+    name="command-r-smoke",
+    family=Family.DENSE,
+    n_layers=3,
+    d_model=64,
+    n_heads=8,
+    n_kv=2,
+    head_dim=8,
+    d_ff=160,
+    vocab=509,
+    parallel_block=True,
+    tie_embeddings=True,
+    source="reduced",
+)

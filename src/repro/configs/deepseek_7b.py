@@ -1,0 +1,33 @@
+"""deepseek-7b — llama-architecture dense LM [arXiv:2401.02954; hf].
+
+30L, d_model=4096, 32H (kv=32 — MHA), d_ff=11008, vocab=102400.
+"""
+from repro.models.config import Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    family=Family.DENSE,
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv=32,
+    head_dim=128,
+    d_ff=11_008,
+    vocab=102_400,
+    tie_embeddings=False,
+    source="arXiv:2401.02954",
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-smoke",
+    family=Family.DENSE,
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv=4,
+    head_dim=16,
+    d_ff=160,
+    vocab=311,
+    tie_embeddings=False,
+    source="reduced",
+)

@@ -1,0 +1,48 @@
+"""gemma3-27b — dense, 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family; unverified].
+
+62L, d_model=5376, 32H (GQA kv=16, head_dim=128), d_ff=21504, vocab=262144.
+Local layers: SWA window 1024, rope base 10k. Every 6th layer global: full
+attention, rope base 1M. QK-norm, GeGLU. SWA-dominant stack qualifies the
+arch for long_500k (global layers are linear per decoded token).
+"""
+from repro.models.config import Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family=Family.DENSE,
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv=16,
+    head_dim=128,
+    d_ff=21_504,
+    vocab=262_144,
+    window=1024,
+    global_every=6,
+    qk_norm=True,
+    act="geglu",
+    rope_base=10_000.0,
+    rope_base_global=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:google/gemma-3-27b-pt",
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-smoke",
+    family=Family.DENSE,
+    n_layers=6,
+    d_model=64,
+    n_heads=4,
+    n_kv=2,
+    head_dim=16,
+    d_ff=160,
+    vocab=311,
+    window=8,
+    global_every=3,
+    qk_norm=True,
+    act="geglu",
+    rope_base_global=1_000_000.0,
+    tie_embeddings=True,
+    source="reduced",
+)

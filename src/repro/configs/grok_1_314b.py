@@ -1,0 +1,40 @@
+"""grok-1-314b — 8-expert top-2 MoE [hf:xai-org/grok-1; unverified].
+
+64L, d_model=6144, 48H (GQA kv=8, head_dim=128), per-expert d_ff=32768,
+vocab=131072, attention logit softcap 30. Expert count (8) does not divide
+the 16-way model axis, so the MoE uses the per-expert tensor-parallel layout
+(d_ff sharded 16-way, psum-combined) — see models/moe.py.
+"""
+from repro.models.config import Family, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family=Family.MOE,
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv=8,
+    head_dim=128,
+    d_ff=32_768,
+    vocab=131_072,
+    logit_softcap=30.0,
+    tie_embeddings=True,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32_768),
+    source="hf:xai-org/grok-1",
+)
+
+SMOKE = ModelConfig(
+    name="grok-smoke",
+    family=Family.MOE,
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv=2,
+    head_dim=16,
+    d_ff=96,
+    vocab=307,
+    logit_softcap=30.0,
+    tie_embeddings=True,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=96, capacity_factor=4.0),
+    source="reduced",
+)

@@ -1,0 +1,38 @@
+"""h2o-danube-1.8b — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818; hf].
+
+24L, d_model=2560, 32H (GQA kv=8, head_dim=80), d_ff=6912, vocab=32000,
+Mistral-style SWA window 4096 — the sub-quadratic path that qualifies this
+arch for the long_500k cell.
+"""
+from repro.models.config import Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b",
+    family=Family.DENSE,
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab=32_000,
+    window=4096,
+    tie_embeddings=False,
+    source="arXiv:2401.16818",
+)
+
+SMOKE = ModelConfig(
+    name="h2o-danube-smoke",
+    family=Family.DENSE,
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv=2,
+    head_dim=16,
+    d_ff=160,
+    vocab=311,
+    window=8,
+    tie_embeddings=False,
+    source="reduced",
+)

@@ -1,0 +1,39 @@
+"""hymba-1.5b — hybrid parallel attention+mamba heads [arXiv:2411.13676; hf].
+
+32L, d_model=1600, 25H (GQA kv=5, head_dim=64), d_ff=5504, vocab=32001,
+ssm_state=16. Sliding-window attention everywhere except 3 full-attention
+layers (first/middle/last, per the paper); attention and mamba run in
+parallel on the same input, each output normalized then averaged. Meta
+tokens are not reproduced (DESIGN.md §4).
+"""
+from repro.models.config import Family, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family=Family.HYBRID,
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    window=1024,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, chunk=256),
+    source="arXiv:2411.13676",
+)
+
+SMOKE = ModelConfig(
+    name="hymba-smoke",
+    family=Family.HYBRID,
+    n_layers=4,
+    d_model=80,
+    n_heads=5,
+    n_kv=1,
+    head_dim=16,
+    d_ff=160,
+    vocab=311,
+    window=8,
+    ssm=SSMConfig(d_state=4, d_conv=4, expand=2, chunk=8),
+    source="reduced",
+)

@@ -1,0 +1,41 @@
+"""internvl2-26b — InternViT vision frontend + InternLM2-20B backbone
+[arXiv:2404.16821; hf].
+
+Backbone: 48L, d_model=6144, 48H (GQA kv=8, head_dim=128), d_ff=16384,
+vocab=92553. The InternViT frontend is a STUB per the brief: input_specs()
+provides 256 precomputed patch embeddings per image, prepended to the token
+sequence (pixel-shuffle tile size of the published model).
+"""
+from repro.models.config import Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family=Family.VLM,
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv=8,
+    head_dim=128,
+    d_ff=16_384,
+    vocab=92_553,
+    tie_embeddings=False,
+    frontend="vision",
+    frontend_len=256,
+    source="arXiv:2404.16821",
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke",
+    family=Family.VLM,
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv=2,
+    head_dim=16,
+    d_ff=160,
+    vocab=311,
+    tie_embeddings=False,
+    frontend="vision",
+    frontend_len=8,
+    source="reduced",
+)

@@ -1,0 +1,39 @@
+"""qwen3-moe-30b-a3b — 128-expert top-8 MoE [hf:Qwen/Qwen3-30B-A3B; hf].
+
+48L, d_model=2048, 32H (GQA kv=4, head_dim=128), per-expert d_ff=768,
+vocab=151936, 128 experts top-8, QK-norm.
+"""
+from repro.models.config import Family, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family=Family.MOE,
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv=4,
+    head_dim=128,
+    d_ff=768,                       # per-expert (used by MoEConfig below)
+    vocab=151_936,
+    qk_norm=True,
+    rope_base=1_000_000.0,
+    tie_embeddings=False,
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=768),
+    source="hf:Qwen/Qwen3-30B-A3B",
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-smoke",
+    family=Family.MOE,
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv=2,
+    head_dim=16,
+    d_ff=48,
+    vocab=307,
+    qk_norm=True,
+    tie_embeddings=False,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=48, capacity_factor=4.0),
+    source="reduced",
+)

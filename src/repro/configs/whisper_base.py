@@ -1,0 +1,51 @@
+"""whisper-base — enc-dec audio transformer [arXiv:2212.04356; unverified].
+
+6L encoder + 6L decoder, d_model=512, 8H (kv=8), d_ff=2048, vocab=51865.
+The conv/mel frontend is a STUB: input_specs() provides precomputed frame
+embeddings (B, 1500, 512). Decoder uses learned positions (no RoPE); the
+published checkpoint caps positions at 448 — the 32k dry-run cells extend
+the position table mechanically (DESIGN.md §4).
+"""
+from repro.models.config import Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family=Family.ENCDEC,
+    n_layers=6,
+    n_enc_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab=51865,
+    norm="layernorm",
+    act="gelu",
+    rope_base=0.0,               # learned absolute positions
+    max_position=32_776,
+    tie_embeddings=True,
+    frontend="audio",
+    frontend_len=1500,
+    source="arXiv:2212.04356",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-base-smoke",
+    family=Family.ENCDEC,
+    n_layers=2,
+    n_enc_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv=4,
+    head_dim=16,
+    d_ff=128,
+    vocab=311,
+    norm="layernorm",
+    act="gelu",
+    rope_base=0.0,
+    max_position=64,
+    tie_embeddings=True,
+    frontend="audio",
+    frontend_len=12,
+    source="reduced",
+)

@@ -1,0 +1,38 @@
+"""xlstm-1.3b — sLSTM + mLSTM block stack [arXiv:2405.04517; unverified].
+
+48L, d_model=2048, 4H (head_dim=512 matrix memories), d_ff=0 (no separate
+FFN — the cells carry the projections), vocab=50304. Block ratio 7:1
+mLSTM:sLSTM (every 8th block is sLSTM). Fully recurrent → long_500k runs
+with O(1) state per token.
+"""
+from repro.models.config import Family, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family=Family.SSM,
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv=4,
+    head_dim=512,
+    d_ff=0,
+    vocab=50_304,
+    # mlstm_chunk: chunkwise-parallel mLSTM (exact same math as the
+    # stabilized recurrence; 165x lower HBM-traffic roofline term — §Perf)
+    ssm=SSMConfig(slstm_every=8, mlstm_chunk=1024),
+    source="arXiv:2405.04517",
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-smoke",
+    family=Family.SSM,
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv=4,
+    head_dim=16,
+    d_ff=0,
+    vocab=311,
+    ssm=SSMConfig(slstm_every=4),
+    source="reduced",
+)

@@ -1,0 +1,121 @@
+"""End-to-end in-database learning API (the paper's full pipeline).
+
+    result = train(db, order, features=..., response=..., model="pr2")
+
+runs: variable-order analysis -> factorize -> aggregate registers -> one
+factorized aggregate pass -> sparse (Sigma, c, s_Y) -> BGD until convergence.
+With ``fds=db.fds`` the workload is computed over the FD-reduced feature set
+and the penalty is reparameterized (AC/DC+FD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from . import fd as fdmod
+from .engine import AggregateResult, EnginePlan, compute_aggregates
+from .glm import (
+    polynomial_regression,
+    Model,
+    factorization_machine,
+    linear_regression,
+    polynomial_regression2,
+    workload_for,
+)
+from .monomials import Workload
+from .schema import FD, Database
+from .sigma import SigmaCSY, build_param_space, build_sigma
+from .solver import SolverResult, bgd
+from .variable_order import OrderInfo, VarNode, analyze
+
+
+@dataclasses.dataclass
+class TrainResult:
+    model: Model
+    params: object
+    sigma: SigmaCSY
+    workload: Workload
+    plan: EnginePlan
+    solver: SolverResult
+    aggregate_seconds: float
+    converge_seconds: float
+
+    @property
+    def loss(self) -> float:
+        return self.solver.loss
+
+
+def prepare(
+    db: Database,
+    order: VarNode,
+    features: Sequence[str],
+    response: str,
+    model: str = "lr",
+    lam: float = 1e-3,
+    fds: Sequence[FD] = (),
+    rank: int = 8,
+):
+    """Aggregate pass only: returns (model, sigma, workload, plan, seconds)."""
+    info = analyze(order, db)
+    feats = list(features)
+    fd_penalty = None
+    if fds:
+        feats = fdmod.reduced_features(feats, fds)
+    wl = workload_for(db, feats, response, model)
+    t0 = time.perf_counter()
+    res, plan = compute_aggregates(db, info, wl.aggregates)
+    sig = build_sigma(db, wl, res)
+    agg_s = time.perf_counter() - t0
+    if fds:
+        fd_penalty = fdmod.build_fd_penalty(db, sig.space, fds)
+    if model == "lr":
+        m = linear_regression(db, wl, sig.space, lam)
+    elif model == "pr2":
+        m = polynomial_regression2(db, wl, sig.space, lam)
+    elif model.startswith("pr") and model[2:].isdigit():
+        m = polynomial_regression(db, wl, sig.space, int(model[2:]), lam)
+    elif model == "fama":
+        m = factorization_machine(db, wl, sig.space, rank=rank, lam=lam)
+    else:
+        raise ValueError(model)
+    m.fd_penalty = fd_penalty
+    return m, sig, wl, plan, agg_s
+
+
+def train(
+    db: Database,
+    order: VarNode,
+    features: Sequence[str],
+    response: str,
+    model: str = "lr",
+    lam: float = 1e-3,
+    fds: Sequence[FD] = (),
+    rank: int = 8,
+    max_iters: int = 1000,
+    tol: float = 1e-10,
+) -> TrainResult:
+    m, sig, wl, plan, agg_s = prepare(
+        db, order, features, response, model, lam, fds, rank
+    )
+    t0 = time.perf_counter()
+    sol = bgd(
+        lambda p: m.loss(sig, p),
+        m.init_params(),
+        max_iters=max_iters,
+        tol=tol,
+    )
+    conv_s = time.perf_counter() - t0
+    return TrainResult(
+        model=m,
+        params=sol.params,
+        sigma=sig,
+        workload=wl,
+        plan=plan,
+        solver=sol,
+        aggregate_seconds=agg_s,
+        converge_seconds=conv_s,
+    )

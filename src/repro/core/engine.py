@@ -1,0 +1,473 @@
+"""The AC/DC factorized aggregate engine, TPU-native formulation.
+
+The paper's Figure-1 algorithm is a depth-first, row-at-a-time traversal with
+per-node caches. Here the same computation is re-expressed as **bottom-up
+message passing over the variable order** so it runs as dense vectorized
+dataflow (gathers, elementwise products, ``segment_sum``) — the natural TPU
+mapping (DESIGN.md §2). Three phases:
+
+  1. ``factorize(db, info)``  (host, numpy, once per database)
+     Semi-join-reduces the relations, then builds per-variable *node tables*:
+     the distinct assignments of ``dep(X) ∪ {X}`` present in the join —
+     collectively, the factorized representation of Q(D) whose total size is
+     the paper's "factorized #values" compression metric.
+
+  2. ``plan(factorized, registers)`` (host, numpy, once per database+workload)
+     For every (variable, group-by-signature) pair, precomputes the gather /
+     expansion / segment-output index arrays. All register entries that share
+     a signature share one plan — the vectorized analogue of the paper's
+     shared aggregate computation (§4.2). The paper's ``cache_A[context]``
+     (dep ⊂ anc sharing) is structural here: a child's message is computed
+     once per distinct child context by construction and *gathered* by the
+     parent, never recomputed.
+
+  3. ``execute(plan_arrays, ...)`` (device, jax.jit)
+     One pass bottom-up over the variable order. Per (node, signature):
+       vals = lam[src_row][:, p0] * prod_j child_vals_j[gather_j][:, col_j]
+       out  = segment_sum(vals, out_id, n_out)              # (n_out, E)
+     i.e. every signature computes *all* its aggregates together as one
+     (rows × entries) matrix — MXU-friendly batched products with the
+     register locality the paper engineers by hand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .monomials import Entry, Monomial, Registers
+from .schema import Database, Kind
+from .variable_order import OrderInfo, reduce_database, _row_key
+
+
+# ----------------------------------------------------------------------
+# Phase 1: factorize
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class NodeTable:
+    var: str
+    kind: Kind
+    n_rows: int
+    n_ctx: int
+    ctx_id: np.ndarray                      # (n_rows,) int32, sorted ascending
+    values: Optional[np.ndarray]            # float64 | int32 ids | None (KEY)
+    # sorted unique composite keys of dep(X) rows (void view) for lookups
+    ctx_keys: np.ndarray                    # (n_ctx,) void
+    dep: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class Factorized:
+    info: OrderInfo
+    nodes: Dict[str, NodeTable]
+    child_lookup: Dict[str, Dict[str, np.ndarray]]   # var -> child -> (n_rows,)
+    num_join_rows: int                                # |Q(D)| (for stats)
+
+    @property
+    def factorized_size(self) -> int:
+        """Paper's 'factorized #values' metric: total node-table values."""
+        return sum(n.n_rows for n in self.nodes.values())
+
+    def listing_size(self, num_vars: Optional[int] = None) -> int:
+        nv = num_vars if num_vars is not None else len(self.nodes)
+        return self.num_join_rows * nv
+
+
+def _as_key_col(c: np.ndarray) -> np.ndarray:
+    """Canonical int64 view of a column for composite keys: float columns
+    by bit pattern (consistent everywhere), ids widened."""
+    if c.dtype == np.float64:
+        return c.view(np.int64)
+    if np.issubdtype(c.dtype, np.floating):
+        return c.astype(np.float64).view(np.int64)
+    return c.astype(np.int64)
+
+
+def _dedup_rows(cols: List[np.ndarray]) -> Tuple[np.ndarray, ...]:
+    """Distinct rows of the given equal-length integer/float columns.
+
+    Floats (continuous attrs) are included in the dedup key by bit pattern.
+    Returns the columns filtered to distinct rows, lexicographically sorted.
+    """
+    as_int = [_as_key_col(c) for c in cols]
+    key = np.stack(as_int, axis=1)
+    view = _row_key(key)
+    order = np.argsort(view, kind="stable")
+    view_sorted = view[order]
+    keep = np.empty(len(view_sorted), dtype=bool)
+    keep[:1] = True
+    keep[1:] = view_sorted[1:] != view_sorted[:-1]
+    idx = order[keep]
+    # preserve lexicographic order of the sorted view
+    return tuple(c[idx] for c in cols)
+
+
+def factorize(db: Database, info: OrderInfo) -> Factorized:
+    db = reduce_database(db, info)
+
+    nodes: Dict[str, NodeTable] = {}
+    child_lookup: Dict[str, Dict[str, np.ndarray]] = {}
+
+    for var in info.preorder:
+        dep = info.dep[var]
+        rel = db.relations[info.cover[var]]
+        cols = [rel.columns[d] for d in dep] + [rel.columns[var]]
+        distinct = _dedup_rows(cols)
+        dep_cols, val_col = list(distinct[:-1]), distinct[-1]
+        n_rows = len(val_col)
+
+        if dep:
+            dep_key = _row_key(
+                np.stack([_as_key_col(c) for c in dep_cols], axis=1)
+            )
+            ctx_keys, ctx_id = np.unique(dep_key, return_inverse=True)
+        else:
+            ctx_keys = np.zeros((1,), dtype=np.int64).view([("", np.int64)])
+            ctx_id = np.zeros((n_rows,), dtype=np.int64)
+
+        kind = db.kind(var)
+        values: Optional[np.ndarray]
+        if kind is Kind.CONTINUOUS:
+            values = val_col.astype(np.float64)
+        elif kind is Kind.CATEGORICAL:
+            values = val_col.astype(np.int32)
+        else:
+            values = val_col.astype(np.int32)  # keys kept for child lookups
+
+        nodes[var] = NodeTable(
+            var=var,
+            kind=kind,
+            n_rows=n_rows,
+            n_ctx=len(ctx_keys),
+            ctx_id=ctx_id.astype(np.int32),
+            values=values,
+            ctx_keys=ctx_keys,
+            dep=dep,
+        )
+
+    # child lookups: for each row of X's node table, the index of the
+    # matching context in child c's ctx table. dep(c) ⊆ {X} ∪ dep(X).
+    for var in info.preorder:
+        child_lookup[var] = {}
+        x = nodes[var]
+        rel_cols: Dict[str, np.ndarray] = {}
+        # columns available at X's rows: dep(X) (reconstructed) + X itself
+        # easier: recompute from covering relation's distinct rows
+        rel = db.relations[info.cover[var]]
+        distinct = _dedup_rows(
+            [rel.columns[d] for d in x.dep] + [rel.columns[var]]
+        )
+        for i, d in enumerate(x.dep):
+            rel_cols[d] = distinct[i]
+        rel_cols[var] = distinct[-1]
+
+        for ch in [c for c, p in info.parent.items() if p == var]:
+            cdep = info.dep[ch]
+            if not cdep:
+                child_lookup[var][ch] = np.zeros((x.n_rows,), dtype=np.int32)
+                continue
+            key = _row_key(
+                np.stack([_as_key_col(rel_cols[d]) for d in cdep], axis=1)
+            )
+            pos = np.searchsorted(nodes[ch].ctx_keys, key)
+            pos = np.clip(pos, 0, nodes[ch].n_ctx - 1)
+            if not (nodes[ch].ctx_keys[pos] == key).all():
+                raise AssertionError(
+                    f"dangling context {var}->{ch}: semi-join reduction failed"
+                )
+            child_lookup[var][ch] = pos.astype(np.int32)
+
+    fz = Factorized(
+        info=info, nodes=nodes, child_lookup=child_lookup, num_join_rows=0
+    )
+    return fz
+
+
+# ----------------------------------------------------------------------
+# Phase 2: plan
+# ----------------------------------------------------------------------
+
+Sig = Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class SigPlan:
+    sig: Sig
+    n_exp: int
+    n_out: int
+    src_row: np.ndarray                       # (n_exp,) int32
+    child_gather: Dict[str, np.ndarray]       # child var -> (n_exp,) int32
+    out_id: np.ndarray                        # (n_exp,) int32
+    out_ctx: np.ndarray                       # (n_out,) int32
+    out_keys: Dict[str, np.ndarray]           # sig var -> (n_out,) int32
+    # for parent consumption: per ctx, the [start, count) range of outputs
+    start_per_ctx: np.ndarray                 # (n_ctx,) int32
+    count_per_ctx: np.ndarray                 # (n_ctx,) int32
+    # register entries computed under this plan, in column order
+    entry_cols: List[int]                     # indices into node register
+    p0: np.ndarray                            # (E,) power of X per column
+    child_col: Dict[str, Tuple[np.ndarray, Sig]]
+    # child var -> (column index per entry into child's (sub-sig) matrix,
+    #               the child sub-signature those columns live in)
+
+
+@dataclasses.dataclass
+class EnginePlan:
+    order: Tuple[str, ...]                    # bottom-up variable order
+    node_sigs: Dict[str, Dict[Sig, SigPlan]]
+    registers: Registers
+    fz: Factorized
+
+
+def _sub_sig(sig: Sig, vars_: Sequence[str]) -> Sig:
+    s = set(vars_)
+    return tuple(v for v in sig if v in s)
+
+
+def build_plan(fz: Factorized, regs: Registers) -> EnginePlan:
+    info = fz.info
+    bottom_up = tuple(reversed(info.preorder))
+    node_sigs: Dict[str, Dict[Sig, SigPlan]] = {v: {} for v in info.preorder}
+
+    for var in bottom_up:
+        node = fz.nodes[var]
+        kids = regs.children[var]
+        ents = regs.entries[var]
+        by_sig: Dict[Sig, List[int]] = {}
+        for i, e in enumerate(ents):
+            by_sig.setdefault(e.sig, []).append(i)
+
+        for sig, cols in sorted(by_sig.items()):
+            # children sub-signatures for this sig
+            sub = {c: _sub_sig(sig, info.subtree_vars[c]) for c in kids}
+            keyed_kids = [c for c in kids if sub[c]]
+
+            # --- expansion over the cross product of keyed children ---
+            n_rows = node.n_rows
+            cnts = []
+            starts = []
+            for c in keyed_kids:
+                cp = node_sigs[c][sub[c]]
+                look = fz.child_lookup[var][c]
+                cnts.append(cp.count_per_ctx[look].astype(np.int64))
+                starts.append(cp.start_per_ctx[look].astype(np.int64))
+            if keyed_kids:
+                per_row = np.ones(n_rows, dtype=np.int64)
+                for c_ in cnts:
+                    per_row = per_row * c_
+                n_exp = int(per_row.sum())
+                src_row = np.repeat(
+                    np.arange(n_rows, dtype=np.int64), per_row
+                )
+                offs = np.concatenate([[0], np.cumsum(per_row)[:-1]])
+                pos = np.arange(n_exp, dtype=np.int64) - offs[src_row]
+                child_gather: Dict[str, np.ndarray] = {}
+                stride = np.ones(n_rows, dtype=np.int64)
+                for ci in range(len(keyed_kids) - 1, -1, -1):
+                    c = keyed_kids[ci]
+                    idx = starts[ci][src_row] + (pos // stride[src_row]) % cnts[
+                        ci
+                    ][src_row]
+                    child_gather[c] = idx.astype(np.int32)
+                    stride = stride * cnts[ci]
+            else:
+                n_exp = n_rows
+                src_row = np.arange(n_rows, dtype=np.int64)
+                child_gather = {}
+
+            # --- output key table + dedup ---
+            key_cols: List[np.ndarray] = [
+                node.ctx_id[src_row].astype(np.int64)
+            ]
+            key_names: List[str] = []
+            for v in sig:
+                if v == var:
+                    key_cols.append(node.values[src_row].astype(np.int64))
+                    key_names.append(v)
+                else:
+                    c = next(
+                        c for c in keyed_kids if v in info.subtree_vars[c]
+                    )
+                    cp = node_sigs[c][sub[c]]
+                    key_cols.append(
+                        cp.out_keys[v][child_gather[c]].astype(np.int64)
+                    )
+                    key_names.append(v)
+
+            comp = np.stack(key_cols, axis=1)
+            view = _row_key(comp)
+            uniq, out_id = np.unique(view, return_inverse=True)
+            n_out = len(uniq)
+            # representative row per unique output
+            first = np.zeros(n_out, dtype=np.int64)
+            # np.unique returns sorted uniq; find first occurrence indices
+            order = np.argsort(out_id, kind="stable")
+            boundaries = np.searchsorted(out_id[order], np.arange(n_out))
+            first = order[boundaries]
+
+            out_ctx = node.ctx_id[src_row[first]].astype(np.int32)
+            out_keys = {
+                v: key_cols[1 + i][first].astype(np.int32)
+                for i, v in enumerate(key_names)
+            }
+
+            # outputs are sorted by (ctx, keys) because uniq is sorted and
+            # ctx is the leading key column -> ranges per ctx are contiguous
+            count_per_ctx = np.bincount(out_ctx, minlength=node.n_ctx).astype(
+                np.int32
+            )
+            start_per_ctx = np.concatenate(
+                [[0], np.cumsum(count_per_ctx)[:-1]]
+            ).astype(np.int32)
+
+            # --- per-entry column metadata ---
+            E = len(cols)
+            p0 = np.array([ents[i].power0 for i in cols], dtype=np.int32)
+            child_col: Dict[str, Tuple[np.ndarray, Sig]] = {}
+            for ki, c in enumerate(kids):
+                ccols = np.array(
+                    [ents[i].child_idx[ki] for i in cols], dtype=np.int32
+                )
+                centry = [regs.entries[c][j] for j in ccols]
+                csig = sub[c]
+                # all entries of one sig project to the same child sub-sig
+                # (categorical vars of the child projection = sig ∩ subtree)
+                # so csig is shared; map child register idx -> column within
+                # the child's (csig) plan matrix.
+                cplan = node_sigs[c][csig]
+                colmap = {j: k for k, j in enumerate(cplan.entry_cols)}
+                child_col[c] = (
+                    np.array([colmap[int(j)] for j in ccols], dtype=np.int32),
+                    csig,
+                )
+
+            node_sigs[var][sig] = SigPlan(
+                sig=sig,
+                n_exp=n_exp,
+                n_out=n_out,
+                src_row=src_row.astype(np.int32),
+                child_gather=child_gather,
+                out_id=out_id.astype(np.int32),
+                out_ctx=out_ctx,
+                out_keys=out_keys,
+                start_per_ctx=start_per_ctx,
+                count_per_ctx=count_per_ctx,
+                entry_cols=list(cols),
+                p0=p0,
+                child_col=child_col,
+            )
+
+    return EnginePlan(
+        order=bottom_up, node_sigs=node_sigs, registers=regs, fz=fz
+    )
+
+
+# ----------------------------------------------------------------------
+# Phase 3: execute (jax)
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AggregateResult:
+    """Root aggregates: monomial -> (keys dict, values vector).
+
+    Scalar aggregates have empty keys and a length-1 value vector.
+    ``count`` is SUM(1) = |Q(D)|.
+    """
+
+    tables: Dict[Monomial, Tuple[Dict[str, np.ndarray], jnp.ndarray]]
+    count: float
+
+    def scalar(self, m: Monomial) -> float:
+        _, v = self.tables[m]
+        return float(v[0])
+
+
+def _lambda_matrix(node: NodeTable, max_p: int) -> np.ndarray:
+    if node.kind is Kind.CONTINUOUS:
+        v = node.values.astype(np.float64)
+        return np.stack([v**p for p in range(max_p + 1)], axis=1)
+    return np.ones((node.n_rows, 1), dtype=np.float64)
+
+
+def make_executor(plan: EnginePlan, dtype=jnp.float64):
+    """Build (jitted_fn, lams) so the numeric pass can be re-run/timed
+    independently of planning and compilation."""
+    regs, fz = plan.registers, plan.fz
+
+    lams = {
+        v: jnp.asarray(
+            _lambda_matrix(fz.nodes[v], regs.max_power[v]), dtype=dtype
+        )
+        for v in plan.order
+    }
+
+    @jax.jit
+    def run(lams):
+        payloads: Dict[str, Dict[Sig, jnp.ndarray]] = {}
+        for var in plan.order:
+            payloads[var] = {}
+            for sig, sp in plan.node_sigs[var].items():
+                lam = lams[var]
+                vals = lam[sp.src_row][:, sp.p0]          # (n_exp, E)
+                for c, (ccols, csig) in sp.child_col.items():
+                    cmat = payloads[c][csig]              # (n_out_c, E_c)
+                    gath = sp.child_gather.get(c)
+                    if gath is None:
+                        # unkeyed child: one value per child ctx
+                        gath = fz.child_lookup[var][c]
+                        rows = cmat[gath][:, ccols][sp.src_row]
+                        # NOTE: gather at ctx level then expand
+                        vals = vals * rows
+                    else:
+                        vals = vals * cmat[gath][:, ccols]
+                out = jax.ops.segment_sum(
+                    vals, sp.out_id, num_segments=sp.n_out
+                )
+                payloads[var][sig] = out
+        return payloads[regs.root]
+
+    return run, lams
+
+
+def execute(plan: EnginePlan, dtype=jnp.float64) -> AggregateResult:
+    """Run the aggregate pass. Index plans are numpy; numeric work is jax,
+    wrapped in one jit so XLA fuses the gather/product/segment chains (the
+    analogue of the paper's compiled aggregate updates)."""
+    regs = plan.registers
+    run, lams = make_executor(plan, dtype)
+    root_payloads = run(lams)
+
+    tables: Dict[Monomial, Tuple[Dict[str, np.ndarray], jnp.ndarray]] = {}
+    root = regs.root
+    for sig, sp in plan.node_sigs[root].items():
+        mat = root_payloads[sig]
+        for k, ent_i in enumerate(sp.entry_cols):
+            e = regs.entries[root][ent_i]
+            tables[e.mono] = (sp.out_keys, mat[:, k])
+    count = float(tables[()][1][0])
+    return AggregateResult(tables=tables, count=count)
+
+
+def compute_aggregates(
+    db: Database,
+    info: OrderInfo,
+    monomials: Sequence[Monomial],
+    dtype=jnp.float64,
+) -> Tuple[AggregateResult, EnginePlan]:
+    """Convenience: factorize + register + plan + execute."""
+    regs = build_registers(monomials, info, db)
+    fz = factorize(db, info)
+    plan = build_plan(fz, regs)
+    res = execute(plan, dtype=dtype)
+    fz.num_join_rows = int(res.count)
+    return res, plan
+
+
+from .monomials import build_registers  # noqa: E402  (bottom import: cycle-free)

@@ -1,0 +1,231 @@
+"""The optimization problems AC/DC solves (paper §2, Example 2.1).
+
+All three models share the objective of Eq. (5):
+
+    J(theta) = 1/2 g(theta)^T Sigma g(theta) - <g(theta), c> + s_Y/2
+               + lambda/2 * Omega(theta)
+
+with model-specific parameter map g and regularizer Omega:
+
+  LR    degree-1 h;     g = identity;              Omega = ||theta||^2
+  PR2   degree-2 h;     g = identity (PR is linear in its parameters);
+  FaMa  degree-2 h, interactions of *distinct* features, no squares;
+        g on an interaction block (i,j) is sum_l V_i^l ⊗ V_j^l (rank r);
+        Omega = ||theta||^2 + ||V||^2.
+
+Gradients (Eq. 6) are obtained with jax.grad through the sparse quadratic
+form — equivalent to (dg/dtheta)^T Sigma g - (dg/dtheta)^T c + lambda*theta
+without hand-deriving dg/dtheta.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .monomials import Monomial, Workload, build_workload, signature
+from .schema import Database, Kind
+from .sigma import Block, ParamSpace, SigmaCSY
+from .variable_order import _row_key
+
+
+@dataclasses.dataclass
+class InteractionIndex:
+    """For a degree-2 categorical block: how its key table splits onto the
+    two constituent degree-1 feature blocks (positions within each)."""
+
+    block: int
+    left: int                      # h index of first factor
+    right: int                     # h index of second factor
+    pos_left: np.ndarray           # (size,) into left block
+    pos_right: np.ndarray          # (size,) into right block
+
+
+@dataclasses.dataclass
+class Model:
+    name: str
+    degree: int
+    workload: Workload
+    space: ParamSpace
+    lam: float
+    # FaMa only:
+    rank: int = 0
+    interactions: Optional[List[InteractionIndex]] = None
+    fd_penalty: Optional[Callable] = None  # see fd.py
+
+    # ------------------------------------------------------------------
+    def init_params(self, key: Optional[jax.Array] = None):
+        theta = jnp.zeros((self.space.total,), dtype=jnp.float64)
+        if self.name != "fama":
+            return theta
+        # FaMa: latent factors per degree-1 feature slot that participates
+        # in at least one interaction.
+        key = key if key is not None else jax.random.PRNGKey(0)
+        vs: Dict[int, jnp.ndarray] = {}
+        for ix in self.interactions or []:
+            for h_idx in (ix.left, ix.right):
+                if h_idx not in vs:
+                    b = self.space.blocks[h_idx]
+                    key, sub = jax.random.split(key)
+                    vs[h_idx] = (
+                        jax.random.normal(sub, (b.size, self.rank), dtype=jnp.float64)
+                        * 0.01
+                    )
+        return {"theta": theta, "V": vs}
+
+    # ------------------------------------------------------------------
+    def g(self, params) -> jnp.ndarray:
+        if self.name != "fama":
+            return params
+        theta, vs = params["theta"], params["V"]
+        g = theta
+        for ix in self.interactions or []:
+            b = self.space.blocks[ix.block]
+            vl = vs[ix.left][ix.pos_left]     # (size, r)
+            vr = vs[ix.right][ix.pos_right]   # (size, r)
+            pair = jnp.sum(vl * vr, axis=1)
+            g = g.at[b.offset : b.offset + b.size].set(pair)
+        return g
+
+    def omega(self, params) -> jnp.ndarray:
+        if self.name != "fama":
+            if self.fd_penalty is not None:
+                return self.fd_penalty(params)
+            return jnp.sum(params**2)
+        theta, vs = params["theta"], params["V"]
+        # interaction slots of theta are inert for FaMa (their g-value comes
+        # from V), keep them regularized so they stay at zero.
+        if self.fd_penalty is not None:
+            o = self.fd_penalty(theta)
+        else:
+            o = jnp.sum(theta**2)
+        for v in vs.values():
+            o = o + jnp.sum(v**2)
+        return o
+
+    # ------------------------------------------------------------------
+    def loss(self, sig: SigmaCSY, params) -> jnp.ndarray:
+        g = self.g(params)
+        return (
+            0.5 * sig.quad(g)
+            - jnp.dot(g, sig.c)
+            + 0.5 * sig.sy
+            + 0.5 * self.lam * self.omega(params)
+        )
+
+    def loss_and_grad(self, sig: SigmaCSY):
+        return jax.value_and_grad(lambda p: self.loss(sig, p))
+
+    # ------------------------------------------------------------------
+    def predict_dense(self, params, H: np.ndarray, desc) -> np.ndarray:
+        """<g, h(x)> over a dense one-hot design matrix (tests only).
+
+        ``desc`` is the column descriptor list from oracle.one_hot_design_matrix;
+        maps each dense column to a parameter position.
+        """
+        g = np.asarray(self.g(params))
+        cols = np.array(
+            [self.space.locate(self._h_index(m), key) for m, key in desc]
+        )
+        return H @ g[cols]
+
+    def _h_index(self, m: Monomial) -> int:
+        return self.workload.h_monos.index(m)
+
+
+def _interaction_indices(
+    db: Database, workload: Workload, space: ParamSpace
+) -> List[InteractionIndex]:
+    """Split each categorical interaction block's keys onto its factors."""
+    out: List[InteractionIndex] = []
+    h = workload.h_monos
+    index_of = {m: i for i, m in enumerate(h)}
+    for i, hm in enumerate(h):
+        if len(hm) != 2 and not (len(hm) == 1 and hm[0][1] == 2):
+            continue
+        if len(hm) == 1:
+            continue  # squares have no factorized params in FaMa anyway
+        (va, pa), (vb, pb) = hm
+        la, lb = index_of.get(((va, pa),)), index_of.get(((vb, pb),))
+        if la is None or lb is None:
+            continue
+        b = space.blocks[i]
+        bl, br = space.blocks[la], space.blocks[lb]
+
+        def pos_in(block: Block) -> np.ndarray:
+            if block.keys is None:
+                return np.zeros(b.size, dtype=np.int64)
+            comp = np.stack(
+                [b.key_cols[v].astype(np.int64) for v in block.sig], axis=1
+            )
+            k = _row_key(comp)
+            p = np.searchsorted(block.keys, k)
+            return p
+
+        out.append(
+            InteractionIndex(
+                block=i,
+                left=la,
+                right=lb,
+                pos_left=pos_in(bl),
+                pos_right=pos_in(br),
+            )
+        )
+    return out
+
+
+# ----------------------------------------------------------------------
+# Model constructors
+# ----------------------------------------------------------------------
+
+
+def linear_regression(
+    db: Database, workload: Workload, space: ParamSpace, lam: float = 1e-3
+) -> Model:
+    assert workload is not None
+    return Model("lr", 1, workload, space, lam)
+
+
+def polynomial_regression2(
+    db: Database, workload: Workload, space: ParamSpace, lam: float = 1e-3
+) -> Model:
+    return Model("pr2", 2, workload, space, lam)
+
+
+def polynomial_regression(
+    db: Database, workload: Workload, space: ParamSpace, degree_: int,
+    lam: float = 1e-3,
+) -> Model:
+    """Arbitrary-degree PR (linear in parameters, like PR2)."""
+    return Model(f"pr{degree_}", degree_, workload, space, lam)
+
+
+def factorization_machine(
+    db: Database,
+    workload: Workload,
+    space: ParamSpace,
+    rank: int = 8,
+    lam: float = 1e-3,
+) -> Model:
+    inter = _interaction_indices(db, workload, space)
+    return Model(
+        "fama", 2, workload, space, lam, rank=rank, interactions=inter
+    )
+
+
+def workload_for(
+    db: Database, features: Sequence[str], response: str, model: str
+) -> Workload:
+    if model == "lr":
+        return build_workload(db, features, response, 1)
+    if model == "pr2":
+        return build_workload(db, features, response, 2)
+    if model.startswith("pr") and model[2:].isdigit():
+        return build_workload(db, features, response, int(model[2:]))
+    if model == "fama":
+        return build_workload(db, features, response, 2, squares=False)
+    raise ValueError(model)

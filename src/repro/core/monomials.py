@@ -1,0 +1,256 @@
+"""Monomial aggregates and their decomposition over a variable order.
+
+Every AC/DC aggregate is ``SUM(prod_l A_l^{d_l}) [GROUP BY categorical vars]``
+and is identified by its monomial (paper §4.2 "Aggregate Decomposition and
+Registration"). Categorical variables enter with power at most 1 (indicator
+idempotence) and become group-by variables.
+
+``build_registers`` constructs, at query-compile time, the per-node aggregate
+registers: each register entry at node X holds the projection of some needed
+monomial onto the subtree rooted at X, the power of X itself (``power0``),
+and the indices of its component aggregates in the children's registers —
+exactly the index structure of Figure 2/3(b), vectorized: all entries at a
+node that share the same *group-by signature* are computed together as one
+``(rows, entries)`` matrix by the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+from .schema import Database, Kind
+from .variable_order import OrderInfo
+
+# A monomial is a canonical tuple of (variable, power), sorted by variable
+# name, powers >= 1. The empty tuple is the COUNT monomial, SUM(1).
+Monomial = Tuple[Tuple[str, int], ...]
+
+
+def mono(*terms: Tuple[str, int]) -> Monomial:
+    return canonical(terms)
+
+
+def canonical(terms: Sequence[Tuple[str, int]]) -> Monomial:
+    acc: Dict[str, int] = {}
+    for v, p in terms:
+        if p:
+            acc[v] = acc.get(v, 0) + p
+    return tuple(sorted(acc.items()))
+
+
+def mono_mul(a: Monomial, b: Monomial, db: Database) -> Monomial:
+    """Product of monomials; categorical powers are capped at 1 (idempotent
+    indicators — the paper: "Any such aggregate is equivalent to the
+    aggregate whose monomial includes the categorical variable with degree 1
+    only")."""
+    m = canonical(tuple(a) + tuple(b))
+    return tuple(
+        (v, 1 if db.kind(v) is Kind.CATEGORICAL else p) for v, p in m
+    )
+
+
+def restrict(m: Monomial, vs: Sequence[str]) -> Monomial:
+    s = set(vs)
+    return tuple((v, p) for v, p in m if v in s)
+
+
+def mono_vars(m: Monomial) -> Tuple[str, ...]:
+    return tuple(v for v, _ in m)
+
+
+def degree(m: Monomial) -> int:
+    return sum(p for _, p in m)
+
+
+def signature(m: Monomial, db: Database) -> Tuple[str, ...]:
+    """Group-by variables of the aggregate = its categorical variables,
+    in canonical (name-sorted) order."""
+    return tuple(v for v, _ in m if db.kind(v) is Kind.CATEGORICAL)
+
+
+def pretty(m: Monomial) -> str:
+    if not m:
+        return "1"
+    return "*".join(v if p == 1 else f"{v}^{p}" for v, p in m)
+
+
+# ----------------------------------------------------------------------
+# Registers
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    mono: Monomial                 # restricted to subtree(X)
+    power0: int                    # power of X in mono
+    child_idx: Tuple[int, ...]     # index into each child's register
+    sig: Tuple[str, ...]           # categorical vars of mono (canonical)
+
+
+@dataclasses.dataclass
+class Registers:
+    """Per-variable aggregate registers + the root aggregate index."""
+
+    entries: Dict[str, List[Entry]]            # var -> register
+    index: Dict[str, Dict[Monomial, int]]      # var -> mono -> position
+    children: Dict[str, Tuple[str, ...]]       # var -> child vars (order fixed)
+    max_power: Dict[str, int]                  # var -> max power0 needed
+    root: str
+
+    def root_entry(self, m: Monomial) -> int:
+        return self.index[self.root][m]
+
+    def num_entries(self) -> int:
+        return sum(len(v) for v in self.entries.values())
+
+
+def build_registers(
+    monomials: Sequence[Monomial], info: OrderInfo, db: Database
+) -> Registers:
+    node_children: Dict[str, Tuple[str, ...]] = {}
+
+    def collect_children(node) -> None:
+        node_children[node.var] = tuple(c.var for c in node.children)
+        for c in node.children:
+            collect_children(c)
+
+    collect_children(info.root)
+
+    entries: Dict[str, List[Entry]] = {v: [] for v in info.preorder}
+    index: Dict[str, Dict[Monomial, int]] = {v: {} for v in info.preorder}
+
+    def register(var: str, m: Monomial) -> int:
+        tab = index[var]
+        if m in tab:
+            return tab[m]
+        p0 = dict(m).get(var, 0)
+        kids = node_children[var]
+        child_idx = tuple(
+            register(c, restrict(m, info.subtree_vars[c])) for c in kids
+        )
+        e = Entry(mono=m, power0=p0, child_idx=child_idx, sig=signature(m, db))
+        tab[m] = len(entries[var])
+        entries[var].append(e)
+        return tab[m]
+
+    for m in monomials:
+        register(info.root.var, m)
+    # The COUNT aggregate is always needed (|Q(D)| normalization).
+    register(info.root.var, ())
+
+    max_power = {
+        v: max((e.power0 for e in entries[v]), default=0) for v in info.preorder
+    }
+    return Registers(
+        entries=entries,
+        index=index,
+        children=node_children,
+        max_power=max_power,
+        root=info.root.var,
+    )
+
+
+# ----------------------------------------------------------------------
+# Model feature maps -> the monomial workload (Sigma, c, s_Y)
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Workload:
+    """All monomial aggregates needed for (Sigma, c, s_Y) plus the mapping
+    from Sigma entries (pairs of h components) and c entries back to
+    aggregate monomials — the paper's sparse Sigma representation (§5)."""
+
+    h_monos: List[Monomial]                     # feature map components
+    aggregates: List[Monomial]                  # distinct monomials to compute
+    sigma_pairs: List[Tuple[int, int, Monomial]]  # (i, j<=i, aggregate mono)
+    c_monos: List[Monomial]                     # y * h_i per i
+    sy_mono: Monomial
+    response: str
+
+    @property
+    def num_distinct(self) -> int:
+        return len(self.aggregates)
+
+    @property
+    def num_sigma_cells(self) -> int:
+        m = len(self.h_monos)
+        return m * (m + 1) // 2
+
+
+def feature_monomials(
+    db: Database,
+    features: Sequence[str],
+    degree_: int,
+    interactions: bool = True,
+    squares: bool = True,
+) -> List[Monomial]:
+    """The components of h (paper Example 2.1).
+
+    degree 1 (LR):   1, x_j for each feature
+    degree 2 (PR2):  + all pairwise interactions x_i x_j (i<j) and squares
+                     x_j^2 for continuous j (categorical squares excluded —
+                     same information as the indicator itself).
+    degree d (PR_d): all monomials over the features of total degree <= d
+                     with categorical exponents capped at 1 (the paper's
+                     class is defined for any degree; it evaluates <= 2).
+    FaMa2 uses interactions of *distinct* features, no squares.
+    """
+    hs: List[Monomial] = [()]
+    hs += [mono((f, 1)) for f in features]
+    if degree_ >= 2:
+        for i, a in enumerate(features):
+            for b in features[i + 1 :]:
+                hs.append(mono_mul(mono((a, 1)), mono((b, 1)), db))
+            if squares and db.kind(a) is Kind.CONTINUOUS:
+                hs.append(mono((a, 2)))
+    if degree_ >= 3:
+        # extend degree-(d-1) monomials by one feature; dedupe canonically
+        # (categorical powers collapse to 1, so e.g. A*A*C == A*C is kept
+        # once). Exact but exponential in degree — like the paper's class.
+        lower = feature_monomials(db, features, degree_ - 1, interactions, squares)
+        seen = set(hs)
+        for m in lower:
+            if degree(m) != degree_ - 1:
+                continue
+            for f in features:
+                if not squares and db.kind(f) is Kind.CONTINUOUS and dict(m).get(f, 0):
+                    continue
+                cand = mono_mul(m, mono((f, 1)), db)
+                if degree(cand) == degree_ and cand not in seen:
+                    seen.add(cand)
+                    hs.append(cand)
+    return hs
+
+
+def build_workload(
+    db: Database, features: Sequence[str], response: str, degree_: int,
+    interactions: bool = True, squares: bool = True,
+) -> Workload:
+    hs = feature_monomials(db, features, degree_, interactions, squares)
+    seen: Dict[Monomial, int] = {}
+    aggs: List[Monomial] = []
+
+    def intern(m: Monomial) -> Monomial:
+        if m not in seen:
+            seen[m] = len(aggs)
+            aggs.append(m)
+        return m
+
+    sigma_pairs: List[Tuple[int, int, Monomial]] = []
+    for i, hi in enumerate(hs):
+        for j in range(i + 1):
+            sigma_pairs.append((i, j, intern(mono_mul(hi, hs[j], db))))
+    y = mono((response, 1))
+    c_monos = [intern(mono_mul(y, hi, db)) for hi in hs]
+    sy = intern(mono((response, 2)))
+    return Workload(
+        h_monos=hs,
+        aggregates=aggs,
+        sigma_pairs=sigma_pairs,
+        c_monos=c_monos,
+        sy_mono=sy,
+        response=response,
+    )

@@ -1,0 +1,120 @@
+"""Materialize-the-join reference path.
+
+This is (a) the strategy of every competitor system in the paper (R, libFM,
+TensorFlow materialize + export; MADlib one-hot encodes upfront), implemented
+here as the baseline we benchmark AC/DC against, and (b) the pure-numpy
+correctness oracle for the factorized engine's property tests.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .monomials import Monomial, Workload, signature
+from .schema import Database, Kind
+
+
+def materialize_join(db: Database) -> Dict[str, np.ndarray]:
+    """Natural join of all relations, dumb hash-join chain (listing repr)."""
+    rels = list(db.relations.values())
+    out = {a: rels[0].columns[a] for a in rels[0].attrs}
+
+    for rel in rels[1:]:
+        shared = [a for a in rel.attrs if a in out]
+        new = [a for a in rel.attrs if a not in out]
+        if not shared:
+            # cross product
+            n, m = len(next(iter(out.values()))), rel.num_rows
+            out = {a: np.repeat(v, m) for a, v in out.items()}
+            for a in rel.attrs:
+                out[a] = np.tile(rel.columns[a], n)
+            continue
+        # build key -> row ids for rel
+        import collections
+
+        idx = collections.defaultdict(list)
+        rk = list(zip(*[rel.columns[a] for a in shared]))
+        for i, k in enumerate(rk):
+            idx[k].append(i)
+        lk = list(zip(*[out[a] for a in shared]))
+        left_ids: List[int] = []
+        right_ids: List[int] = []
+        for i, k in enumerate(lk):
+            for j in idx.get(k, ()):
+                left_ids.append(i)
+                right_ids.append(j)
+        li = np.asarray(left_ids, dtype=np.int64)
+        ri = np.asarray(right_ids, dtype=np.int64)
+        out = {a: v[li] for a, v in out.items()}
+        for a in new:
+            out[a] = rel.columns[a][ri]
+    return out
+
+
+def aggregate_oracle(
+    db: Database, join: Dict[str, np.ndarray], m: Monomial
+) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Brute-force SUM(prod v^p) GROUP BY categorical vars over the join."""
+    n = len(next(iter(join.values())))
+    val = np.ones(n, dtype=np.float64)
+    for v, p in m:
+        if db.kind(v) is Kind.CONTINUOUS:
+            val = val * join[v].astype(np.float64) ** p
+    sig = signature(m, db)
+    if not sig:
+        return {}, np.array([val.sum()])
+    keys = [join[v].astype(np.int64) for v in sig]
+    dt = np.dtype([(f"f{i}", np.int64) for i in range(len(keys))])
+    comp = np.ascontiguousarray(np.stack(keys, axis=1)).view(dt).ravel()
+    uniq, inv = np.unique(comp, return_inverse=True)
+    sums = np.zeros(len(uniq), dtype=np.float64)
+    np.add.at(sums, inv, val)
+    out_keys = {
+        v: np.array([u[i] for u in uniq], dtype=np.int32)
+        for i, v in enumerate(sig)
+    }
+    return out_keys, sums
+
+
+def one_hot_design_matrix(
+    db: Database, join: Dict[str, np.ndarray], workload: Workload
+) -> Tuple[np.ndarray, np.ndarray, List[Tuple[Monomial, Tuple]]]:
+    """Dense one-hot design matrix H (rows x one-hot features) and response.
+
+    This is the competitors' representation whose size the paper shows is
+    asymptotically larger. Feature columns: for each h-monomial, one column
+    per *observed* combination of its categorical variables (continuous-only
+    monomials give a single column). Returns (H, y, column descriptors).
+    """
+    n = len(next(iter(join.values())))
+    cols: List[np.ndarray] = []
+    desc: List[Tuple[Monomial, Tuple]] = []
+    for hm in workload.h_monos:
+        cont = np.ones(n, dtype=np.float64)
+        for v, p in hm:
+            if db.kind(v) is Kind.CONTINUOUS:
+                cont = cont * join[v].astype(np.float64) ** p
+        sig = signature(hm, db)
+        if not sig:
+            cols.append(cont)
+            desc.append((hm, ()))
+            continue
+        keys = [join[v].astype(np.int64) for v in sig]
+        dt = np.dtype([(f"f{i}", np.int64) for i in range(len(keys))])
+        comp = np.ascontiguousarray(np.stack(keys, axis=1)).view(dt).ravel()
+        uniq, inv = np.unique(comp, return_inverse=True)
+        for u_i, u in enumerate(uniq):
+            cols.append(np.where(inv == u_i, cont, 0.0))
+            desc.append((hm, tuple(int(u[i]) for i in range(len(sig)))))
+    H = np.stack(cols, axis=1)
+    y = join[workload.response].astype(np.float64)
+    return H, y, desc
+
+
+def sigma_c_sy_oracle(
+    H: np.ndarray, y: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, float]:
+    n = len(y)
+    return H.T @ H / n, H.T @ y / n, float(y @ y) / n

@@ -1,0 +1,57 @@
+"""Prediction with trained in-database models over relational tuples.
+
+Given a trained Model/params and a database (train or holdout), evaluates
+``⟨g(θ), h(x)⟩`` for every tuple of the feature-extraction query — without
+one-hot encoding: each h-component's contribution is a dictionary lookup
+into its parameter block (categorical) times the continuous monomial value.
+Unseen categories at prediction time contribute 0 (the ridge prior), the
+standard convention.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from .glm import Model
+from .monomials import signature
+from .oracle import materialize_join
+from .schema import Database, Kind
+from .variable_order import _row_key
+
+
+def predict_join(
+    model: Model, params, db: Database, join: Optional[Dict[str, np.ndarray]] = None
+) -> np.ndarray:
+    """Predictions for every tuple of the (materialized) join."""
+    join = join if join is not None else materialize_join(db)
+    n = len(next(iter(join.values())))
+    g = np.asarray(model.g(params), dtype=np.float64)
+    out = np.zeros(n, dtype=np.float64)
+
+    for block in model.space.blocks:
+        hm = block.mono
+        cont = np.ones(n, dtype=np.float64)
+        for v, p in hm:
+            if db.kind(v) is Kind.CONTINUOUS:
+                cont = cont * join[v].astype(np.float64) ** p
+        if block.keys is None:
+            out += cont * g[block.offset]
+            continue
+        sig = block.sig
+        comp = np.stack([join[v].astype(np.int64) for v in sig], axis=1)
+        keys = _row_key(comp)
+        pos = np.searchsorted(block.keys, keys)
+        pos = np.clip(pos, 0, block.size - 1)
+        hit = block.keys[pos] == keys
+        vals = np.where(hit, g[block.offset + pos], 0.0)
+        out += cont * vals
+    return out
+
+
+def rmse(model: Model, params, db: Database, response: str) -> float:
+    join = materialize_join(db)
+    pred = predict_join(model, params, db, join)
+    y = join[response].astype(np.float64)
+    return float(np.sqrt(np.mean((pred - y) ** 2)))

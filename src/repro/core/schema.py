@@ -1,0 +1,193 @@
+"""Relational schema for the AC/DC in-database learning engine.
+
+The paper trains models over the natural join of several relations. We model:
+  - ``Attribute``: continuous (float payload), categorical (dictionary-encoded
+    int ids over an *active domain*), or key (join variable that is not a
+    feature — the paper's ``no feature`` case in Figure 1).
+  - ``Relation``: columnar numpy storage, one array per attribute.
+  - ``Database``: a set of relations + attribute registry + declared FDs.
+
+Dictionary encoding happens at load time (``Database.encode``): every
+categorical / key column is mapped to dense int32 ids. This mirrors the
+paper's assumption that "all relations are given sorted by their join
+attributes" — encoding/sorting is data loading, not measured aggregate time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class Kind(enum.Enum):
+    CONTINUOUS = "continuous"
+    CATEGORICAL = "categorical"
+    KEY = "key"  # join variable, not a model feature
+
+
+@dataclasses.dataclass(frozen=True)
+class Attribute:
+    name: str
+    kind: Kind
+
+    @property
+    def is_feature(self) -> bool:
+        return self.kind is not Kind.KEY
+
+
+@dataclasses.dataclass(frozen=True)
+class FD:
+    """Functional dependency  determinant -> determined (all categorical)."""
+
+    determinant: str
+    determined: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class Relation:
+    name: str
+    columns: Dict[str, np.ndarray]  # attr name -> 1-D array, equal lengths
+
+    def __post_init__(self) -> None:
+        lengths = {len(v) for v in self.columns.values()}
+        if len(lengths) > 1:
+            raise ValueError(f"ragged relation {self.name}: {lengths}")
+
+    @property
+    def num_rows(self) -> int:
+        return len(next(iter(self.columns.values())))
+
+    @property
+    def attrs(self) -> Tuple[str, ...]:
+        return tuple(self.columns)
+
+    def project(self, names: Sequence[str]) -> np.ndarray:
+        """Stack the named columns as a (rows, len(names)) object of ids.
+
+        Only valid for encoded (integer) columns.
+        """
+        return np.stack([self.columns[n] for n in names], axis=1)
+
+    def take(self, idx: np.ndarray) -> "Relation":
+        return Relation(self.name, {k: v[idx] for k, v in self.columns.items()})
+
+
+@dataclasses.dataclass
+class Database:
+    relations: Dict[str, Relation]
+    attributes: Dict[str, Attribute]
+    fds: List[FD] = dataclasses.field(default_factory=list)
+    # active-domain size per categorical/key attribute (filled by encode()).
+    adom: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # decode tables: attr -> original values indexed by id.
+    dictionaries: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def kind(self, attr: str) -> Kind:
+        return self.attributes[attr].kind
+
+    def relations_with(self, attr: str) -> List[Relation]:
+        return [r for r in self.relations.values() if attr in r.columns]
+
+    # ------------------------------------------------------------------
+    # Dictionary encoding
+    # ------------------------------------------------------------------
+    def encode(self) -> "Database":
+        """Dictionary-encode every categorical/key attribute in-place.
+
+        Ids are dense in [0, adom) and *consistent across relations* (the
+        same raw value gets the same id everywhere) so that joins can be
+        evaluated on ids alone.
+        """
+        for attr in self.attributes.values():
+            if attr.kind is Kind.CONTINUOUS:
+                continue
+            rels = self.relations_with(attr.name)
+            if not rels:
+                continue
+            all_vals = np.concatenate([r.columns[attr.name] for r in rels])
+            dictionary, _ = np.unique(all_vals, return_inverse=True)
+            self.dictionaries[attr.name] = dictionary
+            self.adom[attr.name] = len(dictionary)
+            for r in rels:
+                ids = np.searchsorted(dictionary, r.columns[attr.name])
+                r.columns[attr.name] = ids.astype(np.int32)
+        for attr in self.attributes.values():
+            if attr.kind is Kind.CONTINUOUS:
+                for r in self.relations_with(attr.name):
+                    r.columns[attr.name] = np.asarray(
+                        r.columns[attr.name], dtype=np.float64
+                    )
+        return self
+
+    # ------------------------------------------------------------------
+    # FD map extraction (paper §5 "Regularizer under FDs")
+    # ------------------------------------------------------------------
+    def fd_map(self, fd: FD) -> Dict[str, np.ndarray]:
+        """Return, per determined attr B, the array ``m`` with m[id_A] = id_B.
+
+        This is the sparse matrix R(country, city) of the paper, stored as a
+        dense int vector over adom(determinant).
+        """
+        rels = [
+            r
+            for r in self.relations.values()
+            if fd.determinant in r.columns
+            and all(b in r.columns for b in fd.determined)
+        ]
+        if not rels:
+            raise ValueError(f"no relation hosts FD {fd}")
+        rel = rels[0]
+        det = rel.columns[fd.determinant]
+        n = self.adom[fd.determinant]
+        out = {}
+        for b in fd.determined:
+            m = np.full((n,), -1, dtype=np.int32)
+            m[det] = rel.columns[b]
+            if (m < 0).any():
+                # determinant values never seen with a B value: map to 0 —
+                # cannot happen after semi-join reduction on the join tree.
+                m = np.where(m < 0, 0, m)
+            out[b] = m
+        return out
+
+
+def make_database(
+    relations: Mapping[str, Mapping[str, np.ndarray]],
+    continuous: Sequence[str],
+    categorical: Sequence[str],
+    keys: Sequence[str] = (),
+    fds: Sequence[Tuple[str, Sequence[str]]] = (),
+) -> Database:
+    """Convenience constructor used by tests / examples / benchmarks."""
+    attrs: Dict[str, Attribute] = {}
+    for n in continuous:
+        attrs[n] = Attribute(n, Kind.CONTINUOUS)
+    for n in categorical:
+        attrs[n] = Attribute(n, Kind.CATEGORICAL)
+    for n in keys:
+        attrs[n] = Attribute(n, Kind.KEY)
+    rels = {}
+    for name, cols in relations.items():
+        arrs = {k: np.asarray(v) for k, v in cols.items()}
+        # relations are SETS (paper semantics): drop duplicate rows so the
+        # factorized engine and the listing-representation oracle agree.
+        names = list(arrs)
+        stacked = np.stack(
+            [
+                a.view(np.int64) if a.dtype == np.float64 else a.astype(np.int64)
+                for a in (arrs[n].astype(np.float64) if np.issubdtype(arrs[n].dtype, np.floating) else arrs[n] for n in names)
+            ],
+            axis=1,
+        )
+        _, keep = np.unique(stacked, axis=0, return_index=True)
+        keep.sort()
+        rels[name] = Relation(name, {k: v[keep] for k, v in arrs.items()})
+    for r in rels.values():
+        for a in r.attrs:
+            if a not in attrs:
+                raise ValueError(f"attribute {a} of {r.name} not declared")
+    db = Database(rels, attrs, [FD(d, tuple(ds)) for d, ds in fds])
+    return db.encode()

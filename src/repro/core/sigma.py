@@ -1,0 +1,196 @@
+"""Sparse Sigma / c / s_Y assembly from factorized aggregates (paper §5).
+
+One aggregate may serve many Sigma cells (the paper's SUM(A*B*C) example
+serving sigma_ij, sigma_lk, sigma_mn); we key cells by aggregate monomial and
+materialize one global COO (row, col, val) triple list over the *parameter
+index space*:
+
+  - parameter blocks: one block per feature-map component h_i; continuous
+    monomials get one scalar slot, categorical-carrying monomials get one
+    slot per OBSERVED key combination (the paper's sparse representation —
+    the "features" counts of Table 1).
+  - Sigma matvec p = Sigma @ g is a single gather-multiply-scatter, jittable
+    and differentiable (used by jax.grad for the FaMa gradient).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import AggregateResult
+from .monomials import Monomial, Workload, mono_vars, signature
+from .schema import Database
+from .variable_order import _row_key
+
+
+@dataclasses.dataclass
+class Block:
+    index: int
+    mono: Monomial
+    sig: Tuple[str, ...]
+    offset: int
+    size: int
+    # sorted composite key table (structured view) for categorical blocks
+    keys: Optional[np.ndarray]
+    key_cols: Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass
+class ParamSpace:
+    blocks: List[Block]
+    total: int
+
+    def block_of(self, i: int) -> Block:
+        return self.blocks[i]
+
+    def locate(self, i: int, key: Tuple[int, ...]) -> int:
+        """Position of the given key combo within block i (for tests)."""
+        b = self.blocks[i]
+        if b.keys is None:
+            return b.offset
+        comp = np.array([key], dtype=np.int64)
+        k = _row_key(comp)
+        pos = int(np.searchsorted(b.keys, k[0]))
+        assert b.keys[pos] == k[0], (i, key)
+        return b.offset + pos
+
+
+def _keys_of(table_keys: Dict[str, np.ndarray], sig: Sequence[str]) -> np.ndarray:
+    comp = np.stack([table_keys[v].astype(np.int64) for v in sig], axis=1)
+    return _row_key(comp)
+
+
+@dataclasses.dataclass
+class SigmaCSY:
+    """The data-dependent quantities of Eq. (2)-(4), sparse form."""
+
+    space: ParamSpace
+    # global COO over parameter positions, BOTH triangles included
+    rows: jnp.ndarray
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+    c: jnp.ndarray
+    sy: float
+    count: float
+    nnz_distinct: int  # distinct aggregate values (paper's aggregate count)
+
+    def matvec(self, g: jnp.ndarray) -> jnp.ndarray:
+        """p = Sigma @ g via one gather-multiply-scatter."""
+        return jax.ops.segment_sum(
+            self.vals * g[self.cols], self.rows, num_segments=self.space.total
+        )
+
+    def quad(self, g: jnp.ndarray) -> jnp.ndarray:
+        """g^T Sigma g without materializing the matvec twice."""
+        return jnp.sum(g[self.rows] * self.vals * g[self.cols])
+
+    def dense(self) -> np.ndarray:
+        """Dense Sigma — small-problem tests / closed-form solves only."""
+        m = np.zeros((self.space.total, self.space.total))
+        np.add.at(
+            m, (np.asarray(self.rows), np.asarray(self.cols)), np.asarray(self.vals)
+        )
+        return m
+
+
+def build_param_space(
+    db: Database, workload: Workload, result: AggregateResult
+) -> ParamSpace:
+    blocks: List[Block] = []
+    off = 0
+    for i, hm in enumerate(workload.h_monos):
+        sig = signature(hm, db)
+        if not sig:
+            blocks.append(
+                Block(i, hm, sig, off, 1, keys=None, key_cols={})
+            )
+            off += 1
+            continue
+        table_keys, vals = result.tables[hm]
+        keys = _keys_of(table_keys, sig)
+        blocks.append(
+            Block(
+                i,
+                hm,
+                sig,
+                off,
+                len(keys),
+                keys=keys,
+                key_cols={v: np.asarray(table_keys[v]) for v in sig},
+            )
+        )
+        off += len(keys)
+    return ParamSpace(blocks=blocks, total=off)
+
+
+def _project_positions(
+    agg_keys: Dict[str, np.ndarray], n_rows: int, block: Block
+) -> np.ndarray:
+    """Map each aggregate-table row to its position inside ``block`` by
+    projecting the row's keys onto the block's signature."""
+    if block.keys is None:
+        return np.zeros(n_rows, dtype=np.int64)
+    comp = np.stack(
+        [agg_keys[v].astype(np.int64) for v in block.sig], axis=1
+    )
+    k = _row_key(comp)
+    pos = np.searchsorted(block.keys, k)
+    pos = np.clip(pos, 0, block.size - 1)
+    if not (block.keys[pos] == k).all():
+        raise AssertionError(f"unobserved key combo for block {block.mono}")
+    return pos
+
+
+def build_sigma(
+    db: Database,
+    workload: Workload,
+    result: AggregateResult,
+    dtype=jnp.float64,
+) -> SigmaCSY:
+    space = build_param_space(db, workload, result)
+    n = result.count
+
+    rows: List[np.ndarray] = []
+    cols: List[np.ndarray] = []
+    vals: List[np.ndarray] = []
+    for i, j, agg in workload.sigma_pairs:
+        keys, v = result.tables[agg]
+        v = np.asarray(v, dtype=np.float64) / n
+        m = len(v)
+        bi, bj = space.blocks[i], space.blocks[j]
+        pi = _project_positions(keys, m, bi) + bi.offset
+        pj = _project_positions(keys, m, bj) + bj.offset
+        rows.append(pi)
+        cols.append(pj)
+        vals.append(v)
+        if i != j:
+            rows.append(pj)
+            cols.append(pi)
+            vals.append(v)
+
+    c = np.zeros(space.total, dtype=np.float64)
+    for i, cm in enumerate(workload.c_monos):
+        keys, v = result.tables[cm]
+        b = space.blocks[i]
+        pos = _project_positions(keys, len(np.asarray(v)), b) + b.offset
+        np.add.at(c, pos, np.asarray(v, dtype=np.float64) / n)
+
+    sy = result.scalar(workload.sy_mono) / n
+
+    return SigmaCSY(
+        space=space,
+        rows=jnp.asarray(np.concatenate(rows), dtype=jnp.int32),
+        cols=jnp.asarray(np.concatenate(cols), dtype=jnp.int32),
+        vals=jnp.asarray(np.concatenate(vals), dtype=dtype),
+        c=jnp.asarray(c, dtype=dtype),
+        sy=float(sy),
+        count=float(n),
+        nnz_distinct=sum(
+            len(np.asarray(result.tables[a][1])) for a in workload.aggregates
+        ),
+    )

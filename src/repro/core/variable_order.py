@@ -1,0 +1,186 @@
+"""Variable orders (paper Definition 4.1) and the width-1 join-tree view.
+
+A variable order ``Delta`` for a join query is a rooted tree with one node per
+variable such that (i) the variables of every relation lie on one
+root-to-leaf path, and (ii) ``dep(X)`` is the subset of ``anc(X)`` on which
+the subtree rooted at ``X`` depends.
+
+The TPU engine (engine.py) additionally requires that each *bag*
+``{X} ∪ dep(X)`` is covered by the schema of at least one relation. This is
+exactly the width-1 (= alpha-acyclic) case, which covers the paper's
+experimental workload (the Retailer query is acyclic). General cyclic
+queries would need a worst-case-optimal join to materialize bag contents
+first; that is noted in DESIGN.md §5 and out of scope.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .schema import Database, Relation
+
+
+@dataclasses.dataclass
+class VarNode:
+    var: str
+    children: List["VarNode"] = dataclasses.field(default_factory=list)
+
+    def __repr__(self) -> str:  # compact tree printing, e.g. A(B(C,D),E)
+        if not self.children:
+            return self.var
+        return f"{self.var}({','.join(map(repr, self.children))})"
+
+
+def vo(var: str, *children: VarNode) -> VarNode:
+    return VarNode(var, list(children))
+
+
+@dataclasses.dataclass
+class OrderInfo:
+    """Derived structural data for one variable order over one query."""
+
+    root: VarNode
+    parent: Dict[str, Optional[str]]
+    anc: Dict[str, Tuple[str, ...]]
+    dep: Dict[str, Tuple[str, ...]]
+    subtree_vars: Dict[str, Tuple[str, ...]]
+    # relation assigned to introduce each variable's bag {X} ∪ dep(X)
+    cover: Dict[str, str]
+    # depth-first preorder of variables
+    preorder: Tuple[str, ...]
+
+
+def analyze(root: VarNode, db: Database) -> OrderInfo:
+    parent: Dict[str, Optional[str]] = {root.var: None}
+    anc: Dict[str, Tuple[str, ...]] = {root.var: ()}
+    preorder: List[str] = []
+    subtree: Dict[str, List[str]] = {}
+
+    def walk(node: VarNode) -> List[str]:
+        preorder.append(node.var)
+        below = [node.var]
+        for ch in node.children:
+            parent[ch.var] = node.var
+            anc[ch.var] = anc[node.var] + (node.var,)
+            below.extend(walk(ch))
+        subtree[node.var] = below
+        return below
+
+    walk(root)
+
+    # validate: every relation's variables lie on one root-to-leaf path,
+    # i.e. they form a chain in the ancestor order.
+    for rel in db.relations.values():
+        vs = [v for v in rel.attrs]
+        for a in vs:
+            if a not in anc:
+                raise ValueError(f"relation {rel.name} var {a} missing from order")
+        # chain test: sort by depth; each must be an ancestor of the next
+        # (Definition 4.1: a relation's variables lie on ONE root-to-leaf
+        # path — sibling placement would wrongly cross-product its columns).
+        by_depth = sorted(set(vs), key=lambda v: len(anc[v]))
+        for u, w in zip(by_depth, by_depth[1:]):
+            if u not in anc[w]:
+                raise ValueError(
+                    f"relation {rel.name}: vars {u},{w} not on one path"
+                )
+
+    # dep(X): ancestors of X that co-occur (in some relation) with a variable
+    # in the subtree rooted at X.
+    dep: Dict[str, Tuple[str, ...]] = {}
+    for v in preorder:
+        deps = set()
+        for rel in db.relations.values():
+            if any(s in rel.attrs for s in subtree[v]):
+                deps.update(a for a in rel.attrs if a in anc[v])
+        dep[v] = tuple(a for a in anc[v] if a in deps)
+
+    # covering relation for each bag {X} ∪ dep(X)
+    cover: Dict[str, str] = {}
+    for v in preorder:
+        bag = set(dep[v]) | {v}
+        for rel in db.relations.values():
+            if bag <= set(rel.attrs):
+                cover[v] = rel.name
+                break
+        else:
+            raise ValueError(
+                f"bag {sorted(bag)} for var {v} not covered by any relation "
+                "(query not width-1 w.r.t. this order; see DESIGN.md §5)"
+            )
+
+    return OrderInfo(
+        root=root,
+        parent=parent,
+        anc=anc,
+        dep=dep,
+        subtree_vars={k: tuple(v) for k, v in subtree.items()},
+        cover=cover,
+        preorder=tuple(preorder),
+    )
+
+
+# ----------------------------------------------------------------------
+# Full semi-join reduction (Yannakakis) along the variable order.
+# After reduction every remaining tuple participates in >= 1 join result,
+# so the message-passing engine needs no dangling-tuple checks.
+# ----------------------------------------------------------------------
+
+
+def _row_key(arr: np.ndarray) -> np.ndarray:
+    """Composite key for integer rows (n, k) -> structured view.
+
+    Structured dtypes compare field-wise (numeric lexicographic with the
+    first column leading), so sorting/unique/searchsorted on these keys
+    orders rows by (col0, col1, ...) ascending.
+    """
+    a = np.ascontiguousarray(arr.astype(np.int64, copy=False))
+    dt = np.dtype([(f"f{i}", np.int64) for i in range(a.shape[1])])
+    return a.view(dt).ravel()
+
+
+def _semijoin(left: Relation, right: Relation, on: Sequence[str]) -> Relation:
+    if not on:
+        return left
+    lk = _row_key(left.project(on))
+    rk = np.unique(_row_key(right.project(on)))
+    pos = np.clip(np.searchsorted(rk, lk), 0, len(rk) - 1)
+    keep = rk[pos] == lk if len(rk) else np.zeros(len(lk), dtype=bool)
+    return left.take(np.nonzero(keep)[0])
+
+
+def reduce_database(db: Database, info: OrderInfo) -> Database:
+    """Two sweeps of pairwise semi-joins over a join tree of the relations.
+
+    The relation join tree is induced by the variable order: relation R is a
+    child of relation S if R's covering variable (its highest bag) hangs
+    below S's variables. For the acyclic queries we target, reducing along
+    shared variables between every pair of order-adjacent relations in both
+    sweeps yields the full reducer.
+    """
+    rels = list(db.relations.values())
+    # order relations by the depth of their highest variable (root-ward first)
+    depth = {r.name: min(len(info.anc[a]) for a in r.attrs) for r in rels}
+    ordered = sorted(rels, key=lambda r: depth[r.name])
+
+    def sweep(seq: List[Relation]) -> None:
+        for i, r in enumerate(seq):
+            for s in seq[i + 1 :]:
+                shared = [a for a in r.attrs if a in s.attrs]
+                if shared:
+                    reduced = _semijoin(s, r, shared)
+                    db.relations[s.name] = reduced
+                    # refresh local reference
+                    seq[seq.index(s)] = reduced
+
+    # bottom-up then top-down (two passes of pairwise reductions; repeated
+    # once more for safety on deeper chains).
+    for _ in range(2):
+        cur = [db.relations[r.name] for r in ordered]
+        sweep(cur[::-1])
+        cur = [db.relations[r.name] for r in ordered]
+        sweep(cur)
+    return db

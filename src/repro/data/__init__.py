@@ -1,0 +1,7 @@
+from .retailer import RetailerSpec, features, fragment, generate, variable_order
+from .tokens import SyntheticTokens
+
+__all__ = [
+    "RetailerSpec", "generate", "variable_order", "features", "fragment",
+    "SyntheticTokens",
+]

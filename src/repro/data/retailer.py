@@ -1,0 +1,203 @@
+"""Synthetic Retailer database matching the paper's §6 schema.
+
+Five relations: Inventory(locn, date, sku, units), Census(zip, demographic
+features), Location(locn, zip, distance features), Item(sku, price,
+category, subcategory, categoryCluster), Weather(locn, date, temperature,
+rain, snow, thunder). The FD sku -> {category, subcategory, categoryCluster}
+of the paper's v4 fragment is built in: item attributes are functions of sku.
+
+The paper's variable order (§6):
+  locn( zip( census-vars, location-vars ),
+        date( sku( item-vars ), weather-vars ) )
+
+``fragment()`` scales the generator to v1..v4-style sizes for Table-1
+benchmark analogues.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.schema import Database, make_database
+from repro.core.variable_order import VarNode, vo
+
+CENSUS_FEATURES = ["population", "median_age", "house_units", "families"]
+LOCATION_FEATURES = ["dist_comp1", "dist_comp2"]
+WEATHER_CONT = ["mean_temp"]
+WEATHER_CAT = ["rain", "snow", "thunder"]
+ITEM_CONT = ["price"]
+ITEM_CAT = ["category", "subcategory", "categoryCluster"]
+
+
+@dataclasses.dataclass
+class RetailerSpec:
+    n_locn: int = 20
+    n_zip: int = 12
+    n_date: int = 30
+    n_sku: int = 40
+    n_category: int = 6
+    n_subcategory: int = 12
+    n_cluster: int = 4
+    inventory_density: float = 0.15   # fraction of locn×date×sku cells filled
+    seed: int = 0
+
+
+def generate(spec: RetailerSpec) -> Database:
+    rng = np.random.default_rng(spec.seed)
+
+    # Location: each store in one zipcode
+    locn = np.arange(spec.n_locn)
+    zips = rng.integers(0, spec.n_zip, spec.n_locn)
+    location = {
+        "locn": locn,
+        "zip": zips,
+        **{
+            f: rng.normal(size=spec.n_locn).round(3)
+            for f in LOCATION_FEATURES
+        },
+    }
+
+    # Census: one row per zipcode
+    census = {
+        "zip": np.arange(spec.n_zip),
+        **{
+            f: np.abs(rng.normal(size=spec.n_zip)).round(3)
+            for f in CENSUS_FEATURES
+        },
+    }
+
+    # Item: FD sku -> (category, subcategory, categoryCluster)
+    sku = np.arange(spec.n_sku)
+    subcat = rng.integers(0, spec.n_subcategory, spec.n_sku)
+    # subcategory determines category (hierarchy), category -> cluster
+    subcat_to_cat = rng.integers(0, spec.n_category, spec.n_subcategory)
+    cat_to_cluster = rng.integers(0, spec.n_cluster, spec.n_category)
+    item = {
+        "sku": sku,
+        "price": np.abs(rng.normal(2.0, 1.0, spec.n_sku)).round(2),
+        "subcategory": subcat,
+        "category": subcat_to_cat[subcat],
+        "categoryCluster": cat_to_cluster[subcat_to_cat[subcat]],
+    }
+
+    # Weather: one row per (locn, date)
+    ll, dd = np.meshgrid(
+        np.arange(spec.n_locn), np.arange(spec.n_date), indexing="ij"
+    )
+    nw = ll.size
+    weather = {
+        "locn": ll.ravel(),
+        "date": dd.ravel(),
+        "mean_temp": rng.normal(15.0, 8.0, nw).round(2),
+        "rain": rng.integers(0, 2, nw),
+        "snow": rng.integers(0, 2, nw),
+        "thunder": rng.integers(0, 2, nw),
+    }
+
+    # Inventory: sparse subset of locn×date×sku with the response
+    n_cells = spec.n_locn * spec.n_date * spec.n_sku
+    n_rows = max(int(n_cells * spec.inventory_density), 1)
+    cell_ids = rng.choice(n_cells, size=n_rows, replace=False)
+    il = cell_ids // (spec.n_date * spec.n_sku)
+    rest = cell_ids % (spec.n_date * spec.n_sku)
+    idt = rest // spec.n_sku
+    isk = rest % spec.n_sku
+    # response correlated with price and weather so models have signal
+    base = 5.0 + 0.5 * item["price"][isk]
+    units = np.maximum(
+        base + rng.normal(0, 1.0, n_rows), 0.0
+    ).round(2)
+    inventory = {
+        "locn": il,
+        "date": idt,
+        "sku": isk,
+        "units": units,
+    }
+
+    return make_database(
+        relations={
+            "Inventory": inventory,
+            "Census": census,
+            "Location": location,
+            "Item": item,
+            "Weather": weather,
+        },
+        continuous=["units", "price", "mean_temp"]
+        + CENSUS_FEATURES
+        + LOCATION_FEATURES,
+        categorical=["zip", "sku"] + ITEM_CAT + WEATHER_CAT,
+        keys=["locn", "date"],
+        fds=[("sku", ITEM_CAT)],
+    )
+
+
+def _chain(names: Sequence[str], *tail: VarNode) -> VarNode:
+    """Chain a relation's attributes along one path (Definition 4.1)."""
+    node = None
+    for n in reversed(names):
+        node = vo(n, *( [node] if node else list(tail) ))
+        tail = ()
+    return node
+
+
+def variable_order() -> VarNode:
+    """The paper's §6 order:
+    locn( zip( census, location ), date( sku( item ), weather ) ).
+
+    Attributes of one relation are chained along a single path as
+    Definition 4.1 requires (the paper's `vars(R)` shorthand)."""
+    return vo(
+        "locn",
+        vo(
+            "zip",
+            _chain(CENSUS_FEATURES),
+            _chain(LOCATION_FEATURES),
+        ),
+        vo(
+            "date",
+            vo(
+                "sku",
+                _chain(["units"]),
+                _chain(["price"] + ITEM_CAT),
+            ),
+            _chain(WEATHER_CONT + WEATHER_CAT),
+        ),
+    )
+
+
+def features(include_sku: bool = True, include_zip: bool = True,
+             include_determined: bool = True) -> List[str]:
+    f = ["price", "mean_temp"] + CENSUS_FEATURES + LOCATION_FEATURES + WEATHER_CAT
+    if include_determined:
+        f += ITEM_CAT
+    if include_sku:
+        f.append("sku")
+    if include_zip:
+        f.append("zip")
+    return f
+
+
+def fragment(name: str, scale: float = 1.0) -> Tuple[Database, List[str]]:
+    """Paper-style fragments: v1 (no sku/zip), v2 (v1 ×5 data), v3 (+zip),
+    v4 (+sku, has the FD). ``scale`` multiplies the base sizes."""
+    base = dict(n_locn=30, n_zip=15, n_date=40, n_sku=60)
+    if name in ("v2", "v3", "v4"):
+        base = dict(n_locn=60, n_zip=25, n_date=60, n_sku=100)
+    spec = RetailerSpec(
+        n_locn=int(base["n_locn"] * scale),
+        n_zip=int(base["n_zip"] * scale),
+        n_date=int(base["n_date"] * scale),
+        n_sku=int(base["n_sku"] * scale),
+        seed=hash(name) % 2**31,
+    )
+    db = generate(spec)
+    feats = {
+        "v1": features(include_sku=False, include_zip=False),
+        "v2": features(include_sku=False, include_zip=False),
+        "v3": features(include_sku=False, include_zip=True),
+        "v4": features(include_sku=True, include_zip=False),
+    }[name]
+    return db, feats

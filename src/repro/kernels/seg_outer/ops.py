@@ -1,0 +1,40 @@
+"""jit'd wrapper: kernel partials + cross-block combine."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import seg_outer
+from .ref import seg_outer_ref
+
+
+@partial(jax.jit, static_argnames=("num_segments", "block_rows", "interpret"))
+def segment_feature_sum(
+    x: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_segments: int,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """segment_sum over SORTED segment ids via the seg_outer kernel."""
+    n, f = x.shape
+    pad = (-n) % block_rows
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, f), x.dtype)], axis=0)
+        # padded rows get an out-of-range segment dropped by the combine
+        seg = jnp.concatenate(
+            [seg, jnp.full((pad,), num_segments, jnp.int32)], axis=0
+        )
+    partials, ids = seg_outer(x, seg, block_rows=block_rows, interpret=interpret)
+    flat_p = partials.reshape(-1, f)
+    flat_i = ids.reshape(-1)
+    flat_i = jnp.where(flat_i < 0, num_segments, flat_i)  # empty slots
+    out = jax.ops.segment_sum(flat_p, flat_i, num_segments=num_segments + 1)
+    return out[:num_segments]
+
+
+def segment_feature_sum_ref(x, seg, num_segments):
+    return seg_outer_ref(x, seg, num_segments)

@@ -1,0 +1,18 @@
+"""Oracle for the segmented outer-sum kernel: per-group feature sums.
+
+This is the group-by aggregate of the paper (sparse categorical Sigma
+entries): out[g, :] = sum over rows r with seg[r] == g of x[r, :].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def seg_outer_ref(
+    x: jnp.ndarray, seg: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    return jax.ops.segment_sum(
+        x.astype(jnp.float32), seg, num_segments=num_segments
+    )

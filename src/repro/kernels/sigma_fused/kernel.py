@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused degree-2 expansion + Gram accumulation.
+
+AC/DC's aggregate pass over the continuous feature block is the FLOP hot
+spot of PR2 training (Table 1: the aggregate step dominates convergence by
+up to 3 orders of magnitude). The naive formulation expands X (N, f) to
+Y (N, f²) in HBM and computes YᵀY — f× more HBM traffic than the input.
+
+This kernel tiles X into (BN, f) VMEM blocks, expands each block to
+(BN, f²) *in VMEM*, and accumulates YᵀY (f², f²) into a VMEM-resident
+accumulator across the row grid: HBM traffic is N·f in + f⁴ out, the
+expansion never leaves the chip, and the (f² × BN) @ (BN × f²) update runs
+on the MXU with 128-aligned tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, out_ref, *, f: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (BN, f)
+    bn = x.shape[0]
+    y = (x[:, :, None] * x[:, None, :]).reshape(bn, f * f)
+    out_ref[...] += jax.lax.dot_general(
+        y, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def sigma_fused(
+    x: jnp.ndarray,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x: (N, f) -> (f*f, f*f) f32 moment matrix. N must divide block_rows
+    after padding (the wrapper in ops.py pads with zero rows — zero rows
+    contribute nothing to the Gram matrix)."""
+    n, f = x.shape
+    assert n % block_rows == 0, "pad in ops.py"
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, f=f),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((f * f, f * f), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((f * f, f * f), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the sigma_fused kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import sigma_fused
+from .ref import sigma_fused_ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def sigma_moments(
+    x: jnp.ndarray, block_rows: int = 256, interpret: bool = True
+) -> jnp.ndarray:
+    """Degree-≤4 moment matrix of the feature block (zero-pads rows)."""
+    n, f = x.shape
+    pad = (-n) % block_rows
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad, f), dtype=x.dtype)], axis=0
+        )
+    return sigma_fused(x, block_rows=block_rows, interpret=interpret)
+
+
+def sigma_moments_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return sigma_fused_ref(x)

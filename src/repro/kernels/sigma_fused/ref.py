@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused degree-2 moment kernel.
+
+Computes G = sum_r (x_r ⊗ x_r)(x_r ⊗ x_r)^T — all degree-≤4 moments of the
+continuous feature block needed by the PR2 Sigma matrix (paper Eq. 2 for
+continuous-only monomial pairs). The naive path materializes the expanded
+design matrix Y (N, f²) in HBM; the kernel never does (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sigma_fused_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (N, f) float. Returns (f*f, f*f) f32 moment matrix."""
+    n, f = x.shape
+    xf = x.astype(jnp.float32)
+    y = (xf[:, :, None] * xf[:, None, :]).reshape(n, f * f)
+    return y.T @ y

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: sliding-window causal flash attention (forward).
+
+Serves the SWA-dominant assigned archs (gemma3 5:1 local layers, h2o-danube,
+hymba local layers). Band structure makes the kernel *linear* in sequence
+length: for query block i only kv blocks in [i - W/BK, i] are touched —
+grid dim 2 enumerates exactly those, and fully-masked blocks are skipped by
+construction rather than by a runtime branch.
+
+Online-softmax blocking follows FlashAttention, adapted to the band: the
+(m, l, acc) running state lives in VMEM scratch across the kv-block grid
+dimension; scores never exist beyond a (BQ, BK) tile. MXU alignment: BQ =
+BK = 128, D padded to a multiple of 128 by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, bq: int, bk: int, window: int, scale: float, kv_steps: int):
+    qi = pl.program_id(1)          # query block
+    sj = pl.program_id(2)          # step within the band (0 .. kv_steps-1)
+
+    @pl.when(sj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)         # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)         # (BK, D)
+    v = v_ref[0].astype(jnp.float32)         # (BK, D)
+
+    # absolute positions of this tile
+    kj = qi - (kv_steps - 1) + sj            # kv block index (may be < 0)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.float32(scale)                    # (BQ, BK)
+    ok = (k_pos <= q_pos) & (k_pos > q_pos - window) & (k_pos >= 0)
+    s = jnp.where(ok, s, jnp.float32(NEG_INF))
+
+    m_prev = m_scr[...]                       # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                    # (BQ, BK)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(sj == kv_steps - 1)
+    def _finish():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def swa_attention(
+    q: jnp.ndarray,       # (BH, S, D) — batch*heads flattened by ops.py
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    window: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0
+    kv_steps = window // block_k + 1          # band width in kv blocks
+    grid = (bh, s // block_q, kv_steps)
+    scale = 1.0 / np.sqrt(d)
+
+    def q_index(b, i, j):
+        return (b, i, 0)
+
+    def kv_index(b, i, j):
+        kj = i - (kv_steps - 1) + j
+        kj = jnp.maximum(kj, 0)               # clamped; masked in-kernel
+        return (b, kj, 0)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, bq=block_q, bk=block_k, window=window,
+            scale=scale, kv_steps=kv_steps,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_index),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

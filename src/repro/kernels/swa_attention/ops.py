@@ -1,0 +1,37 @@
+"""jit'd wrapper: (B, S, H, D) sliding-window attention via the kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import swa_attention
+from .ref import swa_attention_ref
+
+
+@partial(jax.jit, static_argnames=("window", "block_q", "block_k", "interpret"))
+def sliding_window_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    window: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q/k/v (B, S, H, D), same head counts (repeat GQA kv before calling)."""
+    b, s, h, d = q.shape
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, x.shape[-1])
+
+    out = swa_attention(
+        flat(q), flat(k), flat(v), window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+sliding_window_attention_ref = swa_attention_ref

@@ -1,0 +1,24 @@
+"""Oracle: masked sliding-window causal attention (single head batch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def swa_attention_ref(
+    q: jnp.ndarray,       # (B, S, H, D)
+    k: jnp.ndarray,       # (B, S, H, D)
+    v: jnp.ndarray,       # (B, S, H, D)
+    window: int,
+) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(d)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    ok = (ki <= qi) & (ki > qi - window)
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes and record roofline inputs.
+
+The two lines above MUST precede any jax import (device count locks on
+first backend init); smoke tests and benchmarks do NOT get 512 devices —
+only this entry point does.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+
+Per cell it emits a JSON artifact:
+  {arch, cell, mesh, per-device memory stats, HLO flops/bytes,
+   collective bytes by kind, lower/compile seconds, model_flops}
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch import mesh as meshlib
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.train import init_state, make_train_step, state_specs
+from repro.models.config import Family, ModelConfig, SHAPES, cells_for
+from repro.models.model import LM
+from repro.optim import adafactor, adamw, cosine_warmup
+
+
+# ----------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ----------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, cell_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    cell = SHAPES[cell_name]
+    B, S = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    if cell.kind == "train" or cell.kind == "prefill":
+        toks = S
+        out: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.family is Family.VLM:
+            toks = S - cfg.frontend_len
+            out["patches"] = jax.ShapeDtypeStruct((B, cfg.frontend_len, cfg.d_model), dt)
+        if cfg.family is Family.ENCDEC:
+            out["frames"] = jax.ShapeDtypeStruct((B, cfg.frontend_len, cfg.d_model), dt)
+        out["tokens"] = jax.ShapeDtypeStruct((B, toks), i32)
+        if cell.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, toks), i32)
+        return out
+    # decode: one token + absolute positions
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "positions": jax.ShapeDtypeStruct((B, 1), i32),
+    }
+
+
+def pick_optimizer(cfg: ModelConfig):
+    """AdamW below ~30B params; Adafactor above (optimizer-state HBM)."""
+    if cfg.num_params() > 30e9:
+        return adafactor(cosine_warmup(1e-4, 1000, 100_000)), "adafactor"
+    return adamw(cosine_warmup(3e-4, 1000, 100_000)), "adamw"
+
+
+# ----------------------------------------------------------------------
+# lowering
+# ----------------------------------------------------------------------
+
+
+def model_flops(cfg: ModelConfig, cell_name: str) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference)."""
+    cell = SHAPES[cell_name]
+    n = cfg.num_params()
+    if cfg.moe is not None:
+        m = cfg.moe
+        total_exp = 3 * cfg.d_model * m.d_ff_expert * m.num_experts * cfg.n_layers
+        active_exp = 3 * cfg.d_model * m.d_ff_expert * (m.top_k + m.num_shared) * cfg.n_layers
+        n = n - total_exp + active_exp
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    return (6.0 if cell.kind == "train" else 2.0) * n * tokens
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    cell: str
+    mesh: str
+    ok: bool
+    error: Optional[str] = None
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    flops: float = 0.0                 # per-device, trip-count-aware (hlo_cost)
+    bytes_accessed: float = 0.0        # per-device traffic proxy (hlo_cost)
+    flops_xla: float = 0.0             # raw cost_analysis (undercounts scans)
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+    model_flops: float = 0.0
+    optimizer: str = ""
+    microbatches: int = 1
+    strategy: str = ""
+
+
+def lower_cell(
+    arch: str,
+    cell_name: str,
+    mesh,
+    verbose: bool = True,
+    return_artifacts: bool = False,
+    cfg_override: Optional[ModelConfig] = None,
+    micro_override: Optional[int] = None,
+    strategy_override: Optional[str] = None,
+):
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    cell = SHAPES[cell_name]
+    # sub-1B archs (whisper): the model axis is better spent on batch
+    pure_dp = cfg.num_params() < 5e8
+    # parameter strategy: fsdp (weights+states data-sharded, per-layer
+    # gathers) for the biggest models; zero1 (states data-sharded, weights
+    # TP-only — no per-layer gathers) in between; plain TP below.
+    if strategy_override is not None:
+        strategy = strategy_override
+    elif cfg.num_params() > 1.9e9:
+        strategy = "fsdp"   # zero1 measured worse on HBM with no X win (§Perf)
+    else:
+        strategy = "dp"
+    fsdp = strategy == "fsdp"
+    minfo = meshlib.mesh_info(mesh, pure_dp=pure_dp)
+    model = LM(cfg, mesh_info=minfo, fsdp=fsdp)
+    opt, opt_name = pick_optimizer(cfg)
+
+    # --- abstract state + shardings (no allocation: eval_shape) ---
+    key = jax.random.PRNGKey(0)
+    params_shape, param_specs = model.param_shapes_and_specs(key)
+
+    inputs = input_specs(cfg, cell_name)
+    in_fn = meshlib.batch_sharding(mesh, cell.kind, inputs, pure_dp=pure_dp)
+
+    result = CellResult(
+        arch=arch, cell=cell_name,
+        mesh="x".join(map(str, tuple(mesh.shape.values()))),
+        ok=False, optimizer=opt_name, model_flops=model_flops(cfg, cell_name),
+        strategy=strategy,
+    )
+
+    t0 = time.perf_counter()
+    if cell.kind == "train":
+        state_shape = jax.eval_shape(lambda k: init_state(model, opt, k), key)
+        sspecs = state_specs(model, opt, param_specs)
+        if strategy == "zero1":
+            # weights: TP only; optimizer states: additionally data-sharded
+            # (grad reduce-scatter + one param all-gather per step)
+            pshard = meshlib.resolve(
+                sspecs.params, state_shape.params, mesh, cfg,
+                fsdp=False, use_tp=not pure_dp,
+            )
+            oshard = meshlib.resolve(
+                sspecs.opt_state, state_shape.opt_state, mesh, cfg,
+                fsdp=True, use_tp=not pure_dp,
+            )
+            from repro.launch.train import TrainState
+
+            state_shardings = TrainState(
+                step=meshlib.replicated(mesh), params=pshard, opt_state=oshard
+            )
+        else:
+            state_shardings = meshlib.resolve(
+                sspecs, state_shape, mesh, cfg, fsdp=fsdp, use_tp=not pure_dp
+            )
+        # gradient accumulation keeps 100B+ activations inside HBM
+        micro = 8 if cfg.num_params() > 60e9 else 1
+        if micro_override is not None:
+            micro = micro_override
+        result.microbatches = micro
+        step_fn = make_train_step(model, opt, microbatches=micro)
+        jfn = jax.jit(
+            step_fn,
+            in_shardings=(state_shardings, in_fn),
+            donate_argnums=(0,),
+        )
+        lowered = jfn.lower(state_shape, inputs)
+    else:
+        pshard = meshlib.resolve(
+            param_specs, params_shape, mesh, cfg, fsdp=fsdp, use_tp=not pure_dp
+        )
+        cache_shape = model.init_cache(
+            cell.global_batch, cell.seq_len, abstract=True
+        )
+        cshard = meshlib.cache_sharding(
+            mesh, cache_shape, cell.global_batch, cfg.n_kv, pure_dp=pure_dp
+        )
+        if cell.kind == "prefill":
+            def fn(params, batch, cache):
+                return model.prefill(params, batch, cache)
+
+            jfn = jax.jit(
+                fn,
+                in_shardings=(pshard, in_fn, cshard),
+                donate_argnums=(2,),
+            )
+            lowered = jfn.lower(params_shape, inputs, cache_shape)
+        else:
+            def fn(params, tokens, positions, cache):
+                return model.decode_step(params, tokens, positions, cache)
+
+            jfn = jax.jit(
+                fn,
+                in_shardings=(
+                    pshard, in_fn["tokens"], in_fn["positions"], cshard
+                ),
+                donate_argnums=(3,),
+            )
+            lowered = jfn.lower(
+                params_shape, inputs["tokens"], inputs["positions"], cache_shape
+            )
+    result.lower_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    result.compile_s = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hc = analyze_hlo(compiled.as_text())
+    result.flops = hc.flops
+    result.bytes_accessed = hc.bytes
+    result.flops_xla = float(ca.get("flops", 0.0))
+    result.argument_bytes = float(ma.argument_size_in_bytes)
+    result.output_bytes = float(ma.output_size_in_bytes)
+    result.temp_bytes = float(ma.temp_size_in_bytes)
+    result.collectives = hc.collectives
+    result.ok = True
+    if verbose:
+        print(
+            f"[dryrun] {arch:22s} {cell_name:12s} mesh={result.mesh:9s} "
+            f"lower={result.lower_s:6.1f}s compile={result.compile_s:6.1f}s "
+            f"flops/dev={result.flops:.3e} temp/dev={result.temp_bytes/2**30:.2f}GiB "
+            f"coll={ {k: f'{v/2**20:.0f}MiB' for k, v in result.collectives.items()} }"
+        )
+        print(f"  memory_analysis: {ma}")
+    if return_artifacts:
+        return result, lowered, compiled
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [("pod1", meshlib.make_production_mesh(multi_pod=False)),
+                  ("pod2", meshlib.make_production_mesh(multi_pod=True))]
+    else:
+        mp = args.multi_pod
+        meshes = [("pod2" if mp else "pod1",
+                   meshlib.make_production_mesh(multi_pod=mp))]
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for cell in cells_for(arch):
+                cells.append((arch, cell))
+    else:
+        cells = [(args.arch, args.cell)]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch, cell in cells:
+            try:
+                res = lower_cell(arch, cell, mesh)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                res = CellResult(
+                    arch=arch, cell=cell, mesh=mesh_name, ok=False,
+                    error=f"{type(e).__name__}: {e}",
+                )
+                failures.append((arch, cell, mesh_name, str(e)[:200]))
+                print(f"[dryrun] FAIL {arch} {cell} {mesh_name}: {str(e)[:300]}")
+            path = os.path.join(args.out, f"{mesh_name}__{arch}__{cell}.json")
+            with open(path, "w") as f:
+                json.dump(dataclasses.asdict(res), f, indent=1)
+    print(f"\n[dryrun] done; {len(failures)} failures")
+    for f_ in failures:
+        print("  FAIL", *f_)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

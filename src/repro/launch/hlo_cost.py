@@ -1,0 +1,237 @@
+"""Structural cost extraction from compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, which
+undercounts scan-over-layers programs by the layer count (and nested scans
+multiplicatively). This parser walks the computation graph from ENTRY,
+multiplying each computation's costs by the product of enclosing
+``known_trip_count`` annotations, and extracts:
+
+  * flops            — 2 · |out| · |contracted| for every ``dot`` op
+                       (+ an approximate term for convolutions); matmuls
+                       dominate transformer FLOPs; elementwise ops are
+                       excluded, consistent with MFU conventions
+  * bytes            — operand + result bytes of ops at fusion granularity
+                       (post-fusion logical HBM traffic proxy; fusion-
+                       internal ops stay in VMEM and are not counted)
+  * collective bytes — per kind; all-reduce weighted 2× result bytes (ring),
+                       others 1× result bytes
+
+All values are PER DEVICE (the module is the per-device partitioned
+program). Methodology notes in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# header params may contain nested tuple types: match greedily and rely on
+# the absence of " = " (op lines always have it) to disambiguate
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'known_trip_count[^0-9]*"n"\s*:\s*"?(\d+)')
+_CALLS = re.compile(r"(?:calls=|to_apply=|body=)%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+# HBM-traffic proxy: count bytes ONLY for ops that necessarily touch HBM on
+# TPU — matmuls, fusions (their operands/results), data movement, collectives.
+# Bare elementwise/broadcast/reshape ops would fuse into neighbors on the TPU
+# backend; counting each would overstate traffic ~100× on CPU-compiled HLO.
+_BYTES_OPS = {
+    "dot", "convolution", "fusion", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "copy", "concatenate",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "reduce-scatter-start", "all-to-all-start", "collective-permute-start",
+    "sort", "reduce", "pad", "slice", "transpose",
+}
+
+
+def _shape_bytes(dt: str, dims: str) -> float:
+    if dt not in DTYPE_BYTES:
+        return 0.0
+    return _shape_elems(dims) * DTYPE_BYTES[dt]
+
+
+def _shape_elems(dims: str) -> float:
+    n = 1.0
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+    is_fusion_body: bool = False
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collectives: Dict[str, float]
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+def analyze_hlo(text: str) -> HloCost:
+    lines = text.splitlines()
+
+    # ---- pass 1: symbol table (op result shapes) ----
+    sym: Dict[str, List[Tuple[str, str]]] = {}
+    for raw in lines:
+        m = _OP.match(raw)
+        if m:
+            name, typestr = m.group(1), m.group(2)
+            sym[name] = _SHAPE.findall(typestr)
+
+    # ---- pass 2: per-computation costs ----
+    comps: Dict[str, CompCost] = {}
+    fusion_bodies = set()
+    entry: Optional[str] = None
+    cur: Optional[CompCost] = None
+
+    for raw in lines:
+        hdr = _COMP_HDR.match(raw) if " = " not in raw else None
+        if hdr:
+            name = hdr.group(2)
+            cur = comps.setdefault(name, CompCost())
+            if hdr.group(1):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        m = _OP.match(raw)
+        if not m:
+            continue
+        res_name, typestr, opname, args = m.groups()
+        out_shapes = _SHAPE.findall(typestr)
+
+        # collectives (incl. -start variants). Ring-traffic conventions:
+        # all-reduce ≈ 2× tensor, all-gather ≈ result, reduce-scatter ≈
+        # INPUT bytes (the result is already 1/n of the reduced tensor).
+        base_op = opname.replace("-start", "")
+        if base_op in COLLECTIVES:
+            if base_op == "reduce-scatter":
+                total = 0.0
+                for op_name_ in _OPERANDS.findall(args.split(")", 1)[0]):
+                    for dt, dims in sym.get(op_name_, []):
+                        total += _shape_bytes(dt, dims)
+                if total == 0.0:
+                    total = sum(_shape_bytes(dt, dims) for dt, dims in out_shapes)
+            else:
+                total = sum(_shape_bytes(dt, dims) for dt, dims in out_shapes)
+            w = 2.0 if base_op == "all-reduce" else 1.0
+            cur.coll[base_op] = cur.coll.get(base_op, 0.0) + w * total
+
+        # dot flops
+        if opname == "dot":
+            mc = _LHS_CONTRACT.search(raw)
+            ops = _OPERANDS.findall(args.split(")", 1)[0])
+            if mc and out_shapes and ops:
+                lhs_shapes = sym.get(ops[0], [])
+                if lhs_shapes:
+                    lhs_dims = [
+                        int(d) for d in lhs_shapes[0][1].split(",") if d
+                    ]
+                    contracted = 1.0
+                    for i in (int(i) for i in mc.group(1).split(",") if i):
+                        if i < len(lhs_dims):
+                            contracted *= lhs_dims[i]
+                    cur.flops += 2.0 * _shape_elems(out_shapes[0][1]) * contracted
+        elif opname == "convolution":
+            ops = _OPERANDS.findall(args.split(")", 1)[0])
+            if out_shapes and len(ops) >= 2 and sym.get(ops[1]):
+                cur.flops += (
+                    2.0
+                    * _shape_elems(out_shapes[0][1])
+                    * _shape_elems(sym[ops[1]][0][1])
+                )
+
+        # bytes: result + operands (fusion-granularity traffic proxy)
+        if opname in _BYTES_OPS:
+            b = sum(_shape_bytes(dt, dims) for dt, dims in out_shapes)
+            for op_name_ in _OPERANDS.findall(args.split(")", 1)[0]):
+                for dt, dims in sym.get(op_name_, []):
+                    b += _shape_bytes(dt, dims)
+            cur.bytes += b
+
+        # sub-computations
+        if opname == "while":
+            mt = _TRIP.search(raw)
+            n = float(mt.group(1)) if mt else 1.0
+            for ref in _CALLS.findall(raw):
+                # body= and condition= both matched; weight both by n
+                cur.calls.append((ref, n))
+        else:
+            for ref in _CALLS.findall(raw):
+                cur.calls.append((ref, 1.0))
+            mb = _BRANCHES.search(raw)
+            if mb:
+                for ref in mb.group(1).split(","):
+                    cur.calls.append((ref.strip().lstrip("%"), 1.0))
+        if opname == "fusion":
+            for ref in _CALLS.findall(raw):
+                fusion_bodies.add(ref)
+
+    for name in fusion_bodies:
+        if name in comps:
+            comps[name].is_fusion_body = True
+
+    # ---- accumulate multipliers over the (acyclic) call graph ----
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return HloCost(0.0, 0.0, {})
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        cc = comps.get(name)
+        if cc is None:
+            continue
+        for callee, n in cc.calls:
+            mult[callee] += mult[name] * n
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll: Dict[str, float] = {}
+    for name, cc in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        flops += m * cc.flops
+        if not cc.is_fusion_body:
+            bytes_ += m * cc.bytes
+        for k, v in cc.coll.items():
+            coll[k] = coll.get(k, 0.0) + m * v
+    return HloCost(flops=flops, bytes=bytes_, collectives=coll)

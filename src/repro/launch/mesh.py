@@ -1,0 +1,242 @@
+"""Production mesh + logical->physical sharding resolution.
+
+Mesh: single pod (data=16, model=16) = 256 chips; multi-pod adds a leading
+``pod`` axis (2, 16, 16) = 512 chips. TPU v5e-like hardware constants used
+by the roofline pass live here too.
+
+Logical spec entries used by the model layers:
+  "model"      TP dim (heads / d_ff / vocab)        -> model axis if divisible
+  "expert"     MoE expert dim                       -> model axis iff E % tp == 0 (EP)
+  "expert_ff"  MoE per-expert d_ff                  -> model axis iff NOT EP
+  "data"       explicit FSDP dim                    -> data axis
+  None         replicated
+
+``resolve`` applies the divisibility fallback (replicate what doesn't
+divide) and, when ``fsdp`` is on, shards the largest remaining dim of every
+big parameter over the data axis (GSPMD inserts the per-layer all-gathers
+inside the scan — compute/comm overlapped by XLA's async collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import MeshInfo
+
+# TPU v5e-like chip (per brief): bf16 peak, HBM BW, per-link ICI BW.
+HARDWARE = {
+    "peak_flops": 197e12,       # FLOP/s bf16
+    "hbm_bw": 819e9,            # B/s
+    "ici_bw": 50e9,             # B/s per link
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def mesh_info(mesh: Optional[Mesh], pure_dp: bool = False) -> MeshInfo:
+    """``pure_dp``: treat the model axis as extra data parallelism — the
+    right mapping for sub-1B models (whisper-base) where TP dims don't
+    shard usefully and per-layer gathers would dominate."""
+    if mesh is None:
+        return MeshInfo()
+    if pure_dp:
+        axes = data_axes(mesh) + (("model",) if "model" in mesh.shape else ())
+        return MeshInfo(mesh=mesh, dp_axes=axes, tp_axis=None, tp_size=1)
+    return MeshInfo(
+        mesh=mesh,
+        dp_axes=data_axes(mesh),
+        tp_axis="model" if "model" in mesh.shape else None,
+        tp_size=mesh_axis_size(mesh, "model"),
+    )
+
+
+# ----------------------------------------------------------------------
+# spec resolution
+# ----------------------------------------------------------------------
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, (str, tuple)) for e in x
+    )
+
+
+def resolve(
+    specs: Any,
+    params_shapes: Any,
+    mesh: Mesh,
+    cfg: Optional[ModelConfig] = None,
+    fsdp: bool = False,
+    fsdp_min_size: int = 1 << 20,
+    use_tp: bool = True,
+) -> Any:
+    """Map a logical spec tree to NamedShardings for the given mesh."""
+    tp = mesh_axis_size(mesh, "model") if use_tp else 1
+    dp = mesh_axis_size(mesh, "data")
+    ep = (
+        cfg is not None
+        and cfg.moe is not None
+        and cfg.moe.num_experts % tp == 0
+    )
+
+    def leaf(spec, shape_leaf):
+        shape = shape_leaf.shape if hasattr(shape_leaf, "shape") else shape_leaf
+        spec = tuple(spec)
+        phys = []
+        for dim, s in enumerate(spec):
+            name = None
+            if s == "model" and tp > 1 and shape[dim] % tp == 0:
+                name = "model"
+            elif s == "expert":
+                if ep and shape[dim] % tp == 0:
+                    name = "model"
+            elif s == "expert_ff":
+                if not ep and tp > 1 and shape[dim] % tp == 0:
+                    name = "model"
+            elif s == "data" and dp > 1 and shape[dim] % dp == 0:
+                name = "data"
+            phys.append(name)
+        if fsdp and dp > 1 and int(np.prod(shape)) >= fsdp_min_size:
+            if "data" not in phys:
+                # largest unsharded dim divisible by dp; skip the leading
+                # (scan/layer) dim of stacked params
+                cands = [
+                    (shape[d], d)
+                    for d in range(len(shape))
+                    if phys[d] is None and shape[d] % dp == 0 and d > 0
+                ]
+                if not cands and len(shape) and phys[0] is None and shape[0] % dp == 0:
+                    cands = [(shape[0], 0)]
+                if cands:
+                    _, d = max(cands)
+                    phys[d] = "data"
+        return NamedSharding(mesh, P(*phys))
+
+    return jax.tree.map(
+        leaf, specs, params_shapes, is_leaf=lambda x: _is_spec(x)
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def best_batch_axes(mesh: Mesh, batch: int, axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Largest divisible axis combination for the batch dim.
+
+    Candidates are suffixes of the data axes, optionally extended by the
+    model axis (pure-DP); the most chips win, data-only preferred on ties
+    (leaves the model axis free to shard caches/activations). A 256-batch
+    on the 512-chip multi-pod mesh shards 256-way instead of replicating.
+    """
+    data_only = tuple(a for a in axes if a != "model")
+    with_model = "model" in axes
+    cands = []
+    for k in range(len(data_only) + 1):
+        sub = data_only[k:]
+        if sub:
+            cands.append(sub)
+        if with_model:
+            cands.append(sub + ("model",))
+    best: Tuple[str, ...] = ()
+    best_size = 1
+    for sub in cands:
+        size = int(np.prod([mesh.shape[a] for a in sub]))
+        if size > best_size and batch % size == 0:
+            best, best_size = sub, size
+    return best
+
+
+def batch_sharding(mesh: Mesh, kind: str, shapes: Dict[str, Any],
+                   pure_dp: bool = False) -> Dict[str, Any]:
+    """Input batch shardings: batch dim over (pod, data) when divisible
+    (plus the model axis for pure-DP archs), largest-divisible-suffix
+    fallback otherwise."""
+    daxes = data_axes(mesh)
+    if pure_dp and "model" in mesh.shape:
+        daxes = daxes + ("model",)
+
+    def spec_for(arr):
+        lead = best_batch_axes(mesh, arr.shape[0], daxes)
+        rest = (None,) * (len(arr.shape) - 1)
+        return NamedSharding(mesh, P(lead if lead else None, *rest))
+
+    return {k: spec_for(v) for k, v in shapes.items()}
+
+
+def cache_sharding(
+    mesh: Mesh,
+    cache_shapes: Any,
+    global_batch: int,
+    n_kv: int = 0,
+    pure_dp: bool = False,
+) -> Any:
+    """KV / state cache shardings.
+
+    Cache leaves come in several ranks ((B,T,kv,hd), layer-stacked
+    (L,B,T,kv,hd), SSM states (B,di,n), mLSTM (B,h,hd,hd), ...), so dims
+    are identified by SIZE: the batch dim is the first dim equal to the
+    global batch (sharded over pod,data when divisible); the model axis
+    goes to the kv-head dim when it divides, else to the largest remaining
+    divisible dim (split-KV decode)."""
+    daxes = data_axes(mesh)
+    if pure_dp and "model" in mesh.shape:
+        daxes = daxes + ("model",)
+    tp = mesh_axis_size(mesh, "model")
+
+    def leaf(l):
+        shape = l.shape
+        phys = [None] * len(shape)
+        bdim = None
+        baxes: Tuple[str, ...] = ()
+        for d, s in enumerate(shape):
+            if s == global_batch and s > 1:
+                baxes = best_batch_axes(mesh, s, daxes)
+                if baxes:
+                    bdim = d
+                    phys[d] = baxes
+                break
+        # the model axis can shard another dim unless batch consumed it
+        if "model" in baxes:
+            return NamedSharding(mesh, P(*phys))
+        if tp > 1:
+            kvdim = None
+            for d in range(len(shape) - 2, -1, -1):
+                if d != bdim and shape[d] == n_kv and n_kv % tp == 0:
+                    kvdim = d
+                    break
+            if kvdim is not None:
+                phys[kvdim] = "model"
+            else:
+                order = sorted(
+                    (d for d in range(len(shape)) if d != bdim and phys[d] is None),
+                    key=lambda d: -shape[d],
+                )
+                for d in order:
+                    if shape[d] % tp == 0 and shape[d] >= tp:
+                        phys[d] = "model"
+                        break
+        return NamedSharding(mesh, P(*phys))
+
+    return jax.tree.map(leaf, cache_shapes)

@@ -1,0 +1,122 @@
+"""Roofline assembly from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod mesh:
+
+  compute term    = flops_per_device / peak_flops            [s]
+  memory term     = bytes_per_device / hbm_bw                [s]
+  collective term = collective_bytes_per_device / ici_bw     [s]
+
+flops/bytes are the trip-count-aware per-device numbers from hlo_cost (the
+partitioned module is the per-device program, so global/chips == per-device).
+The dominant term is the bottleneck; "roofline fraction" is
+compute_term / max(all terms) — how much of the step the MXU is the
+constraint (1.0 = perfectly compute-bound).
+
+Also reports MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
+(inference) and the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs·chips)
+which exposes remat recompute and padding waste.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --artifacts artifacts/dryrun \
+      [--mesh pod1] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HARDWARE
+
+CELL_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_artifacts(path: str, mesh: str = "pod1") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(path, f"{mesh}__*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def terms(row: Dict, chips: int) -> Dict[str, float]:
+    compute = row["flops"] / HARDWARE["peak_flops"]
+    memory = row["bytes_accessed"] / HARDWARE["hbm_bw"]
+    coll = sum(row["collectives"].values()) / HARDWARE["ici_bw"]
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", coll),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(compute, memory, coll)
+    useful = row["model_flops"] / max(row["flops"] * chips, 1.0)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dominant,
+        "roofline_fraction": compute / bound if bound else 0.0,
+        "useful_ratio": useful,
+    }
+
+
+SUGGESTIONS = {
+    "compute": "reduce recompute (selective remat) or shrink padded/wasted matmuls",
+    "memory": "fuse bandwidth-bound chains / increase arithmetic intensity (bigger tiles, kernel fusion)",
+    "collective": "reshard to cut per-layer gathers (FSDP prefetch, TP->EP, overlap or compress collectives)",
+}
+
+
+def build_table(rows: List[Dict], chips: int) -> str:
+    out = [
+        "| arch | cell | compute s | memory s | collective s | dominant | "
+        "roofline frac | MODEL_FLOPS | useful ratio | HBM ok |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    key = lambda r: (r["arch"], CELL_ORDER.index(r["cell"]))
+    for r in sorted(rows, key=key):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['cell']} | FAILED: {r.get('error','')} |")
+            continue
+        t = terms(r, chips)
+        total_dev_bytes = r["argument_bytes"] + r["temp_bytes"]
+        hbm_ok = "yes" if total_dev_bytes <= 16e9 else f"no ({total_dev_bytes/1e9:.1f}GB)"
+        out.append(
+            f"| {r['arch']} | {r['cell']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | {t['dominant']} "
+            f"| {t['roofline_fraction']:.2f} | {r['model_flops']:.2e} "
+            f"| {t['useful_ratio']:.2f} | {hbm_ok} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    chips = 256 if args.mesh == "pod1" else 512
+    rows = load_artifacts(args.artifacts, args.mesh)
+    table = build_table(rows, chips)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+    # bottleneck summary with one-line suggestions
+    print("\nPer-cell dominant-term notes:")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"])):
+        if not r.get("ok"):
+            continue
+        t = terms(r, chips)
+        print(
+            f"  {r['arch']:22s} {r['cell']:12s} {t['dominant']:10s} "
+            f"-> {SUGGESTIONS[t['dominant']]}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Batched serving runtime: continuous batching over prefill/decode.
+
+Production anatomy on one replica group:
+  * a request queue; admission picks up to ``max_batch`` requests;
+  * one jitted prefill per admitted cohort (left-padded to the cohort max),
+    then step-locked batched decode with per-slot absolute positions;
+  * finished requests (EOS or max_new) free their slot; new requests join
+    at the next cohort boundary (cohort-level continuous batching — slot
+    reuse WITHIN a decode loop needs per-slot prefill, a paged-KV feature
+    noted in DESIGN.md).
+
+CPU-runnable with smoke configs (`examples/serve_decode.py` drives one
+cohort; `tests/test_serve.py` exercises the scheduler).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import Family, ModelConfig
+from repro.models.model import LM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # prompt ids (1-D)
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.decode_tokens / self.wall_s if self.wall_s else 0.0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 8,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(seed)
+        )
+        self.max_batch = max_batch
+        self.max_len = max_len
+        from functools import partial
+
+        self._prefill = jax.jit(partial(self.model.prefill, all_logits=True))
+        self._decode = jax.jit(self.model.decode_step)
+
+    # ------------------------------------------------------------------
+    def _pad_cohort(self, reqs: List[Request]):
+        lens = [len(r.tokens) for r in reqs]
+        m = max(lens)
+        toks = np.zeros((len(reqs), m), dtype=np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, : len(r.tokens)] = r.tokens      # right-pad
+        return {"tokens": jnp.asarray(toks)}, m, np.asarray(lens)
+
+    def _mask_pad_cache(self, cache, lens: np.ndarray, m: int):
+        """Invalidate cache entries written by pad positions: cpos leaves
+        (int32, trailing dims (B, S_c)) get -1 beyond each slot's length —
+        the attention mask then ignores them exactly like never-written
+        slots. (SSM/recurrent state caches cannot be fixed post-hoc: ragged
+        cohorts on state-space archs need per-slot prefill; full-attention
+        archs are exact.)"""
+        B = len(lens)
+
+        def fix(leaf):
+            if leaf.dtype != jnp.int32 or leaf.ndim < 2:
+                return leaf
+            if leaf.shape[-2] != B:
+                return leaf
+            sc = leaf.shape[-1]
+            pos_grid = np.arange(sc)[None, :]
+            invalid = (pos_grid >= lens[:, None]) & (pos_grid < m)
+            return jnp.where(jnp.asarray(invalid), -1, leaf)
+
+        return jax.tree.map(fix, cache)
+
+    def run_cohort(self, reqs: List[Request]) -> ServeStats:
+        """Prefill + decode one cohort to completion (step-locked batch,
+        per-slot absolute positions for ragged prompts)."""
+        assert len(reqs) <= self.max_batch
+        t0 = time.perf_counter()
+        batch, m, lens = self._pad_cohort(reqs)
+        B = len(reqs)
+        max_new = max(r.max_new for r in reqs)
+        cache = self.model.init_cache(B, m + max_new)
+        logits, cache = self._prefill(self.params, batch, cache)
+        cache = self._mask_pad_cache(cache, lens, m)
+        # first token: each slot's logits at its own last TRUE position
+        lg = np.asarray(logits[:, :, : self.cfg.vocab], dtype=np.float32)
+        first = lg[np.arange(B), lens - 1].argmax(-1).astype(np.int32)
+        tok = jnp.asarray(first)[:, None]
+
+        outs = [[int(first[i])] for i in range(B)]
+        done = np.zeros(B, dtype=bool)
+        for step in range(max_new - 1):
+            pos = jnp.asarray(lens + step, dtype=jnp.int32)[:, None]
+            logits, cache = self._decode(self.params, tok, pos, cache)
+            tok = jnp.argmax(logits[:, :, : self.cfg.vocab], -1).astype(jnp.int32)
+            host = np.asarray(tok[:, 0])
+            for i, r in enumerate(reqs):
+                if done[i]:
+                    continue
+                outs[i].append(int(host[i]))
+                if (r.eos_id is not None and host[i] == r.eos_id) or len(
+                    outs[i]
+                ) >= r.max_new:
+                    done[i] = True
+            if done.all():
+                break
+        wall = time.perf_counter() - t0
+        stats = ServeStats(
+            requests=B,
+            prefill_tokens=int(lens.sum()),
+            decode_tokens=sum(len(o) for o in outs),
+            wall_s=wall,
+        )
+        for r, o in zip(reqs, outs):
+            r.output = np.asarray(o, dtype=np.int32)
+            r.latency_s = wall
+        return stats
+
+
+def serve_queue(engine: Engine, queue: List[Request]) -> ServeStats:
+    """Drain a queue cohort by cohort (admission = FIFO up to max_batch)."""
+    total = ServeStats()
+    i = 0
+    while i < len(queue):
+        cohort = queue[i : i + engine.max_batch]
+        s = engine.run_cohort(cohort)
+        total.requests += s.requests
+        total.prefill_tokens += s.prefill_tokens
+        total.decode_tokens += s.decode_tokens
+        total.wall_s += s.wall_s
+        i += len(cohort)
+    return total

@@ -1,0 +1,135 @@
+"""Model / shape configuration for the assigned architecture pool.
+
+Every architecture is a ``ModelConfig``; the four assigned input-shape cells
+are ``ShapeCell``s. ``repro.configs`` registers one exact config per assigned
+arch plus a reduced smoke variant of the same family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class Family(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    SSM = "ssm"
+    HYBRID = "hybrid"
+    ENCDEC = "encdec"   # audio enc-dec (whisper)
+    VLM = "vlm"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    chunk: int = 256             # chunked-scan block length
+    # xLSTM: every ``slstm_every``-th block is sLSTM (0 = none, pure mLSTM)
+    slstm_every: int = 0
+    # mLSTM: 0 = exact stabilized recurrence (paper-faithful baseline);
+    # >0 = chunkwise-parallel formulation with this intra-chunk length
+    # (identical math, MXU-shaped — the §Perf hillclimb for the xlstm cell)
+    mlstm_chunk: int = 0
+    # bf16 recurrent weights in sLSTM steps (f32 accumulate) — §Perf iter
+    slstm_bf16_rec: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    norm: str = "rmsnorm"              # rmsnorm | layernorm
+    act: str = "swiglu"                # swiglu | geglu | gelu
+    rope_base: float = 10_000.0
+    rope_base_global: Optional[float] = None  # gemma3 dual-base
+    window: Optional[int] = None       # sliding-window size (None = full)
+    global_every: Optional[int] = None # 1 global layer per N (gemma 5:1 -> 6)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    parallel_block: bool = False       # attention ∥ FFN residual (command-r)
+    qk_norm: bool = False
+    logit_softcap: Optional[float] = None
+    tie_embeddings: bool = True
+    # enc-dec (whisper): encoder layer count; decoder uses n_layers
+    n_enc_layers: int = 0
+    frontend: Optional[str] = None     # "audio" | "vision" stub frontends
+    frontend_len: int = 0              # precomputed frontend sequence length
+    max_position: int = 0              # 0 = unrestricted (RoPE)
+    dtype: str = "bfloat16"
+    remat: str = "full"                # none | dots | full
+    source: str = ""                   # public provenance tag
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv if self.n_kv else 1
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        return ((self.vocab + multiple - 1) // multiple) * multiple
+
+    def num_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, hd = self.d_model, self.head_dim
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv * hd + self.n_heads * hd * d
+        if self.moe:
+            ff = 3 * d * self.moe.d_ff_expert * self.moe.num_experts
+            ff += self.moe.num_shared * 3 * d * self.moe.d_ff_expert
+            ff += d * self.moe.num_experts  # router
+        elif self.d_ff:
+            n_mats = 3 if self.act in ("swiglu", "geglu") else 2
+            ff = n_mats * d * self.d_ff
+        else:
+            ff = 0
+        if self.ssm is not None and self.family in (Family.SSM, Family.HYBRID):
+            di = self.ssm.expand * d
+            ff += 2 * d * di + di * self.ssm.d_state * 2 + di * d
+        per_layer = attn + ff + 2 * d
+        n = self.n_layers + self.n_enc_layers
+        return emb + n * per_layer
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# Architectures for which long_500k is runnable (sub-quadratic path exists).
+# Pure full-attention archs are skipped per the brief; see DESIGN.md.
+LONG_CONTEXT_OK = {"hymba-1.5b", "xlstm-1.3b", "h2o-danube-1.8b", "gemma3-27b"}
+
+
+def cells_for(arch: str) -> List[str]:
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_OK:
+        cells.append("long_500k")
+    return cells

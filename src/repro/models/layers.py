@@ -1,0 +1,417 @@
+"""Core LM layers: norms, rotary embeddings, GQA attention (full / sliding
+window, train / prefill / decode with ring-buffer caches), gated MLPs,
+embeddings with padded vocab.
+
+All modules are pure functions over param dicts. ``init_*`` functions return
+``(params, specs)`` where ``specs`` mirrors the param tree with *logical*
+PartitionSpec tuples (axis names or None). ``repro.launch.mesh`` maps logical
+specs onto a concrete device mesh with a divisibility fallback, so awkward
+head counts (hymba's 25 heads, whisper's 8) still compile on a 16-way model
+axis by replicating what doesn't divide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+_INIT_SCALE = 0.02
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    scale = _INIT_SCALE if scale is None else scale
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Tuple[Params, Specs]:
+    p = {"scale": jnp.ones((d,), dtype=jnp.float32)}
+    s = {"scale": (None,)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=jnp.float32)
+        s["bias"] = (None,)
+    return p, s
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings (applied in fp32; positions may reach 2^19)
+# ----------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, base: float) -> jnp.ndarray:
+    """x: (..., S, H, D) with positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    # cast halves BEFORE the concat: the full (B,S,H,D) tensor then never
+    # exists at f32 — halves bytes through any downstream collective/remat
+    out = jnp.concatenate(
+        [
+            (x1 * cos - x2 * sin).astype(x.dtype),
+            (x2 * cos + x1 * sin).astype(x.dtype),
+        ],
+        axis=-1,
+    )
+    return out
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(out, dtype=jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key) -> Tuple[Params, Specs]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(k1, (d, h, hd), dt),
+        "wk": _dense_init(k2, (d, kv, hd), dt),
+        "wv": _dense_init(k3, (d, kv, hd), dt),
+        "wo": _dense_init(k4, (h, hd, d), dt, scale=_INIT_SCALE / np.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    s = {
+        "wq": (None, "model", None),
+        "wk": (None, "model", None),
+        "wv": (None, "model", None),
+        "wo": ("model", None, None),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype=jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), dtype=jnp.float32)
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    return p, s
+
+
+def _qk_norm(v: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    f = v.astype(jnp.float32)
+    f = f * jax.lax.rsqrt(jnp.mean(f * f, axis=-1, keepdims=True) + 1e-6)
+    return (f * scale).astype(v.dtype)
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    causal: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """(..., S_q, S_kv) additive mask in fp32."""
+    dq = q_pos[..., :, None]
+    dk = kv_pos[..., None, :]
+    ok = jnp.ones(dq.shape[:-1] + (dk.shape[-1],), dtype=bool)
+    if causal:
+        ok = ok & (dk <= dq)
+    if window is not None:
+        ok = ok & (dk > dq - window)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,                       # (B, S, d)
+    positions: jnp.ndarray,               # (B, S)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    rope_base: Optional[float] = None,
+    kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+    # kv_cache: (k, v, cache_positions) with k/v (B, S_c, n_kv, hd)
+    xattn_kv: Optional[jnp.ndarray] = None,   # cross-attention memory (B, M, d)
+    repeat_kv: bool = False,
+    # repeat_kv: materialize k/v at full head count so the head dim shards
+    # over the model axis when n_kv doesn't divide it (e.g. grok kv=8, tp=16)
+    head_constrain=None,
+    # optional callable pinning the head dim of (B,S,H,D) tensors to the
+    # model axis — GSPMD cannot propagate head sharding through the
+    # broadcast+reshape that jnp.repeat lowers to, and falls back to
+    # gathering full-head q/dq (observed 8.6s/step on command-r)
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]]:
+    B, S, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    base = rope_base if rope_base is not None else cfg.rope_base
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = xattn_kv if xattn_kv is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"])
+        k = _qk_norm(k, p["k_norm"])
+
+    if xattn_kv is None and base > 0:
+        q = rope(q, positions, base)
+        kv_positions = positions
+        k = rope(k, kv_positions, base)
+    else:
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(src.shape[1])[None], (B, src.shape[1])
+        )
+
+    new_cache = None
+    use_cache_for_scores = False
+    if kv_cache is not None:
+        ck, cv, cpos = kv_cache  # (B, S_c, kv, hd), cpos (B, S_c)
+        s_c = ck.shape[1]
+        kw, vw, pw = k, v, positions
+        if S > s_c:
+            # prefill longer than the (windowed) cache: only the last s_c
+            # positions can survive; avoid duplicate-slot scatter writes.
+            kw, vw, pw = k[:, -s_c:], v[:, -s_c:], positions[:, -s_c:]
+        # ring-buffer write at slot = position mod cache length
+        slot = pw % s_c                                          # (B, S')
+        bidx = jnp.arange(B)[:, None]
+        ck = ck.at[bidx, slot].set(kw)
+        cv = cv.at[bidx, slot].set(vw)
+        cpos = cpos.at[bidx, slot].set(pw)
+        new_cache = (ck, cv, cpos)
+        # Decode (S small) attends over the cache; prefill (S > 1) attends
+        # over the in-flight k/v so early queries see their own neighborhood
+        # even when the ring cache is shorter than the prompt.
+        use_cache_for_scores = S == 1
+        if use_cache_for_scores:
+            k, v, kv_positions = ck, cv, cpos
+
+    masked = xattn_kv is None
+
+    def core(q_c: jnp.ndarray, qpos_c: Optional[jnp.ndarray]) -> jnp.ndarray:
+        """Attention for one query chunk against the full k/v."""
+        s_c = q_c.shape[1]
+        bias = None
+        if masked:
+            bias = _mask_bias(qpos_c, kv_positions, causal, window)
+            if use_cache_for_scores:
+                # never attend to never-written slots (cpos initialized -1)
+                bias = bias + jnp.where(kv_positions >= 0, 0.0, -1e30)[
+                    :, None, :
+                ].astype(jnp.float32)
+        if repeat_kv and h != kv:
+            # full-head layout: shardable over the model axis on heads
+            kk = jnp.repeat(k, h // kv, axis=2)
+            vv = jnp.repeat(v, h // kv, axis=2)
+            if head_constrain is not None:
+                kk = head_constrain(kk)
+                vv = head_constrain(vv)
+            scores = jnp.einsum("bshk,bthk->bhst", q_c, kk).astype(jnp.float32)
+            scores = scores / np.sqrt(hd)
+            if cfg.logit_softcap:
+                cc = cfg.logit_softcap
+                scores = jnp.tanh(scores / cc) * cc
+            if bias is not None:
+                scores = scores + bias[:, None, :, :]
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            return jnp.einsum("bhst,bthk->bshk", probs, vv)
+        # grouped heads: (B, s_c, kv, q_per_kv, hd)
+        qg = q_c.reshape(B, s_c, kv, h // kv, hd)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+        scores = scores / np.sqrt(hd)
+        if cfg.logit_softcap:
+            cc = cfg.logit_softcap
+            scores = jnp.tanh(scores / cc) * cc
+        if bias is not None:
+            scores = scores + bias[:, None, None, :, :]
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+        return ctx.reshape(B, s_c, h, hd)
+
+    # Query chunking: bound the live (s_c × T) score tensor — exact math
+    # (softmax rows are independent); the memory analogue of FlashAttention
+    # row-blocking, expressed in XLA (the Pallas kernel is the TPU-native
+    # version, see repro/kernels/swa_attention).
+    CK = 1024
+    if S > 2 * CK and S % CK == 0:
+        qs = q.reshape(B, S // CK, CK, h, hd).swapaxes(0, 1)
+        ps = positions.reshape(B, S // CK, CK).swapaxes(0, 1)
+
+        def chunk_fn(_, inp):
+            q_c, pos_c = inp
+            return None, core(q_c, pos_c)
+
+        # remat per chunk: the bwd recomputes this chunk's scores/probs
+        # instead of saving (S/CK) live (CK × T) probability tensors
+        chunk_fn = jax.checkpoint(
+            chunk_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        _, ctxs = jax.lax.scan(chunk_fn, None, (qs, ps))
+        ctx = ctxs.swapaxes(0, 1).reshape(B, S, h, hd)
+    else:
+        ctx = core(q, positions)
+
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Tuple[Params, Specs]:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        p = {
+            "wi": _dense_init(k1, (d, f), dt),
+            "wg": _dense_init(k2, (d, f), dt),
+            "wo": _dense_init(k3, (f, d), dt, scale=_INIT_SCALE / np.sqrt(2 * max(cfg.n_layers, 1))),
+        }
+        s = {"wi": (None, "model"), "wg": (None, "model"), "wo": ("model", None)}
+    else:
+        p = {
+            "wi": _dense_init(k1, (d, f), dt),
+            "wo": _dense_init(k3, (f, d), dt, scale=_INIT_SCALE / np.sqrt(2 * max(cfg.n_layers, 1))),
+        }
+        s = {"wi": (None, "model"), "wo": ("model", None)}
+    return p, s
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "swiglu":
+        hidden = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif cfg.act == "geglu":
+        hidden = jax.nn.gelu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        hidden = jax.nn.gelu(x @ p["wi"])
+    return hidden @ p["wo"]
+
+
+# ----------------------------------------------------------------------
+# Embeddings (padded vocab, §DESIGN divisibility policy)
+# ----------------------------------------------------------------------
+
+
+def init_embedding(cfg: ModelConfig, key) -> Tuple[Params, Specs]:
+    v = cfg.padded_vocab()
+    dt = jnp.dtype(cfg.dtype)
+    p = {"table": _dense_init(key, (v, cfg.d_model), dt)}
+    s = {"table": ("model", None)}
+    if not cfg.tie_embeddings:
+        key2 = jax.random.fold_in(key, 7)
+        p["unembed"] = _dense_init(key2, (cfg.d_model, v), dt)
+        s["unembed"] = (None, "model")
+    return p, s
+
+
+def embed(cfg: ModelConfig, p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def logits(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, p["table"])
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+    # mask padded vocab entries
+    v = cfg.padded_vocab()
+    if v != cfg.vocab:
+        pad = jnp.full((v - cfg.vocab,), -1e30, dtype=out.dtype)
+        out = out.at[..., cfg.vocab :].set(pad)
+    return out
+
+
+def softmax_xent(
+    logits_: jnp.ndarray, labels: jnp.ndarray, vocab: int
+) -> jnp.ndarray:
+    """Mean cross-entropy; labels < 0 are masked out."""
+    lf = logits_.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def fused_xent(
+    cfg: ModelConfig,
+    embed_p: Params,
+    x: jnp.ndarray,          # (B, S, d) final hidden states
+    labels: jnp.ndarray,     # (B, S), < 0 masked
+    chunk: int = 512,
+    logits_constrain=None,   # pin per-chunk logits vocab-sharded (GSPMD
+                             # otherwise replicates V when the embedding is
+                             # FSDP-gathered — 8.6GB f32/chunk on gemma3)
+) -> jnp.ndarray:
+    """Sequence-chunked projection + cross-entropy.
+
+    Never materializes the full (B, S, V) logits — per chunk the live set is
+    (B, chunk, V) (vocab-sharded under the mesh). The label log-prob uses an
+    iota-mask sum instead of take_along_axis so a vocab-sharded logits dim
+    reduces with one psum instead of an all-gather. Mandatory for the 131k-
+    and 262k-vocab cells where f32 logits alone exceed HBM.
+    """
+    B, S, d = x.shape
+    if S % chunk or S <= chunk:
+        lg = logits(cfg, embed_p, x)
+        return softmax_xent(lg, labels, cfg.vocab)
+    nc = S // chunk
+    xs = x.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def chunk_fn(carry, inp):
+        xc, lc = inp
+        lg = logits(cfg, embed_p, xc)                        # (B, ck, V)
+        if logits_constrain is not None:
+            lg = logits_constrain(lg)
+        lg = lg.astype(jnp.float32)
+        m = jnp.max(lg, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+        v = lg.shape[-1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, (B, chunk, v), 2)
+        sel = jnp.where(iota == jnp.maximum(lc, 0)[..., None], lg, 0.0)
+        ll = jnp.sum(sel, axis=-1)
+        mask = (lc >= 0).astype(jnp.float32)
+        nll_sum, n = carry
+        return (
+            nll_sum + jnp.sum((lse - ll) * mask),
+            n + jnp.sum(mask),
+        ), None
+
+    body = jax.checkpoint(
+        chunk_fn, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    (nll_sum, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xs, ls)
+    )
+    return nll_sum / jnp.maximum(n, 1.0)

@@ -1,0 +1,776 @@
+"""Unified LM over heterogeneous block stacks.
+
+A model is a sequence of *runs* — (block kind, count) segments. Homogeneous
+segments are executed with ``lax.scan`` over stacked parameters (small HLO,
+fast multi-hundred-layer compiles); singleton segments are applied directly.
+This one mechanism expresses every assigned architecture:
+
+  dense / moe       1 run of uniform blocks
+  gemma3            [5×swa, 1×global] × 10 + 2×swa      (5:1 local:global)
+  h2o-danube        1 run of swa blocks (Mistral-style SWA)
+  hymba             swa-hybrid runs with 3 global-attention hybrid layers
+  xlstm             [7×mlstm, 1×slstm] × 6
+  whisper           encoder run (bidir) + decoder run (causal + cross-attn)
+  internvl2         vision-prefix decoder (patch embeddings + tokens)
+
+API (all jit-able, cache pytrees are explicit):
+  init(key) -> params
+  train_loss(params, batch) -> scalar
+  prefill(params, batch, cache) -> (logits, cache)
+  decode_step(params, tokens, positions, cache) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from .config import Family, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    kind: str            # attn | swa | hybrid | hybrid_swa | mlstm | slstm | enc | dec
+    count: int
+
+
+@dataclasses.dataclass
+class MeshInfo:
+    """Mesh context threaded through the model (None = single device)."""
+
+    mesh: Any = None
+    dp_axes: Tuple[str, ...] = ()
+    tp_axis: Optional[str] = None
+    tp_size: int = 1
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return self.dp_axes + ((self.tp_axis,) if self.tp_axis else ())
+
+
+def build_runs(cfg: ModelConfig) -> List[Run]:
+    n = cfg.n_layers
+    if cfg.family in (Family.DENSE, Family.MOE, Family.VLM):
+        if cfg.window and cfg.global_every:
+            runs: List[Run] = []
+            cycle = cfg.global_every
+            full_cycles, rest = divmod(n, cycle)
+            for _ in range(full_cycles):
+                runs.append(Run("swa", cycle - 1))
+                runs.append(Run("attn", 1))
+            if rest:
+                runs.append(Run("swa", rest))
+            return _merge(runs)
+        kind = "swa" if cfg.window else "attn"
+        return [Run(kind, n)]
+    if cfg.family is Family.HYBRID:
+        # hymba: global full attention on first / middle / last layer,
+        # sliding-window + mamba everywhere else.
+        g = sorted({0, n // 2, n - 1})
+        runs = []
+        prev = 0
+        for gi in g:
+            if gi > prev:
+                runs.append(Run("hybrid_swa", gi - prev))
+            runs.append(Run("hybrid", 1))
+            prev = gi + 1
+        if prev < n:
+            runs.append(Run("hybrid_swa", n - prev))
+        return _merge(runs)
+    if cfg.family is Family.SSM:
+        every = cfg.ssm.slstm_every
+        if not every:
+            return [Run("mlstm", n)]
+        runs = []
+        cyc, rest = divmod(n, every)
+        for _ in range(cyc):
+            runs.append(Run("mlstm", every - 1))
+            runs.append(Run("slstm", 1))
+        if rest:
+            runs.append(Run("mlstm", rest))
+        return _merge(runs)
+    if cfg.family is Family.ENCDEC:
+        return [Run("dec", n)]
+    raise ValueError(cfg.family)
+
+
+def _merge(runs: List[Run]) -> List[Run]:
+    out: List[Run] = []
+    for r in runs:
+        if r.count <= 0:
+            continue
+        if out and out[-1].kind == r.kind:
+            out[-1] = Run(r.kind, out[-1].count + r.count)
+        else:
+            out.append(r)
+    return out
+
+
+# ----------------------------------------------------------------------
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, mesh_info: Optional[MeshInfo] = None,
+                 dense_moe: bool = False, fsdp: bool = False,
+                 sp_outputs: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh_info or MeshInfo()
+        self.fsdp = fsdp
+        # constrain sublayer outputs to the sequence-sharded layout so GSPMD
+        # emits reduce-scatter instead of all-reduce after TP contractions
+        self.sp_outputs = sp_outputs
+        self.runs = build_runs(cfg)
+        self.enc_runs = [Run("enc", cfg.n_enc_layers)] if cfg.n_enc_layers else []
+        self.dense_moe = dense_moe  # exact reference MoE (tests)
+        tp = self.mesh.tp_size
+        # GQA head layout: repeat kv to full heads when the kv-head count
+        # doesn't divide the model axis but the q-head count does.
+        self.repeat_kv = (
+            tp > 1 and cfg.n_heads % tp == 0 and cfg.n_kv % tp != 0
+        )
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def _init_block(self, kind: str, key) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p: Dict[str, Any] = {}
+        s: Dict[str, Any] = {}
+        p["norm1"], s["norm1"] = L.init_norm(cfg, cfg.d_model)
+        if kind in ("attn", "swa", "enc", "dec", "hybrid", "hybrid_swa"):
+            p["attn"], s["attn"] = L.init_attention(cfg, ks[0])
+        if kind == "dec":
+            p["xnorm"], s["xnorm"] = L.init_norm(cfg, cfg.d_model)
+            p["xattn"], s["xattn"] = L.init_attention(cfg, ks[1])
+        if kind in ("hybrid", "hybrid_swa"):
+            p["mamba"], s["mamba"] = S.init_mamba(cfg, ks[2])
+            p["attn_out_norm"], s["attn_out_norm"] = L.init_norm(cfg, cfg.d_model)
+            p["ssm_out_norm"], s["ssm_out_norm"] = L.init_norm(cfg, cfg.d_model)
+        if kind == "mlstm":
+            p["cell"], s["cell"] = S.init_mlstm(cfg, ks[3])
+        if kind == "slstm":
+            p["cell"], s["cell"] = S.init_slstm(cfg, ks[3])
+        if cfg.d_ff:
+            p["norm2"], s["norm2"] = L.init_norm(cfg, cfg.d_model)
+            if cfg.moe is not None and kind in ("attn", "swa"):
+                p["moe"], s["moe"] = M.init_moe(cfg, ks[4])
+            else:
+                p["mlp"], s["mlp"] = L.init_mlp(cfg, ks[4])
+        return p, s
+
+    def init(self, key) -> Dict:
+        params, _ = self.init_with_specs(key)
+        return params
+
+    def init_with_specs(self, key) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4 + len(self.runs))
+        params: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+        params["embed"], specs["embed"] = L.init_embedding(cfg, keys[0])
+        if cfg.max_position and cfg.rope_base == 0:
+            params["pos_embed"] = L._dense_init(
+                keys[1], (cfg.max_position, cfg.d_model), jnp.dtype(cfg.dtype), scale=0.01
+            )
+            specs["pos_embed"] = (None, None)
+        params["final_norm"], specs["final_norm"] = L.init_norm(cfg, cfg.d_model)
+
+        def init_runs(runs: List[Run], key) -> Tuple[List, List]:
+            ps, ss = [], []
+            for i, run in enumerate(runs):
+                rk = jax.random.fold_in(key, i)
+                if run.count == 1:
+                    p, sp = self._init_block(run.kind, rk)
+                else:
+                    blocks = [
+                        self._init_block(run.kind, jax.random.fold_in(rk, j))
+                        for j in range(run.count)
+                    ]
+                    p = jax.tree.map(lambda *xs: jnp.stack(xs), *[b[0] for b in blocks])
+                    sp = jax.tree.map(
+                        lambda spec: (None,) + tuple(spec),
+                        blocks[0][1],
+                        is_leaf=lambda x: isinstance(x, tuple),
+                    )
+                ps.append(p)
+                ss.append(sp)
+            return ps, ss
+
+        params["runs"], specs["runs"] = init_runs(self.runs, keys[2])
+        if self.enc_runs:
+            pe, se = init_runs(self.enc_runs, keys[3])
+            pn, sn = L.init_norm(cfg, cfg.d_model)
+            params["enc"] = {"runs": pe, "final_norm": pn}
+            specs["enc"] = {"runs": se, "final_norm": sn}
+        return params, specs
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def _block_cache(
+        self, kind: str, batch: int, seq_len: int, abstract: bool = False
+    ) -> Any:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        kv, hd = cfg.n_kv, cfg.head_dim
+
+        if abstract:
+            def zeros(shape, dtype):
+                return jax.ShapeDtypeStruct(shape, dtype)
+            full = lambda shape, v, dtype: jax.ShapeDtypeStruct(shape, dtype)
+            ones = zeros
+        else:
+            zeros = lambda shape, dtype: jnp.zeros(shape, dtype=dtype)
+            full = lambda shape, v, dtype: jnp.full(shape, v, dtype=dtype)
+            ones = lambda shape, dtype: jnp.ones(shape, dtype=dtype)
+
+        def kv_cache(length):
+            return (
+                zeros((batch, length, kv, hd), dt),
+                zeros((batch, length, kv, hd), dt),
+                full((batch, length), -1, jnp.int32),
+            )
+
+        win = cfg.window or seq_len
+        if kind == "attn":
+            return kv_cache(seq_len)
+        if kind == "swa":
+            return kv_cache(min(win, seq_len))
+        if kind in ("hybrid", "hybrid_swa"):
+            di = cfg.ssm.expand * cfg.d_model
+            ssm = (
+                zeros((batch, di, cfg.ssm.d_state), dt),
+                zeros((batch, cfg.ssm.d_conv - 1, di), dt),
+            )
+            length = seq_len if kind == "hybrid" else min(win, seq_len)
+            return (kv_cache(length), ssm)
+        if kind == "mlstm":
+            h = cfg.n_heads
+            hd2 = cfg.d_model // h
+            return (
+                zeros((batch, h, hd2, hd2), jnp.float32),
+                zeros((batch, h, hd2), jnp.float32),
+                full((batch, h), -1e30, jnp.float32),
+            )
+        if kind == "slstm":
+            h = cfg.n_heads
+            hd2 = cfg.d_model // h
+            z = lambda: zeros((batch, h, hd2), jnp.float32)
+            return (z(), ones((batch, h, hd2), jnp.float32), z(), z())
+        if kind == "dec":
+            mem = cfg.frontend_len or 1
+            return (
+                kv_cache(seq_len),
+                (
+                    zeros((batch, mem, kv, hd), dt),
+                    zeros((batch, mem, kv, hd), dt),
+                ),
+            )
+        raise ValueError(kind)
+
+    def init_cache(self, batch: int, seq_len: int, abstract: bool = False) -> List:
+        caches = []
+        for run in self.runs:
+            c = self._block_cache(run.kind, batch, seq_len, abstract)
+            if run.count > 1:
+                if abstract:
+                    c = jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(
+                            (run.count,) + x.shape, x.dtype
+                        ),
+                        c,
+                    )
+                else:
+                    c = jax.tree.map(
+                        lambda x: jnp.broadcast_to(x, (run.count,) + x.shape), c
+                    )
+            caches.append(c)
+        return caches
+
+    def param_shapes_and_specs(self, key):
+        """(ShapeDtypeStruct tree, logical spec tree) without allocating.
+
+        The spec tree is static Python data built during tracing and
+        captured via a side channel (eval_shape cannot return strings)."""
+        box = []
+
+        def f(k):
+            p, s = self.init_with_specs(k)
+            box.append(s)
+            return p
+
+        shapes = jax.eval_shape(f, key)
+        return shapes, box[0]
+
+    # ------------------------------------------------------------------
+    # blocks
+    # ------------------------------------------------------------------
+    def _sp_constrain(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Megatron-style sequence parallelism: at block boundaries the
+        activations (and therefore the remat-saved scan carries) live
+        sharded over the model axis on the sequence dim; GSPMD inserts the
+        all-gather before attention/FFN and the reduce-scatter after."""
+        mi = self.mesh
+        if mi.mesh is None or x.ndim != 3 or mi.tp_size <= 1:
+            return x
+        B, S, _ = x.shape
+        if S % mi.tp_size != 0 or S == 1:
+            return x
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        dsize = 1
+        for a in mi.dp_axes:
+            dsize *= mi.mesh.shape[a]
+        bspec = mi.dp_axes if (dsize > 1 and B % dsize == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mi.mesh, P(bspec, mi.tp_axis, None))
+        )
+
+    def _ffn(self, p: Dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if not cfg.d_ff:
+            return x, aux
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if "moe" in p:
+            if self.dense_moe:
+                out, aux = M.apply_moe_dense(cfg, p["moe"], h)
+            else:
+                out, aux = self._moe(p["moe"], h)
+        else:
+            out = L.apply_mlp(cfg, p["mlp"], h)
+        if self.sp_outputs:
+            out = self._sp_constrain(out)
+        return x + out, aux
+
+    def _moe(self, p: Dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg, mi = self.cfg, self.mesh
+        if mi.mesh is None:
+            info = M.MoEMeshInfo()
+            return M.apply_moe(cfg, p, x, info, seq_sharded=False)
+        from jax.sharding import PartitionSpec as P
+        from jax import shard_map
+
+        ep = cfg.moe.num_experts % mi.tp_size == 0
+        # tokens may be sequence-sharded over the model axis ONLY in the EP
+        # layout (the all_to_all regroups them per expert). In the TP layout
+        # every model shard holds 1/tp of each expert's d_ff, so all shards
+        # must see the SAME tokens for the final psum over f-partials to be
+        # a contraction, not a mix of disjoint token sets.
+        seq_ok = ep and x.shape[1] % mi.tp_size == 0 and x.shape[1] > 1
+        info = M.MoEMeshInfo(
+            data_axes=mi.dp_axes,
+            model_axis=mi.tp_axis,
+            model_size=mi.tp_size,
+            pmean_axes=mi.all_axes,
+        )
+        xs = P(mi.dp_axes, mi.tp_axis if seq_ok else None, None)
+        dp = 1
+        for a in mi.dp_axes:
+            dp *= mi.mesh.shape[a]
+        fsdp_axis = None
+        if ep:
+            # expert-parallel: expert dim sharded on all three weights
+            wspec = P(mi.tp_axis, None, None)
+            wo_spec = P(mi.tp_axis, None, None)
+        elif (
+            self.fsdp and "data" in mi.mesh.shape
+            and mi.mesh.shape["data"] > 1
+            and cfg.d_model % mi.mesh.shape["data"] == 0
+        ):
+            # per-expert TP + FSDP: weights stay data-sharded on d at entry;
+            # apply_moe gathers one expert at a time (see moe.py)
+            fsdp_axis = "data"
+            wspec = P(None, "data", mi.tp_axis)
+            wo_spec = P(None, mi.tp_axis, "data")
+        else:
+            # per-expert TP: wi/wg (E, d, f) shard f; wo (E, f, d) shards f
+            wspec = P(None, None, mi.tp_axis)
+            wo_spec = P(None, mi.tp_axis, None)
+        info = dataclasses.replace(info, fsdp_axis=fsdp_axis)
+        pspec = {
+            "router": P(None, None),
+            "wi": wspec,
+            "wg": wspec,
+            "wo": wo_spec,
+        }
+        if cfg.moe.num_shared:
+            pspec["shared_wi"] = P(None, mi.tp_axis)
+            pspec["shared_wg"] = P(None, mi.tp_axis)
+            pspec["shared_wo"] = P(mi.tp_axis, None)
+        fn = shard_map(
+            partial(M.apply_moe, cfg, info=info, seq_sharded=seq_ok),
+            mesh=mi.mesh,
+            in_specs=(pspec, xs),
+            out_specs=(xs, P()),
+            check_vma=False,
+        )
+        return fn(p, x)
+
+    def _block(
+        self,
+        kind: str,
+        p: Dict,
+        x: jnp.ndarray,
+        positions: jnp.ndarray,
+        cache: Any,
+        global_layer_override: bool = False,
+    ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+        cfg = self.cfg
+        x = self._sp_constrain(x)
+        aux = jnp.zeros((), jnp.float32)
+        win = cfg.window if kind in ("swa", "hybrid_swa") else None
+        rope_base = (
+            cfg.rope_base_global
+            if (kind == "attn" and cfg.rope_base_global)
+            else cfg.rope_base
+        )
+
+        if kind in ("attn", "swa"):
+            h = L.apply_norm(cfg, p["norm1"], x)
+            a, new_cache = L.attention(
+                cfg, p["attn"], h, positions,
+                causal=True, window=win, rope_base=rope_base, kv_cache=cache,
+                repeat_kv=self.repeat_kv, head_constrain=self._head_constrain,
+            )
+            if self.sp_outputs:
+                a = self._sp_constrain(a)
+            if cfg.parallel_block and cfg.d_ff:
+                if "moe" in p:
+                    f, aux = self._moe(p["moe"], h)
+                else:
+                    f = L.apply_mlp(cfg, p["mlp"], h)
+                if self.sp_outputs:
+                    f = self._sp_constrain(f)
+                x = x + a + f
+            else:
+                x = x + a
+                x, aux = self._ffn(p, x)
+            return x, new_cache, aux
+
+        if kind in ("hybrid", "hybrid_swa"):
+            h = L.apply_norm(cfg, p["norm1"], x)
+            a, new_kv = L.attention(
+                cfg, p["attn"], h, positions,
+                causal=True, window=win, rope_base=rope_base,
+                kv_cache=cache[0] if cache is not None else None,
+                repeat_kv=self.repeat_kv, head_constrain=self._head_constrain,
+            )
+            mstate = cache[1] if cache is not None else None
+            mm, new_ssm = S.apply_mamba(cfg, p["mamba"], h, mstate)
+            fused = 0.5 * (
+                L.apply_norm(cfg, p["attn_out_norm"], a)
+                + L.apply_norm(cfg, p["ssm_out_norm"], mm)
+            )
+            x = x + fused
+            x, aux = self._ffn(p, x)
+            nc = (new_kv, new_ssm) if cache is not None else None
+            return x, nc, aux
+
+        if kind in ("mlstm", "slstm"):
+            h = L.apply_norm(cfg, p["norm1"], x)
+            apply = S.apply_mlstm if kind == "mlstm" else S.apply_slstm
+            out, new_state = apply(cfg, p["cell"], h, cache)
+            x = x + out
+            x, aux = self._ffn(p, x)
+            return x, new_state if cache is not None else None, aux
+
+        if kind == "enc":
+            h = L.apply_norm(cfg, p["norm1"], x)
+            a, _ = L.attention(
+                cfg, p["attn"], h, positions, causal=False, rope_base=0.0
+            )
+            x = x + a
+            x, aux = self._ffn(p, x)
+            return x, None, aux
+
+        if kind == "dec":
+            h = L.apply_norm(cfg, p["norm1"], x)
+            a, new_kv = L.attention(
+                cfg, p["attn"], h, positions, causal=True, rope_base=0.0,
+                kv_cache=cache[0] if cache is not None else None,
+            )
+            x = x + a
+            hx = L.apply_norm(cfg, p["xnorm"], x)
+            if cache is not None and cache[1] is not None and cache[1][0].ndim == 4:
+                ck, cv = cache[1]
+                xa = self._cross_from_cache(p["xattn"], hx, ck, cv)
+                new_cross = (ck, cv)
+            else:
+                raise ValueError("dec block needs encoder memory in cache")
+            x = x + xa
+            x, aux = self._ffn(p, x)
+            return x, (new_kv, new_cross), aux
+
+        raise ValueError(kind)
+
+    def _cross_from_cache(self, p, x, ck, cv):
+        """Cross-attention against precomputed (k, v) encoder memory."""
+        cfg = self.cfg
+        B, S, d = x.shape
+        h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.qk_norm:
+            q = L._qk_norm(q, p["q_norm"])
+        qg = q.reshape(B, S, kv, h // kv, hd)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, ck).astype(jnp.float32)
+        scores = scores / np.sqrt(hd)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bkgst,btkh->bskgh", probs, cv).reshape(B, S, h, hd)
+        return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+
+    def cross_kv(self, p_run_list, memory: jnp.ndarray) -> List:
+        """Precompute decoder cross-attention k/v from encoder output."""
+        cfg = self.cfg
+        out = []
+        for run, p in zip(self.runs, p_run_list):
+            def one(pb):
+                k = jnp.einsum("bsd,dhk->bshk", memory, pb["xattn"]["wk"])
+                v = jnp.einsum("bsd,dhk->bshk", memory, pb["xattn"]["wv"])
+                if cfg.qk_norm:
+                    k = L._qk_norm(k, pb["xattn"]["k_norm"])
+                return k, v
+            if run.count == 1:
+                out.append(one(p))
+            else:
+                out.append(jax.vmap(one, in_axes=0)(p))
+        return out
+
+    # ------------------------------------------------------------------
+    # stacks
+    # ------------------------------------------------------------------
+    def _apply_runs(
+        self,
+        runs: List[Run],
+        run_params: List,
+        x: jnp.ndarray,
+        positions: jnp.ndarray,
+        caches: Optional[List],
+        remat: bool,
+    ) -> Tuple[jnp.ndarray, Optional[List], jnp.ndarray]:
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches: Optional[List] = [] if caches is not None else None
+
+        for ri, (run, p) in enumerate(zip(runs, run_params)):
+            cache = caches[ri] if caches is not None else None
+
+            def body(x, p, cache):
+                return self._block(run.kind, p, x, positions, cache)
+
+            if remat and self.cfg.remat != "none":
+                policy = (
+                    jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                    if self.cfg.remat == "dots"
+                    else jax.checkpoint_policies.nothing_saveable
+                )
+                body = jax.checkpoint(body, policy=policy)
+
+            if run.count == 1:
+                x, nc, aux = body(x, p, cache)
+                # constrain OUTSIDE the checkpoint: the next block's saved
+                # residual is then sequence-sharded (remat boundaries block
+                # GSPMD's bidirectional propagation of the in-block
+                # constraint — observed 0.6-0.8 GB/layer of replicated
+                # saved activations on gemma3/internvl2 otherwise)
+                x = self._sp_constrain(x)
+                aux_total = aux_total + aux
+                if new_caches is not None:
+                    new_caches.append(nc)
+            else:
+                def scan_body(carry, inp):
+                    x, aux_acc = carry
+                    pl, cl = inp
+                    x, nc, aux = body(x, pl, cl)
+                    x = self._sp_constrain(x)
+                    return (x, aux_acc + aux), nc
+
+                (x, aux_total), ncs = jax.lax.scan(
+                    scan_body, (x, aux_total), (p, cache)
+                )
+                if new_caches is not None:
+                    new_caches.append(ncs)
+        return x, new_caches, aux_total
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+        """Returns (x, positions, n_prefix) for decoder-side input."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.embed(cfg, params["embed"], tokens)
+        n_prefix = 0
+        if cfg.family is Family.VLM and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            n_prefix = batch["patches"].shape[1]
+        B, T = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        if cfg.rope_base == 0 and "pos_embed" in params:
+            x = x + params["pos_embed"][:T][None]
+        return x, positions, n_prefix
+
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+        cfg = self.cfg
+        B, T, _ = frames.shape
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = x + L.sinusoidal_positions(T, cfg.d_model)[None].astype(x.dtype)
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        x, _, _ = self._apply_runs(
+            self.enc_runs, params["enc"]["runs"], x, pos, None, remat=False
+        )
+        return L.apply_norm(cfg, params["enc"]["final_norm"], x)
+
+    def train_loss(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        x, positions, n_prefix = self._embed_inputs(params, batch)
+
+        if cfg.family is Family.ENCDEC:
+            memory = self.encode(params, batch["frames"])
+            cross = self.cross_kv(params["runs"], memory)
+            x, _, aux = self._apply_runs_encdec(
+                params["runs"], x, positions, cross, remat=True
+            )
+        else:
+            x, _, aux = self._apply_runs(
+                self.runs, params["runs"], x, positions, None, remat=True
+            )
+        x = self._sp_constrain(x)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        # loss: batch-sharded activations, sequence-chunked projection with
+        # vocab-sharded logits — full (B,S,V) f32 never materializes
+        x = self._dp_constrain(x)
+        loss = L.fused_xent(
+            cfg, params["embed"], x, batch["labels"],
+            logits_constrain=self._logits_constrain,
+        )
+        return loss + aux
+
+    def _logits_constrain(self, lg: jnp.ndarray) -> jnp.ndarray:
+        mi = self.mesh
+        if mi.mesh is None or mi.tp_size <= 1 or lg.shape[-1] % mi.tp_size:
+            return lg
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        dsize = 1
+        for a in mi.dp_axes:
+            dsize *= mi.mesh.shape[a]
+        bspec = mi.dp_axes if (dsize > 1 and lg.shape[0] % dsize == 0) else None
+        return jax.lax.with_sharding_constraint(
+            lg, NamedSharding(mi.mesh, P(bspec, None, mi.tp_axis))
+        )
+
+    def _head_constrain(self, t: jnp.ndarray) -> jnp.ndarray:
+        """Pin (B, S, H, D) tensors to head-sharded layout (see layers).
+
+        Measured NEGATIVE on command-r (GSPMD reshards elsewhere; §Perf log)
+        — enabled only with sp_outputs experiments."""
+        mi = self.mesh
+        if not self.sp_outputs:
+            return t
+        if mi.mesh is None or t.ndim != 4 or mi.tp_size <= 1:
+            return t
+        if t.shape[2] % mi.tp_size:
+            return t
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        dsize = 1
+        for a in mi.dp_axes:
+            dsize *= mi.mesh.shape[a]
+        bspec = mi.dp_axes if (dsize > 1 and t.shape[0] % dsize == 0) else None
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(mi.mesh, P(bspec, None, mi.tp_axis, None))
+        )
+
+    def _dp_constrain(self, x: jnp.ndarray) -> jnp.ndarray:
+        mi = self.mesh
+        if mi.mesh is None or x.ndim != 3:
+            return x
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        dsize = 1
+        for a in mi.dp_axes:
+            dsize *= mi.mesh.shape[a]
+        bspec = mi.dp_axes if (dsize > 1 and x.shape[0] % dsize == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mi.mesh, P(bspec, None, None))
+        )
+
+    def _apply_runs_encdec(self, run_params, x, positions, cross, remat):
+        """Decoder stack in training: self-attention without cache, cross
+        k/v precomputed per layer."""
+        aux_total = jnp.zeros((), jnp.float32)
+        for ri, (run, p) in enumerate(zip(self.runs, run_params)):
+            def body(x, p, ckv):
+                return self._block("dec", p, x, positions, (None, ckv))
+
+            if remat and self.cfg.remat != "none":
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                )
+            if run.count == 1:
+                x, _, aux = body(x, p, cross[ri])
+                aux_total += aux
+            else:
+                def scan_body(carry, inp):
+                    x, acc = carry
+                    pl, cl = inp
+                    x, _, aux = body(x, pl, cl)
+                    return (x, acc + aux), None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    scan_body, (x, aux_total), (p, cross[ri])
+                )
+        return x, None, aux_total
+
+    def prefill(
+        self, params, batch, cache: List, all_logits: bool = False
+    ) -> Tuple[jnp.ndarray, List]:
+        """``all_logits``: return logits for every position (ragged-cohort
+        serving gathers each slot's last TRUE position); default returns
+        only the final position (the cheap path the dry-run lowers)."""
+        cfg = self.cfg
+        x, positions, n_prefix = self._embed_inputs(params, batch)
+        if cfg.family is Family.ENCDEC:
+            memory = self.encode(params, batch["frames"])
+            cross = self.cross_kv(params["runs"], memory)
+            cache = [
+                (c[0], cr) for c, cr in zip(cache, cross)
+            ]
+        x, new_cache, _ = self._apply_runs(
+            self.runs, params["runs"], x, positions, cache, remat=False
+        )
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        lg = L.logits(cfg, params["embed"], x if all_logits else x[:, -1:])
+        return lg, new_cache
+
+    def decode_step(
+        self, params, tokens: jnp.ndarray, positions: jnp.ndarray, cache: List
+    ) -> Tuple[jnp.ndarray, List]:
+        """tokens (B, 1), positions (B, 1) absolute."""
+        cfg = self.cfg
+        x = L.embed(cfg, params["embed"], tokens)
+        if cfg.rope_base == 0 and "pos_embed" in params:
+            x = x + jnp.take(params["pos_embed"], positions[:, 0], axis=0)[:, None]
+        x, new_cache, _ = self._apply_runs(
+            self.runs, params["runs"], x, positions, cache, remat=False
+        )
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        lg = L.logits(cfg, params["embed"], x)
+        return lg, new_cache

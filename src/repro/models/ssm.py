@@ -1,0 +1,455 @@
+"""State-space / recurrent blocks: Mamba selective scan (hymba's parallel
+SSM heads) and xLSTM's mLSTM / sLSTM cells.
+
+Mamba uses a chunked scan: ``lax.scan`` over chunks carrying the (d_inner,
+d_state) state, with an associative scan inside each chunk — bounded memory
+at any sequence length (the long_500k path). Decode is a single recurrence
+step on the cached state, O(1) per token.
+
+mLSTM / sLSTM are implemented in their exact stabilized recurrent forms
+(``lax.scan`` over time). The chunkwise-parallel mLSTM formulation (GLA-style
+intra/inter-chunk split) is the TPU throughput optimization; the recurrent
+form has identical FLOP count in leading order, which is what the dry-run
+roofline measures — see EXPERIMENTS.md §Perf for the discussion.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import Params, Specs, _dense_init
+
+
+# ----------------------------------------------------------------------
+# Mamba selective SSM
+# ----------------------------------------------------------------------
+
+
+def init_mamba(cfg: ModelConfig, key, d_inner: Optional[int] = None) -> Tuple[Params, Specs]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = d_inner if d_inner is not None else s.expand * d
+    dt_rank = max(d // 16, 1)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": _dense_init(ks[1], (s.d_conv, di), dt, scale=0.5 / np.sqrt(s.d_conv)),
+        "conv_b": jnp.zeros((di,), dtype=dt),
+        "x_proj": _dense_init(ks[2], (di, dt_rank + 2 * s.d_state), dt),
+        "dt_proj": _dense_init(ks[3], (dt_rank, di), dt),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.random.default_rng(0).uniform(1e-3, 0.1, di))),
+            dtype=jnp.float32,
+        ),
+        "a_log": jnp.asarray(
+            np.log(np.arange(1, s.d_state + 1, dtype=np.float32))[None, :]
+            * np.ones((di, 1), np.float32)
+        ),
+        "d_skip": jnp.ones((di,), dtype=jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dt, scale=0.02 / np.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    spec = {
+        "in_proj": (None, "model"),
+        "conv_w": (None, "model"),
+        "conv_b": ("model",),
+        "x_proj": ("model", None),
+        "dt_proj": (None, "model"),
+        "dt_bias": ("model",),
+        "a_log": ("model", None),
+        "d_skip": ("model",),
+        "out_proj": ("model", None),
+    }
+    return p, spec
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time. x (B, L, di), w (k, di).
+
+    ``tail`` is the last (k-1) inputs from the previous call (decode cache).
+    Returns (y, new_tail).
+    """
+    k = w.shape[0]
+    B, L, di = x.shape
+    if tail is None:
+        tail = jnp.zeros((B, k - 1, di), dtype=x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)              # (B, L+k-1, di)
+    new_tail = xp[:, -(k - 1):] if k > 1 else tail
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xp[:, i : i + L] * w[i]
+    return y + b, new_tail
+
+
+def mamba_scan(
+    u: jnp.ndarray,        # (B, L, di) post-conv activations
+    delta: jnp.ndarray,    # (B, L, di) positive step sizes
+    Bmat: jnp.ndarray,     # (B, L, n) input matrix
+    Cmat: jnp.ndarray,     # (B, L, n) output matrix
+    A: jnp.ndarray,        # (di, n) negative
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,   # (B, di, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked selective scan. Returns (y (B, L, di), h_final)."""
+    Bsz, L, di = u.shape
+    n = A.shape[1]
+    ck = min(chunk, L)
+    pad = (-L) % ck
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // ck
+
+    # per-step decay a_t = exp(delta_t * A): (B, Lp, di, n)
+    def chunk_body(h, args):
+        uc, dc, bc, cc = args            # (B, ck, di), (B, ck, di), (B, ck, n) ×2
+        a = jnp.exp(dc[..., None] * A)                          # (B, ck, di, n)
+        bx = (dc * uc)[..., None] * bc[:, :, None, :]           # (B, ck, di, n)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        acc_a, acc_b = jax.lax.associative_scan(
+            combine, (a, bx), axis=1
+        )
+        hs = acc_a * h[:, None] + acc_b                         # (B, ck, di, n)
+        y = jnp.einsum("bldn,bln->bld", hs, cc)
+        return hs[:, -1], y
+
+    us = u.reshape(Bsz, nc, ck, di).swapaxes(0, 1)
+    ds = delta.reshape(Bsz, nc, ck, di).swapaxes(0, 1)
+    bs = Bmat.reshape(Bsz, nc, ck, n).swapaxes(0, 1)
+    cs = Cmat.reshape(Bsz, nc, ck, n).swapaxes(0, 1)
+    h0 = h0 if h0 is not None else jnp.zeros((Bsz, di, n), dtype=u.dtype)
+    chunk_body = jax.checkpoint(
+        chunk_body, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    h_final, ys = jax.lax.scan(chunk_body, h0, (us, ds, bs, cs))
+    y = ys.swapaxes(0, 1).reshape(Bsz, Lp, di)[:, :L]
+    return y, h_final
+
+
+def apply_mamba(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,                       # (B, L, d)
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns (out (B, L, d), (ssm_state, conv_tail))."""
+    s = cfg.ssm
+    B, L, _ = x.shape
+    di = p["in_proj"].shape[1] // 2
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    tail = state[1] if state is not None else None
+    xi, new_tail = _causal_conv(xi, p["conv_w"], p["conv_b"], tail)
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ p["x_proj"]
+    dt_rank = p["dt_proj"].shape[0]
+    dt_in, Bmat, Cmat = jnp.split(
+        proj, [dt_rank, dt_rank + s.d_state], axis=-1
+    )
+    delta = jax.nn.softplus(
+        (dt_in @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    ).astype(x.dtype)
+    A = -jnp.exp(p["a_log"]).astype(x.dtype)
+
+    h0 = state[0] if state is not None else None
+    y, h = mamba_scan(xi, delta, Bmat, Cmat, A, s.chunk, h0)
+    y = y + xi * p["d_skip"].astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, (h, new_tail)
+
+
+def _chunked_time_scan(step, carry, xs, chunk: int = 64):
+    """lax.scan with chunk-boundary checkpointing.
+
+    Exact-bwd recurrent cells must either store per-step residuals (O(L)
+    memory) or recompute; checkpointing every ``chunk`` steps stores only
+    boundary states + one chunk's residuals — the sqrt-remat trade for RNNs.
+    """
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ck = min(chunk, L)
+    if L % ck:
+        return jax.lax.scan(step, carry, xs)
+    nc = L // ck
+    xs_c = jax.tree.map(lambda a: a.reshape((nc, ck) + a.shape[1:]), xs)
+
+    def outer(c, x_c):
+        return jax.lax.scan(step, c, x_c)
+
+    outer = jax.checkpoint(
+        outer, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    carry, ys = jax.lax.scan(outer, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((L,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# ----------------------------------------------------------------------
+# xLSTM cells
+# ----------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ModelConfig, key) -> Tuple[Params, Specs]:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, hd), dt),
+        "wk": _dense_init(ks[1], (d, h, hd), dt),
+        "wv": _dense_init(ks[2], (d, h, hd), dt),
+        "w_if": _dense_init(ks[3], (d, 2 * h), jnp.float32, scale=0.02),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h,)), jnp.full((h,), 3.0)]
+        ).astype(jnp.float32),
+        "wo": _dense_init(ks[4], (h, hd, d), dt, scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+        "ogate": _dense_init(ks[5], (d, h, hd), dt),
+    }
+    # xLSTM head counts are tiny (4) — shard the VALUE side of the matrix
+    # memory instead: v (and the C state's value dim) split over the model
+    # axis; q/k replicated (the key contraction stays local), out-proj
+    # contracts the sharded dim (psum inserted by GSPMD).
+    s = {
+        "wq": (None, None, None),
+        "wk": (None, None, None),
+        "wv": (None, None, "model"),
+        "w_if": (None, None),
+        "b_if": (None,),
+        "wo": (None, "model", None),
+        "ogate": (None, None, "model"),
+    }
+    return p, s
+
+
+def apply_mlstm(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,                   # (B, L, d)
+    state: Optional[Tuple] = None,    # (C (B,h,hd,hd), n (B,h,hd), m (B,h))
+) -> Tuple[jnp.ndarray, Tuple]:
+    """Stabilized mLSTM recurrence (xLSTM eq. 19-27)."""
+    B, L, d = x.shape
+    h = p["wq"].shape[1]
+    hd = p["wq"].shape[2]
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"]) / np.sqrt(hd)
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"]) / np.sqrt(hd)
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    gates = (x.astype(jnp.float32) @ p["w_if"]) + p["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)       # (B, L, h) pre-activations
+    og = jax.nn.sigmoid(jnp.einsum("bld,dhk->blhk", x, p["ogate"]).astype(jnp.float32))
+
+    if state is None:
+        C0 = jnp.zeros((B, h, hd, hd), dtype=jnp.float32)
+        n0 = jnp.zeros((B, h, hd), dtype=jnp.float32)
+        m0 = jnp.full((B, h), -1e30, dtype=jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    ck = cfg.ssm.mlstm_chunk if cfg.ssm else 0
+    if ck and L > 1 and L % ck == 0:
+        ht, new_state = _mlstm_chunked(
+            q, k, v, ig, fg, (C0, n0, m0), ck
+        )
+        ht = (ht * og).astype(x.dtype)
+        out = jnp.einsum("blhk,hkd->bld", ht, p["wo"])
+        return out, new_state
+
+    def step(carry, args):
+        C, n, m = carry
+        qt, kt, vt, it, ft = args       # (B,h,hd) ×3, (B,h) ×2
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        fdec = jnp.exp(logf + m - m_new)[..., None, None]
+        iamp = jnp.exp(it - m_new)[..., None, None]
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        C = fdec * C + iamp * (vf[..., :, None] * kf[..., None, :])
+        n = fdec[..., 0] * n + iamp[..., 0] * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0
+        )[..., None]
+        return (C, n, m_new), num / den
+
+    xs = (
+        q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+        ig.swapaxes(0, 1), fg.swapaxes(0, 1),
+    )
+    (Cf, nf, mf), ys = _chunked_time_scan(step, (C0, n0, m0), xs)
+    ht = ys.swapaxes(0, 1)                           # (B, L, h, hd) fp32
+    ht = (ht * og).astype(x.dtype)
+    out = jnp.einsum("blhk,hkd->bld", ht, p["wo"])
+    return out, (Cf, nf, mf)
+
+
+def _mlstm_chunked(
+    q, k, v, ig, fg, state, chunk: int
+):
+    """Chunkwise-parallel stabilized mLSTM — identical math to the
+    recurrence (both carry the running log-scale max), but the matrix
+    memory C materializes once per CHUNK instead of once per STEP, and all
+    intra-chunk work is (L_c × L_c)/(L_c × hd) matmuls (MXU-shaped).
+
+    Derivation: with b_j = Σ_{s≤j} log σ(f̃_s), the recurrent scale max is
+      m_j = max(b_j + m_0, max_{s≤j}(b_j − b_s + ĩ_s))
+    and the stabilized readout becomes
+      num_j = e^{b_j+m_0−m_j}·C_0 q_j + Σ_{s≤j} e^{b_j−b_s+ĩ_s−m_j} v_s(k_sᵀq_j)
+    which is one masked (QKᵀ ⊙ D)V product per chunk.
+    q,k,v: (B, L, h, hd); ig/fg: (B, L, h) pre-activations.
+    """
+    B, L, h, hd = q.shape
+    C0, n0, m0 = state
+    nc = L // chunk
+
+    def to_chunks(a):
+        return a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    igs, fgs = to_chunks(ig), to_chunks(fg)
+
+    def one_chunk(carry, args):
+        C, n, m = carry                       # (B,h,hd,hd),(B,h,hd),(B,h)
+        qc, kc, vc, ic, fc = args             # (B,Lc,h,hd)... (B,Lc,h)
+        logf = jax.nn.log_sigmoid(fc.astype(jnp.float32))
+        b = jnp.cumsum(logf, axis=1)          # (B,Lc,h) inclusive
+        g = b + m[:, None, :]                 # scale of C0 at step j
+        # intra-chunk log weights W[j,s] = b_j - b_s + i_s  (s <= j)
+        W = (
+            b[:, :, None, :] - b[:, None, :, :]
+            + ic.astype(jnp.float32)[:, None, :, :]
+        )                                      # (B,Lc,Lc,h)
+        j_ix = jnp.arange(chunk)[:, None]
+        s_ix = jnp.arange(chunk)[None, :]
+        mask = (s_ix <= j_ix)[None, :, :, None]
+        W = jnp.where(mask, W, -jnp.inf)
+        m_intra = jnp.max(W, axis=2)           # (B,Lc,h)
+        m_j = jnp.maximum(g, m_intra)
+        D = jnp.exp(W - m_j[:, :, None, :])
+        D = jnp.where(mask, D, 0.0)
+
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        A = jnp.einsum("bjhd,bshd->bjsh", qf, kf)          # (B,Lc,Lc,h)
+        scale0 = jnp.exp(g - m_j)                          # (B,Lc,h)
+        num = (
+            jnp.einsum("bjsh,bshv->bjhv", A * D, vf)
+            + scale0[..., None] * jnp.einsum("bjhk,bhvk->bjhv", qf, C)
+        )
+        nvec = (
+            jnp.einsum("bjsh,bshk->bjhk", D, kf)
+            + scale0[..., None] * n[:, None]
+        )
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bjhk,bjhk->bjh", nvec, qf)), 1.0
+        )
+        hout = num / den[..., None]                        # (B,Lc,h,hd)
+
+        # chunk-end state at scale m_L
+        mL = m_j[:, -1, :]
+        wL = W[:, -1, :, :]                                # (B,Lc,h) at j=L
+        eL = jnp.exp(wL - mL[:, None, :])
+        C_new = (
+            jnp.exp(g[:, -1] - mL)[..., None, None] * C
+            + jnp.einsum("bsh,bshv,bshk->bhvk", eL, vf, kf)
+        )
+        n_new = (
+            jnp.exp(g[:, -1] - mL)[..., None] * n
+            + jnp.einsum("bsh,bshk->bhk", eL, kf)
+        )
+        return (C_new, n_new, mL), hout
+
+    one_chunk = jax.checkpoint(
+        one_chunk, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    (Cf, nf, mf), ys = jax.lax.scan(
+        one_chunk, (C0, n0, m0), (qs, ks, vs, igs, fgs)
+    )
+    ht = ys.swapaxes(0, 1).reshape(B, L, h, hd)
+    return ht, (Cf, nf, mf)
+
+
+def init_slstm(cfg: ModelConfig, key) -> Tuple[Params, Specs]:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    # 4 gates (i, f, z, o) from input + recurrent connection (block-diag per head)
+    p = {
+        "w_in": _dense_init(ks[0], (d, 4, h, hd), dt),
+        "w_rec": _dense_init(ks[1], (h, hd, 4, hd), dt, scale=0.02),
+        "bias": jnp.zeros((4, h, hd), dtype=jnp.float32),
+        "wo": _dense_init(ks[2], (h, hd, d), dt, scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+    }
+    s = {
+        "w_in": (None, None, "model", None),
+        "w_rec": ("model", None, None, None),
+        "bias": (None, "model", None),
+        "wo": ("model", None, None),
+    }
+    return p, s
+
+
+def apply_slstm(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,
+    state: Optional[Tuple] = None,
+) -> Tuple[jnp.ndarray, Tuple]:
+    """Stabilized sLSTM (xLSTM eq. 8-18); strictly sequential by design."""
+    B, L, d = x.shape
+    h = p["w_in"].shape[2]
+    hd = p["w_in"].shape[3]
+    zin = jnp.einsum("bld,dghk->blghk", x, p["w_in"]).astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((B, h, hd), jnp.float32)
+        n0 = jnp.ones((B, h, hd), jnp.float32)
+        hh0 = jnp.zeros((B, h, hd), jnp.float32)
+        m0 = jnp.zeros((B, h, hd), jnp.float32)
+    else:
+        c0, n0, hh0, m0 = state
+
+    # bf16 recurrent weights (§Perf: the per-step weight re-read dominates
+    # sLSTM HBM traffic; halving element width halves it — accumulate f32)
+    rec_bf16 = bool(cfg.ssm and cfg.ssm.slstm_bf16_rec)
+    wr = p["w_rec"].astype(jnp.bfloat16 if rec_bf16 else jnp.float32)
+
+    def step(carry, zt):
+        c, n, hh, m = carry
+        rec = jnp.einsum(
+            "bhk,hkgj->bghj",
+            hh.astype(wr.dtype), wr,
+            preferred_element_type=jnp.float32,
+        )
+        g = zt + rec + p["bias"]                       # (B, 4, h, hd)
+        it, ft, zz, ot = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * jnp.tanh(zz)
+        n = f_s * n + i_s
+        hh = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (c, n, hh, m_new), hh
+
+    (cf, nf, hf, mf), ys = _chunked_time_scan(
+        step, (c0, n0, hh0, m0), zin.swapaxes(0, 1)
+    )
+    ht = ys.swapaxes(0, 1).astype(x.dtype)             # (B, L, h, hd)
+    out = jnp.einsum("blhk,hkd->bld", ht, p["wo"])
+    return out, (cf, nf, hf, mf)

@@ -1,0 +1,9 @@
+from .adafactor import adafactor
+from .adamw import Optimizer, adamw, apply_updates, sgd
+from .clip import clip_by_global_norm, global_norm
+from .schedule import constant, cosine_warmup
+
+__all__ = [
+    "Optimizer", "adamw", "sgd", "adafactor", "apply_updates",
+    "clip_by_global_norm", "global_norm", "cosine_warmup", "constant",
+]

@@ -1,0 +1,109 @@
+"""AdamW and SGD as pure (init, update) pairs over pytrees.
+
+Optimizer states inherit the parameter sharding (pass the param spec tree to
+``state_specs``) — with FSDP-sharded params this is ZeRO-3; with TP-only
+params the moments are additionally sharded over the data axis by
+``repro.launch.mesh.zero1_specs`` (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable            # (grads, state, params) -> (updates, state)
+    state_specs: Callable       # param_specs -> state spec tree
+
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mu_dtype=jnp.float32,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mu_dtype), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mhat = m / b1c
+            vhat = v / b2c
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), m.astype(mu_dtype), v
+
+        # three passes; XLA CSE merges the duplicate arithmetic under jit
+        updates = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[0],
+                               grads, state.mu, state.nu, params)
+        mu = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[1],
+                          grads, state.mu, state.nu, params)
+        nu = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[2],
+                          grads, state.mu, state.nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    def state_specs(param_specs):
+        return AdamWState(step=(), mu=param_specs, nu=param_specs)
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    class SGDState(NamedTuple):
+        step: jnp.ndarray
+        mu: Any
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SGDState(step=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(m.dtype), state.mu, grads
+            )
+            updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype), mu, params)
+        else:
+            mu = None
+            updates = jax.tree.map(lambda g, p: (-lr_t * g).astype(p.dtype), grads, params)
+        return updates, SGDState(step=step, mu=mu)
+
+    def state_specs(param_specs):
+        return SGDState(step=(), mu=param_specs if momentum else None)
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,11 @@
+import jax
+import numpy as np
+import pytest
+
+# The ACDC plane tests require f64 exactness; LM layers are dtype-explicit.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

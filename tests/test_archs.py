@@ -1,0 +1,96 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, output shapes + finite values; prefill + decode step."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.config import Family
+from repro.models.model import LM, build_runs
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab),
+    }
+    if cfg.family is Family.ENCDEC:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.frontend_len, cfg.d_model), dtype=jnp.float32
+        )
+    if cfg.family is Family.VLM:
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.frontend_len, cfg.d_model), dtype=jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    m = LM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B, S = 2, 16
+    batch = _batch(cfg, key, B, S)
+    loss = float(jax.jit(m.train_loss)(params, batch))
+    assert np.isfinite(loss), arch
+    # a random-init model should sit near ln(vocab)
+    assert loss < np.log(cfg.vocab) + 1.5
+
+    cache = m.init_cache(B, S + 4)
+    lg, cache = jax.jit(m.prefill)(params, batch, cache)
+    assert lg.shape == (B, 1, cfg.padded_vocab())
+    tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+    pos = jnp.full((B, 1), S, dtype=jnp.int32)
+    if cfg.family is Family.VLM:
+        pos = pos + cfg.frontend_len
+    lg2, cache = jax.jit(m.decode_step)(params, tok, pos, cache)
+    assert np.isfinite(np.asarray(lg2, dtype=np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_structure(arch):
+    """Full configs: structural checks only (never instantiated on CPU)."""
+    cfg = get_config(arch)
+    runs = build_runs(cfg)
+    n_total = sum(r.count for r in runs)
+    assert n_total == cfg.n_layers
+    assert cfg.num_params() > 0
+    if cfg.n_heads % cfg.n_kv:
+        pytest.fail("GQA head count must divide kv heads")
+
+
+def test_gemma_local_global_pattern():
+    cfg = get_config("gemma3-27b")
+    runs = build_runs(cfg)
+    kinds = []
+    for r in runs:
+        kinds += [r.kind] * r.count
+    assert len(kinds) == 62
+    assert kinds[5] == "attn" and kinds[11] == "attn"  # every 6th global
+    assert kinds.count("attn") == 10
+
+
+def test_xlstm_cycle():
+    cfg = get_config("xlstm-1.3b")
+    runs = build_runs(cfg)
+    kinds = []
+    for r in runs:
+        kinds += [r.kind] * r.count
+    assert kinds.count("slstm") == 6
+    assert kinds[7] == "slstm"
+
+
+def test_hymba_globals_first_mid_last():
+    cfg = get_config("hymba-1.5b")
+    runs = build_runs(cfg)
+    kinds = []
+    for r in runs:
+        kinds += [r.kind] * r.count
+    assert kinds[0] == "hybrid" and kinds[16] == "hybrid" and kinds[31] == "hybrid"
+    assert kinds.count("hybrid") == 3

@@ -1,0 +1,95 @@
+"""FD penalty machinery: closed form vs dense inverse vs CG."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fd import build_fd_penalty, dense_penalty_matrix, recover_determined
+from repro.core.glm import workload_for
+from repro.core.schema import make_database
+from repro.core.sigma import build_param_space
+from repro.core.engine import compute_aggregates
+from repro.core.variable_order import analyze, vo
+
+
+def _setup(n_det=1, seed=0):
+    rng = np.random.default_rng(seed)
+    nR = 120
+    b = rng.integers(0, 12, nR)
+    maps = [rng.integers(0, 4, 12) for _ in range(n_det)]
+    cols = {"B": b, "C": rng.normal(size=nR).round(2)}
+    names = []
+    for i, m in enumerate(maps):
+        names.append(f"G{i}")
+        cols[f"G{i}"] = m[b]
+    db = make_database(
+        relations={"R": cols},
+        continuous=["C"],
+        categorical=["B"] + names,
+        fds=[("B", names)],
+    )
+    chain = vo("C")
+    for n in reversed(names):
+        chain = vo(n, chain)
+    order = vo("B", chain)
+    info = analyze(order, db)
+    wl = workload_for(db, ["B", "C"], "C", "lr")  # B features; C doubles as y
+    res, _ = compute_aggregates(db, info, wl.aggregates)
+    space = build_param_space(db, wl, res)
+    return db, space
+
+
+def test_penalty_matches_dense_inverse_single():
+    db, space = _setup(n_det=1)
+    pen, mats = dense_penalty_matrix(db, space, db.fds)
+    rng = np.random.default_rng(3)
+    theta = jnp.asarray(rng.normal(size=space.total))
+    got = float(pen(theta))
+    want = 0.0
+    covered = set()
+    for off, size, inv in mats:
+        g = np.asarray(theta)[off : off + size]
+        want += float(g @ inv @ g)
+        covered.update(range(off, off + size))
+    for off, size in pen.plain:
+        g = np.asarray(theta)[off : off + size]
+        want += float(g @ g)
+    assert abs(got - want) < 1e-8
+
+
+def test_penalty_matches_dense_inverse_multi():
+    db, space = _setup(n_det=3)
+    pen, mats = dense_penalty_matrix(db, space, db.fds)
+    rng = np.random.default_rng(4)
+    theta = jnp.asarray(rng.normal(size=space.total))
+    got = float(pen(theta))
+    want = sum(
+        float(np.asarray(theta)[o : o + s] @ inv @ np.asarray(theta)[o : o + s])
+        for o, s, inv in mats
+    ) + sum(
+        float(np.asarray(theta)[o : o + s] @ np.asarray(theta)[o : o + s])
+        for o, s in pen.plain
+    )
+    assert abs(got - want) < 1e-6  # CG tolerance
+
+
+def test_recover_determined_optimality():
+    db, space = _setup(n_det=1)
+    rng = np.random.default_rng(5)
+    gamma = rng.normal(size=space.total)
+    out = recover_determined(db, space, db.fds[0], gamma)
+    blk = next(b for b in space.blocks if b.sig == ("B",))
+    g = gamma[blk.offset : blk.offset + blk.size]
+    theta_b, theta_a = out["G0"], out["B"]
+    amap = db.fd_map(db.fds[0])["G0"]
+    gid = amap[blk.key_cols["B"]]
+    # optimality: numerical perturbation of theta_b must not lower
+    # ||g - R^T tb||^2 + ||tb||^2
+    def obj(tb):
+        return ((g - tb[gid]) ** 2).sum() + (tb**2).sum()
+    base = obj(theta_b)
+    for i in range(len(theta_b)):
+        for eps in (1e-4, -1e-4):
+            tb = theta_b.copy()
+            tb[i] += eps
+            assert obj(tb) >= base - 1e-9
+    assert np.allclose(theta_a, g - theta_b[gid])

@@ -1,0 +1,91 @@
+"""Model layer: (Sigma, c, s_Y) correctness, BGD vs closed form, FD reparam."""
+
+import numpy as np
+import pytest
+
+from repro.core.api import prepare, train
+from repro.core.oracle import (
+    materialize_join,
+    one_hot_design_matrix,
+    sigma_c_sy_oracle,
+)
+from repro.core.schema import make_database
+from repro.core.solver import closed_form_ridge
+from repro.core.variable_order import vo
+
+LAM = 0.1
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(1)
+    nR, nS, nT = 80, 50, 40
+    bvals = rng.integers(0, 10, nS)
+    gmap = rng.integers(0, 3, 10)
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 8, nR), "B": rng.integers(0, 10, nR),
+                   "C": rng.normal(size=nR).round(2)},
+            "S": {"B": bvals, "G": gmap[bvals], "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 8, nT), "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B", "G"],
+        fds=[("B", ["G"])],
+    )
+
+
+ORDER = vo("A", vo("B", vo("C"), vo("G", vo("D"))), vo("E"))
+
+
+def test_sigma_matches_one_hot_oracle(db):
+    r = train(db, ORDER, ["A", "B", "G", "C", "D"], "E", model="lr", lam=LAM)
+    join = materialize_join(db)
+    H, y, desc = one_hot_design_matrix(db, join, r.workload)
+    S_o, c_o, sy_o = sigma_c_sy_oracle(H, y)
+    assert np.abs(S_o - r.sigma.dense()).max() < 1e-10
+    assert np.abs(c_o - np.asarray(r.sigma.c)).max() < 1e-10
+    assert abs(sy_o - r.sigma.sy) < 1e-10
+
+
+def test_lr_bgd_matches_closed_form(db):
+    r = train(db, ORDER, ["A", "B", "G", "C", "D"], "E", model="lr", lam=LAM)
+    theta_cf = closed_form_ridge(r.sigma.dense(), np.asarray(r.sigma.c), LAM)
+    assert r.solver.converged
+    assert np.abs(np.asarray(r.params) - theta_cf).max() < 1e-4
+
+
+def test_pr2_bgd_matches_closed_form(db):
+    r = train(db, ORDER, ["A", "B", "C", "D"], "E", model="pr2", lam=LAM,
+              max_iters=3000)
+    theta_cf = closed_form_ridge(r.sigma.dense(), np.asarray(r.sigma.c), LAM)
+    assert np.abs(np.asarray(r.params) - theta_cf).max() < 1e-3
+
+
+def test_fd_reparam_reaches_same_optimum(db):
+    """The paper's FD reparameterization is an exact transformation: the
+    optimal loss of the reduced problem equals the full problem's."""
+    full = train(db, ORDER, ["A", "B", "G", "C", "D"], "E", model="lr", lam=LAM)
+    red = train(db, ORDER, ["A", "B", "G", "C", "D"], "E", model="lr",
+                lam=LAM, fds=db.fds)
+    assert red.sigma.space.total < full.sigma.space.total
+    assert abs(full.loss - red.loss) < 1e-6
+    # and it computes strictly fewer distinct aggregates
+    assert red.sigma.nnz_distinct < full.sigma.nnz_distinct
+
+
+def test_fama_trains(db):
+    m, sig, wl, plan, _ = prepare(db, ORDER, ["A", "B", "C", "D"], "E",
+                                  "fama", LAM, (), 4)
+    l0 = float(m.loss(sig, m.init_params()))
+    r = train(db, ORDER, ["A", "B", "C", "D"], "E", model="fama", lam=LAM,
+              rank=4, max_iters=400)
+    assert np.isfinite(r.loss)
+    assert r.loss < l0
+
+
+def test_fama_excludes_squares(db):
+    from repro.core.monomials import mono
+    r = prepare(db, ORDER, ["A", "C", "D"], "E", "fama", LAM, (), 2)
+    wl = r[2]
+    assert mono(("C", 2)) not in wl.h_monos  # no x^2 terms in FaMa h

@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.seg_outer.ops import (
+    segment_feature_sum,
+    segment_feature_sum_ref,
+)
+from repro.kernels.sigma_fused.ops import sigma_moments, sigma_moments_ref
+from repro.kernels.swa_attention.ops import (
+    sliding_window_attention,
+    sliding_window_attention_ref,
+)
+
+
+@pytest.mark.parametrize("n", [64, 257, 1000])
+@pytest.mark.parametrize("f", [3, 8, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_sigma_fused(rng, n, f, dtype):
+    x = jnp.asarray(rng.normal(size=(n, f)), dtype=dtype)
+    got = sigma_moments(x, block_rows=128)
+    want = sigma_moments_ref(x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want, dtype=np.float32), rtol=2e-5, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("n,g", [(100, 5), (1024, 64), (777, 200), (50, 1)])
+@pytest.mark.parametrize("f", [4, 12])
+def test_seg_outer(rng, n, g, f):
+    seg = jnp.asarray(np.sort(rng.integers(0, g, n)).astype(np.int32))
+    x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    got = segment_feature_sum(x, seg, g, block_rows=128)
+    want = segment_feature_sum_ref(x, seg, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_seg_outer_segment_spanning_blocks(rng):
+    # one giant segment crossing many blocks + tail segments
+    n = 600
+    seg = np.concatenate([np.zeros(500, np.int32), np.arange(1, 101, dtype=np.int32)])
+    x = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+    got = segment_feature_sum(x, jnp.asarray(seg), 101, block_rows=128)
+    want = segment_feature_sum_ref(x, jnp.asarray(seg), 101)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("s,w", [(256, 128), (512, 256), (512, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention(rng, s, w, dtype):
+    B, H, D = 2, 2, 128
+    q = jnp.asarray(rng.normal(size=(B, s, H, D)) * 0.3, dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(B, s, H, D)) * 0.3, dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(B, s, H, D)), dtype=dtype)
+    got = sliding_window_attention(q, k, v, w)
+    want = sliding_window_attention_ref(q, k, v, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_swa_attention_is_causal(rng):
+    """Changing future tokens must not change past outputs."""
+    B, S, H, D, W = 1, 256, 1, 128, 128
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    out1 = sliding_window_attention(q, k, v, W)
+    k2 = k.at[:, -1].set(99.0)
+    v2 = v.at[:, -1].set(99.0)
+    out2 = sliding_window_attention(q, k2, v2, W)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]), rtol=1e-6, atol=1e-6
+    )

@@ -1,0 +1,74 @@
+"""Prediction over relational tuples + degree-3 polynomial regression."""
+
+import numpy as np
+import pytest
+
+from repro.core.api import train
+from repro.core.monomials import build_workload, degree
+from repro.core.oracle import (
+    materialize_join,
+    one_hot_design_matrix,
+    sigma_c_sy_oracle,
+)
+from repro.core.predict import predict_join, rmse
+from repro.core.schema import make_database
+from repro.core.solver import closed_form_ridge
+from repro.core.variable_order import vo
+
+ORDER = vo("A", vo("B", vo("C"), vo("D")), vo("E"))
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(7)
+    nR, nS, nT = 60, 40, 30
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 5, nR), "B": rng.integers(0, 4, nR),
+                   "C": rng.normal(size=nR).round(2)},
+            "S": {"B": rng.integers(0, 4, nS), "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 5, nT), "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B"],
+    )
+
+
+def test_predictions_match_one_hot(db):
+    r = train(db, ORDER, ["A", "B", "C", "D"], "E", model="lr", lam=0.1)
+    join = materialize_join(db)
+    pred = predict_join(r.model, r.params, db, join)
+    H, y, desc = one_hot_design_matrix(db, join, r.workload)
+    ref = r.model.predict_dense(r.params, H, desc)
+    np.testing.assert_allclose(pred, ref, rtol=1e-8, atol=1e-8)
+
+
+def test_rmse_below_trivial(db):
+    r = train(db, ORDER, ["A", "B", "C", "D"], "E", model="lr", lam=0.1)
+    join = materialize_join(db)
+    y = join["E"].astype(np.float64)
+    base = float(np.sqrt(np.mean((y - y.mean()) ** 2)))
+    assert rmse(r.model, r.params, db, "E") < base + 1e-9
+
+
+def test_pr3_monomials_structure(db):
+    wl = build_workload(db, ["A", "C", "D"], "E", 3)
+    degs = {degree(m) for m in wl.h_monos}
+    assert degs == {0, 1, 2, 3}
+    # categorical powers stay capped at 1
+    for m in wl.h_monos:
+        for v, p in m:
+            if v == "A":
+                assert p == 1
+    # Sigma needs monomials up to degree 6
+    assert max(degree(m) for m in wl.aggregates) == 6
+
+
+def test_pr3_matches_one_hot_oracle(db):
+    r = train(db, ORDER, ["A", "C"], "E", model="pr3", lam=0.1, max_iters=4000)
+    join = materialize_join(db)
+    H, y, desc = one_hot_design_matrix(db, join, r.workload)
+    S_o, c_o, _ = sigma_c_sy_oracle(H, y)
+    np.testing.assert_allclose(r.sigma.dense(), S_o, rtol=1e-8, atol=1e-8)
+    theta_cf = closed_form_ridge(S_o, c_o, 0.1)
+    assert np.abs(np.asarray(r.params) - theta_cf).max() < 5e-3

@@ -1,0 +1,76 @@
+"""Integration: LM training loop with checkpoint/restart + microbatching."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.launch.train import (
+    LoopConfig,
+    init_state,
+    make_train_step,
+    train_loop,
+)
+from repro.optim import adamw
+
+
+def _tiny():
+    return dataclasses.replace(
+        get_config("deepseek-7b", smoke=True), n_layers=2, vocab=64
+    )
+
+
+def test_loss_decreases():
+    cfg = _tiny()
+    from repro.models.model import LM
+
+    model = LM(cfg)
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    out = train_loop(
+        model, adamw(3e-3), data, LoopConfig(total_steps=30, log_every=10,
+                                             ckpt_dir=None)
+    )
+    hist = out["history"]
+    assert hist[-1][1] < hist[0][1]
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    cfg = _tiny()
+    from repro.models.model import LM
+
+    model = LM(cfg)
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    loop = LoopConfig(total_steps=10, ckpt_every=5, ckpt_dir=str(tmp_path),
+                      log_every=5)
+    out1 = train_loop(model, adamw(3e-3), data, loop)
+    # "crash" and restart with a longer horizon: must resume at step 10
+    loop2 = dataclasses.replace(loop, total_steps=15)
+    out2 = train_loop(model, adamw(3e-3), data, loop2)
+    assert int(out2["state"].step) == 15
+
+
+def test_microbatched_step_matches_plain():
+    cfg = _tiny()
+    from repro.models.model import LM
+
+    model = LM(cfg, dense_moe=True)
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    state = init_state(model, opt, key)
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+
+    s1, m1 = jax.jit(make_train_step(model, opt, microbatches=1))(state, batch)
+    state2 = init_state(model, opt, key)
+    s2, m2 = jax.jit(make_train_step(model, opt, microbatches=4))(state2, batch)
+    # losses agree (mean over microbatches == full-batch mean for equal sizes)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-3
+    # parameters close (grad-accum in f32, tiny bf16 drift allowed)
+    d = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params))
+    )
+    assert d < 5e-2
