@@ -29,7 +29,7 @@ from .glm import (
 from .monomials import Workload
 from .schema import FD, Database
 from .sigma import SigmaCSY, build_param_space, build_sigma
-from .solver import SolverResult, bgd
+from .solver import SolverResult, bgd, shard_sigma_for_bgd
 from .variable_order import OrderInfo, VarNode, analyze
 
 
@@ -101,6 +101,11 @@ def train(
     m, sig, wl, plan, agg_s = prepare(
         db, order, features, response, model, lam, fds, rank
     )
+    import jax
+
+    if jax.device_count() > 1:
+        # multi-device: Sigma COO sharded, matvec partials psum-combined
+        sig = shard_sigma_for_bgd(sig)
     t0 = time.perf_counter()
     sol = bgd(
         lambda p: m.loss(sig, p),

@@ -1,202 +1,25 @@
-"""Distributed AC/DC aggregate pass (the paper's plane on the production mesh).
+"""Deprecated location — the distributed plane moved to ``repro.dist``.
 
-Distribution scheme (DESIGN.md §2): relations are co-partitioned by the root
-variable's key range (locn), so the entire factorized aggregate pass is
-shard-local; only the final aggregate tables are combined:
-
-  * data axes (pod, data): each shard aggregates its partition; one psum
-    per table combines shards (keys are global dictionary ids);
-  * model axis: the AGGREGATE COLUMNS (payload monomials) are split across
-    the 16-way model axis — every device computes 1/16 of the ~46M distinct
-    aggregates for its rows; no communication needed on that axis.
-
-The BGD convergence step runs over the combined sparse Sigma — one gather-
-multiply-scatter per iteration, COO sharded over model, parameters
-replicated. The aggregate pass dominating convergence by orders of magnitude
-(paper Table 1) is what makes the split pay: heavy traffic is one psum per
-table per training run, not per iteration.
-
-``AcdcShapes`` scales the real v4 plan structure to the paper's dataset
-(86M Inventory tuples, |sku| 100k, |zip| 30k, 46M distinct aggregates) so
-the dry-run lowers production-sized buffers without materializing data.
+This module re-exports the sharded aggregate pass from
+``repro.dist.shard`` so older imports keep working; new code should import
+``repro.dist`` (which also carries the heartbeat/replan fault-tolerance
+layer and the compressed gradient exchange). See DESIGN.md §3.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
+from repro.dist.shard import (  # noqa: F401
+    AcdcShapes,
+    aggregate_pass,
+    input_specs,
+    lower_aggregate_pass,
+    lower_bgd_step,
+)
 
-
-@dataclasses.dataclass(frozen=True)
-class AcdcShapes:
-    """Per-shard sizes of the production retailer/PR2 workload."""
-
-    rows_per_shard: int = 168_000          # 86M inventory rows / 512 shards
-    n_cont: int = 32                       # continuous features (+bias)
-    # (name, active domain, payload columns) per categorical group-by table
-    cat_tables: Tuple[Tuple[str, int, int], ...] = (
-        ("sku", 100_000, 512),
-        ("zip", 30_000, 512),
-        ("category", 128, 512),
-        ("subcategory", 512, 512),
-        ("cluster", 16, 512),
-        ("weather3", 8, 512),
-    )
-    pair_hash_slots: int = 1 << 22         # sku×zip observed-pair hash table
-    pair_cols: int = 64
-    sigma_nnz: int = 46_000_000            # paper: 46M distinct aggregates
-    n_params: int = 154_624                # padded 154,033 + 562
-
-
-def input_specs(shapes: AcdcShapes, n_shards: int) -> Dict[str, jax.ShapeDtypeStruct]:
-    r = shapes.rows_per_shard
-    out = {
-        "x_cont": jax.ShapeDtypeStruct((n_shards, r, shapes.n_cont), jnp.float32),
-        "response": jax.ShapeDtypeStruct((n_shards, r), jnp.float32),
-        "pair_key": jax.ShapeDtypeStruct((n_shards, r), jnp.int32),
-    }
-    for name, _, _ in shapes.cat_tables:
-        out[f"key_{name}"] = jax.ShapeDtypeStruct((n_shards, r), jnp.int32)
-    return out
-
-
-def _payload(x: jnp.ndarray, cols_local: int, rank) -> jnp.ndarray:
-    """This model-shard's slice of the payload monomial columns: modelled as
-    products of feature pairs indexed by the column id (bandwidth- and
-    FLOP-faithful to the register evaluation)."""
-    r, f = x.shape
-    reps = int(np.ceil(cols_local / f))
-    base = jnp.tile(x, (1, reps))[:, :cols_local]
-    shift = jnp.roll(x, 1, axis=1)
-    mult = jnp.tile(shift, (1, reps))[:, :cols_local]
-    return base * mult
-
-
-def aggregate_pass(shapes: AcdcShapes, data_axes: Tuple[str, ...],
-                   model_axis: str, tp: int, combine: str = "psum"):
-    """``combine``: 'psum' (tables replicated over data — baseline) or
-    'reduce_scatter' (each data shard keeps a row range — halves the ring
-    traffic of the big-table combines and the per-device output bytes)."""
-    f = shapes.n_cont
-    f2 = f * f
-    assert f2 % tp == 0
-
-    def _combine(t, axis_sizes=None, shardable: bool = True):
-        for ax in data_axes:
-            n = jax.lax.axis_size(ax)
-            if (
-                combine == "reduce_scatter" and shardable and t.ndim >= 2
-                and t.shape[0] >= 4096 and t.shape[0] % n == 0
-            ):
-                t = jax.lax.psum_scatter(
-                    t, ax, scatter_dimension=0, tiled=True
-                )
-            else:
-                t = jax.lax.psum(t, ax)
-        return t
-
-    def fn(batch):
-        x = batch["x_cont"][0]                     # (r, f)
-        y = batch["response"][0]
-        rank = jax.lax.axis_index(model_axis)
-
-        # --- continuous block: fused expansion + Gram (sigma_fused
-        # schedule); each model shard computes a row block of G ---
-        rows_loc = f2 // tp
-
-        def block(acc, xb):
-            yb = (xb[:, :, None] * xb[:, None, :]).reshape(-1, f2)
-            yrow = jax.lax.dynamic_slice_in_dim(yb, rank * rows_loc, rows_loc, 1)
-            return acc + jnp.dot(yrow.T, yb, preferred_element_type=jnp.float32), None
-
-        xb = x.reshape(-1, 1000, f)
-        gram, _ = jax.lax.scan(
-            block, jnp.zeros((rows_loc, f2), jnp.float32), xb
-        )
-        cvec = jnp.dot(x.T, y)
-        sy = jnp.dot(y, y)
-        sizes = {}
-        gram = _combine(gram, sizes)
-        cvec = jax.lax.psum(cvec, data_axes) if data_axes else cvec
-        sy = jax.lax.psum(sy, data_axes) if data_axes else sy
-        out = {"gram": gram[None], "c_cont": cvec, "sy": sy}
-
-        # --- group-by tables: column-sharded segment sums ---
-        for name, adom, cols in shapes.cat_tables:
-            keys = batch[f"key_{name}"][0]
-            pay = _payload(x, cols // tp, rank)
-            tbl = jax.ops.segment_sum(pay, keys, num_segments=adom)
-            tbl = _combine(tbl, sizes)
-            out[f"tbl_{name}"] = tbl[None]
-
-        # --- categorical-pair hash table (sku×zip observed combos) ---
-        pk = batch["pair_key"][0] % shapes.pair_hash_slots
-        pay = _payload(x, shapes.pair_cols // tp, rank)
-        ptbl = jnp.zeros(
-            (shapes.pair_hash_slots, shapes.pair_cols // tp), jnp.float32
-        ).at[pk].add(pay)
-        ptbl = _combine(ptbl, sizes)
-        out["tbl_pair"] = ptbl[None]
-        return out
-
-    return fn
-
-
-def lower_aggregate_pass(mesh: Mesh, shapes: Optional[AcdcShapes] = None,
-                         combine: str = "psum"):
-    shapes = shapes or AcdcShapes()
-    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
-    n_shards = int(np.prod([mesh.shape[a] for a in daxes]))
-    tp = mesh.shape.get("model", 1)
-    specs = input_specs(shapes, n_shards)
-
-    in_specs = {
-        k: P(daxes, *(None,) * (len(v.shape) - 1)) for k, v in specs.items()
-    }
-    out_specs = {
-        "gram": P("model", None, None),
-        "c_cont": P(),
-        "sy": P(),
-        "tbl_pair": P("model", None, None),
-    }
-    for name, _, _ in shapes.cat_tables:
-        out_specs[f"tbl_{name}"] = P("model", None, None)
-
-    fn = aggregate_pass(shapes, daxes, "model", tp, combine=combine)
-    shmap = jax.shard_map(
-        fn, mesh=mesh, in_specs=(in_specs,), out_specs=out_specs,
-        check_vma=False,
-    )
-    return jax.jit(shmap).lower(specs)
-
-
-def lower_bgd_step(mesh: Mesh, shapes: Optional[AcdcShapes] = None,
-                   lam: float = 1e-3):
-    """One gradient evaluation over the production sparse Sigma: COO sharded
-    over the model axis, theta replicated, partial matvecs psum-combined."""
-    shapes = shapes or AcdcShapes()
-    nnz, npar = shapes.sigma_nnz, shapes.n_params
-    coo = NamedSharding(mesh, P("model"))
-    rep = NamedSharding(mesh, P())
-
-    def grad_step(rows, cols, vals, c, theta):
-        p = jax.ops.segment_sum(
-            vals * theta[cols], rows, num_segments=npar
-        )
-        return p - c + lam * theta
-
-    jfn = jax.jit(grad_step, in_shardings=(coo, coo, coo, rep, rep))
-    args = (
-        jax.ShapeDtypeStruct((nnz,), jnp.int32),
-        jax.ShapeDtypeStruct((nnz,), jnp.int32),
-        jax.ShapeDtypeStruct((nnz,), jnp.float32),
-        jax.ShapeDtypeStruct((npar,), jnp.float32),
-        jax.ShapeDtypeStruct((npar,), jnp.float32),
-    )
-    return jfn.lower(*args)
+warnings.warn(
+    "repro.core.distributed is deprecated; import repro.dist instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

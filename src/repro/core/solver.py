@@ -125,6 +125,19 @@ def bgd(
     )
 
 
+def shard_sigma_for_bgd(sig, mesh=None):
+    """Lay a ``SigmaCSY`` COO out over the available devices so every BGD
+    iteration's gather-multiply-scatter runs as per-shard partial matvecs
+    plus one psum (GSPMD inserts it) — the in-memory twin of the production
+    plan in ``repro.dist.shard.lower_bgd_step`` (DESIGN.md §3). No-op on a
+    single device; ``api.train`` applies it by default on multi-device
+    hosts, so the solver's O(nnz) inner loop is the sharded path wherever
+    more than one chip is visible."""
+    from repro.dist import distribute_sigma
+
+    return distribute_sigma(sig, mesh)
+
+
 def closed_form_ridge(sigma_dense, c, lam: float):
     """(Sigma + lam I) theta = c — reference optimum for LR/PR2 tests."""
     import numpy as np

@@ -1,0 +1,50 @@
+"""repro.dist — the elastic distributed substrate (DESIGN.md §3).
+
+Four concerns, one package:
+
+  * ``shard``        the sharded AC/DC aggregate pass and Sigma-COO layout
+                     (the cofactor plane on the production mesh);
+  * ``heartbeat``    liveness, straggler detection, and ``replan`` — elastic
+                     mesh reshaping onto surviving hosts;
+  * ``compress``     int8 error-feedback gradient exchange;
+  * ``hierarchical`` topology-aware collectives (pod-staged psum);
+  * ``compat``       the jax version shims everything above stands on.
+"""
+
+from .compress import (
+    compress_with_feedback,
+    compressed_psum,
+    dequantize,
+    quantize,
+)
+from .heartbeat import HeartbeatMonitor, Plan, replan
+from .hierarchical import hierarchical_psum
+from .shard import (
+    AcdcShapes,
+    aggregate_pass,
+    coo_mesh,
+    distribute_sigma,
+    input_specs,
+    lower_aggregate_pass,
+    lower_bgd_step,
+    shard_coo,
+)
+
+__all__ = [
+    "AcdcShapes",
+    "HeartbeatMonitor",
+    "Plan",
+    "aggregate_pass",
+    "compress_with_feedback",
+    "compressed_psum",
+    "coo_mesh",
+    "dequantize",
+    "distribute_sigma",
+    "hierarchical_psum",
+    "input_specs",
+    "lower_aggregate_pass",
+    "lower_bgd_step",
+    "quantize",
+    "replan",
+    "shard_coo",
+]

@@ -1,0 +1,47 @@
+"""Version portability for the jax sharding surface the substrate sits on.
+
+The substrate targets the modern surface (``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``) but must also run on 0.4.x
+containers where ``shard_map`` still lives in ``jax.experimental`` (with
+``check_rep``) and meshes have no axis types. These wrappers resolve the
+difference once so no call site branches on the jax version.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the concept exists."""
+    shape, axes = tuple(shape), tuple(axes)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(name) -> int:
+    """Static size of a named mesh axis, from inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    # classic idiom: psum of the literal 1 constant-folds to the axis size
+    return jax.lax.psum(1, name)
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    """``jax.shard_map`` without replication checking, on either surface."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )

@@ -1,0 +1,114 @@
+"""Gradient exchange: int8 quantization with error feedback (DESIGN.md §3).
+
+The elastic substrate's cross-pod links are the scarce resource: a psum of
+f32 gradients moves 4 bytes per parameter per step per direction. Uniform
+symmetric int8 quantization cuts that 4x; the bias it would introduce is
+cancelled by ERROR FEEDBACK (Seide et al. 2014; Karimireddy et al. 2019):
+each shard carries the residual it failed to transmit into the next step's
+message, so the *sum over steps* of transmitted gradients telescopes to the
+true sum — compression delays information, it never loses it.
+
+Everything here is jit-traceable; ``compressed_psum`` is the shard_map body
+used by the data-parallel combine.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .compat import axis_size
+
+
+def quantize(x: jnp.ndarray, bits: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Uniform symmetric quantization to signed ``bits``-bit integers.
+
+    Returns ``(q, scale)`` with ``x ≈ q * scale`` and the per-tensor scale
+    chosen so the max-magnitude element maps to the top code. Max elementwise
+    reconstruction error is ``scale / 2`` (round-to-nearest).
+    """
+    levels = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / levels
+    q = jnp.round(x / scale)
+    # narrowest signed container — the container IS the wire format, so a
+    # loose pick would silently forfeit the compression (16-bit in int32
+    # costs exactly what f32 does)
+    dtype = jnp.int8 if bits <= 8 else jnp.int16 if bits <= 16 else jnp.int32
+    return q.astype(dtype), scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(
+    grad: jnp.ndarray, err: jnp.ndarray, bits: int = 8
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize ``grad + err``; return ``(q, scale, new_err)``.
+
+    ``new_err`` is the residual this call failed to transmit; feed it back
+    as ``err`` next step. Summed over steps, the transmitted values
+    telescope: sum_t deq_t = sum_t grad_t + err_0 - err_T, with ``err_T``
+    bounded by ``scale / 2`` elementwise — the running mean of transmitted
+    gradients converges to the running mean of true gradients at rate 1/T.
+    """
+    target = grad + err
+    q, scale = quantize(target, bits=bits)
+    new_err = target - dequantize(q, scale)
+    return q, scale, new_err
+
+
+def compressed_psum(
+    grad: jnp.ndarray,
+    err: jnp.ndarray,
+    axis_name,
+    bits: int = 8,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback compressed mean over a mesh axis (shard_map body).
+
+    Two-phase quantized reduce, int8 on the wire in both phases:
+
+      1. reduce-scatter: each shard quantizes (grad + carried error); an
+         all-to-all routes chunk j of every shard's int8 codes to device
+         j, which dequantizes with the senders' scales and sums its chunk
+         in f32 — ((n-1)/n)·P int8 bytes per device;
+      2. the chunk owner REQUANTIZES its f32 chunk-sum and all-gathers
+         the int8 codes — another ((n-1)/n)·P int8 bytes. The phase-2
+         residual joins the owner's error-feedback carry, so it
+         telescopes away over steps like the phase-1 residual.
+
+    Total wire ≈ 2P int8 bytes per device vs ≈ 8P·(n-1)/n for a ring f32
+    psum — the ~4x saving holds at any axis size n (a naive all-gather of
+    full per-shard payloads costs (n-1)·P and is only break-even at n=8;
+    dequantizing before a plain psum puts f32 back on the wire and saves
+    nothing). Returns ``(mean_grad, new_err)``.
+    """
+    q, scale, new_err = compress_with_feedback(grad, err, bits=bits)
+    n = axis_size(axis_name)
+    if n == 1:
+        return dequantize(q, scale), new_err
+
+    size = q.size
+    pad = (-size) % n
+    chunk = (size + pad) // n
+    chunks = jnp.pad(q.reshape(-1), (0, pad)).reshape(n, chunk)
+    # phase 1: chunk j of every shard lands on device j (int8 wire)
+    recv = jax.lax.all_to_all(chunks, axis_name, split_axis=0, concat_axis=0)
+    ss = jax.lax.all_gather(scale, axis_name)           # (n,) f32 scales
+    chunk_sum = jnp.sum(recv.astype(jnp.float32) * ss[:, None], axis=0)
+    # phase 2: requantize the owned chunk-sum, all-gather int8 codes
+    q2, s2 = quantize(chunk_sum, bits=bits)
+    r2 = chunk_sum - dequantize(q2, s2)                 # owner's residual
+    out = jax.lax.all_gather(q2, axis_name)             # (n, chunk) int8 wire
+    s2s = jax.lax.all_gather(s2, axis_name)
+    total = (out.astype(jnp.float32) * s2s[:, None]).reshape(-1)
+    total = total[:size].reshape(q.shape)
+    # fold the phase-2 residual into this shard's carry at its chunk slot
+    rank = jax.lax.axis_index(axis_name)
+    r2_full = jax.lax.dynamic_update_slice(
+        jnp.zeros(size + pad, jnp.float32), r2, (rank * chunk,)
+    )
+    new_err = new_err + r2_full[:size].reshape(q.shape)
+    return total / n, new_err

@@ -1,0 +1,215 @@
+"""Fault tolerance: host heartbeats, straggler detection, elastic replan.
+
+The controller-side half of the elastic contract (DESIGN.md §3, §6): every
+host reports a heartbeat (optionally with its last step duration) each
+training step. The monitor answers two questions —
+
+  * who is SLOW?  ``stragglers`` flags hosts whose mean step time sits more
+    than ``z`` population standard deviations above the fleet mean (the
+    synchronous data-parallel step runs at the speed of the slowest host,
+    so one sick host taxes the whole job);
+  * who is GONE?  ``dead_hosts`` flags hosts whose last beat is older than
+    the timeout.
+
+When hosts die, ``replan`` reshapes the mesh onto the survivors: the model
+axis is preserved exactly (parameter layout unchanged — TP sharding never
+re-partitions), the data axis shrinks to the largest power of two that
+fits, and the job restarts from the newest checkpoint via the elastic
+restore path (ckpt resharding, DESIGN.md §6). Chips beyond the new mesh
+idle until the next maintenance window — trading a few percent of fleet
+FLOPs for a restart that needs no re-sharding of optimizer state layouts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An elastic mesh plan: axis names + sizes, and where to restart."""
+
+    mesh_axes: Tuple[str, ...]
+    mesh_shape: Tuple[int, ...]
+    restore_step: Optional[int]
+    hosts: Tuple[int, ...]                 # survivors assigned into the mesh
+    dropped_chips: int = 0                 # survivor chips left idle
+    # pod-grouped plans: hosts per kept pod, in pod-axis order — device
+    # assignment must draw each pod row's chips from the matching group
+    pod_hosts: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+    @property
+    def n_chips(self) -> int:
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n
+
+
+class HeartbeatMonitor:
+    """Tracks per-host liveness and step-time statistics.
+
+    ``clock`` is injectable for tests / simulated time; defaults to
+    ``time.monotonic``.
+    """
+
+    def __init__(self, hosts: Sequence[int], timeout: float = 60.0,
+                 clock=time.monotonic):
+        self.timeout = float(timeout)
+        self._clock = clock
+        now = clock()
+        self._last: Dict[int, float] = {int(h): now for h in hosts}
+        self._sum: Dict[int, float] = {int(h): 0.0 for h in hosts}
+        self._cnt: Dict[int, int] = {int(h): 0 for h in hosts}
+
+    @property
+    def hosts(self) -> List[int]:
+        return sorted(self._last)
+
+    def beat(self, host: int, step_s: Optional[float] = None) -> None:
+        """Record a heartbeat (and optionally the host's last step time)."""
+        host = int(host)
+        if host not in self._last:          # hosts may join (elastic scale-up)
+            self._sum[host] = 0.0
+            self._cnt[host] = 0
+        self._last[host] = self._clock()
+        if step_s is not None:
+            self._sum[host] += float(step_s)
+            self._cnt[host] += 1
+
+    def mean_step(self, host: int) -> Optional[float]:
+        n = self._cnt.get(host, 0)
+        return self._sum[host] / n if n else None
+
+    def stragglers(self, z: float = 3.0, rel_floor: float = 0.05) -> List[int]:
+        """Hosts whose mean step time exceeds the OTHER hosts' mean by more
+        than ``z`` of their population std (leave-one-out: a fleet-wide std
+        would let a single extreme outlier inflate the threshold and mask
+        itself — with one outlier among n its fleet z-score is bounded by
+        sqrt(n-1), so a fixed z=3 could never fire on fleets of <= 10).
+        ``rel_floor`` keeps a zero-variance fleet from flagging noise-level
+        deviations. Needs >= 2 reporting hosts."""
+        means = {h: m for h in self.hosts
+                 if (m := self.mean_step(h)) is not None}
+        if len(means) < 2:
+            return []
+        out = []
+        for h, m in means.items():
+            others = [v for k, v in means.items() if k != h]
+            mu = sum(others) / len(others)
+            var = sum((v - mu) ** 2 for v in others) / len(others)
+            thresh = mu + z * max(var ** 0.5, rel_floor * abs(mu))
+            if m > thresh:
+                out.append(h)
+        return sorted(out)
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = self._clock() if now is None else now
+        return sorted(
+            h for h, t in self._last.items() if now - t > self.timeout
+        )
+
+    def survivors(self, now: Optional[float] = None) -> List[int]:
+        dead = set(self.dead_hosts(now))
+        return sorted(h for h in self._last if h not in dead)
+
+    def touch(self, now: Optional[float] = None) -> None:
+        """Grant every tracked host a fresh liveness window. Called on
+        training-loop (re-)entry: after a restart gap (mesh rebuild,
+        checkpoint restore, re-jit) every survivor's stamp is stale, and
+        without the refresh the first ``dead_hosts`` check would declare
+        the whole fleet dead and cascade replans down to one host."""
+        now = self._clock() if now is None else now
+        for h in self._last:
+            self._last[h] = now
+
+    def drop(self, hosts: Sequence[int]) -> None:
+        """Stop tracking hosts (the elastic-exit acknowledgment): once a
+        replan has written them out of the fleet they must not re-trigger
+        ``dead_hosts`` on re-entry with the same monitor."""
+        for h in hosts:
+            self._last.pop(int(h), None)
+            self._sum.pop(int(h), None)
+            self._cnt.pop(int(h), None)
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def replan(
+    survivors: Sequence[int],
+    chips_per_host: int,
+    model_parallel: int,
+    restore_step: Optional[int] = None,
+    pod_size_hosts: Optional[int] = None,
+) -> Plan:
+    """Reshape the mesh onto the surviving hosts.
+
+    Invariants (DESIGN.md §3):
+      * the trailing model axis keeps exactly ``model_parallel`` chips, so
+        TP parameter shards restore byte-identical;
+      * the data axis is the largest power of two of DP groups that fits
+        (collective rings stay balanced; batch divisibility is preserved
+        under halving);
+      * with ``pod_size_hosts``, hosts are grouped by pod and every pod
+        contributes the SAME data size (the leading pod axis is only as
+        wide as the number of pods with at least one full DP group) —
+        cross-pod collectives need aligned per-pod layouts.
+    """
+    survivors = sorted(int(h) for h in survivors)
+    if not survivors:
+        raise ValueError("replan: no surviving hosts")
+    mp = int(model_parallel)
+
+    if pod_size_hosts:
+        pods: Dict[int, List[int]] = {}
+        for h in survivors:
+            pods.setdefault(h // pod_size_hosts, []).append(h)
+        # a pod that cannot host even one model-parallel slice contributes
+        # nothing — drop it (its chips idle) rather than emit a plan the
+        # surviving fleet cannot physically satisfy
+        pods = {
+            p: hs for p, hs in pods.items()
+            if len(hs) * chips_per_host >= mp
+        }
+        if not pods:
+            raise ValueError(
+                f"replan: no pod can host a model_parallel={mp} slice"
+            )
+        min_chips = min(len(hs) for hs in pods.values()) * chips_per_host
+        dp = _pow2_floor(min_chips // mp)
+        n_pods = len(pods)
+        pod_hosts = tuple(tuple(pods[p]) for p in sorted(pods))
+        hosts: List[int] = [h for hs in pod_hosts for h in hs]
+        shape: Tuple[int, ...] = (n_pods, dp, mp)
+        axes: Tuple[str, ...] = ("pod", "data", "model")
+        used = n_pods * dp * mp
+    else:
+        total = len(survivors) * chips_per_host
+        dp = _pow2_floor(max(total // mp, 1))
+        hosts = survivors
+        pod_hosts = None
+        shape = (dp, mp)
+        axes = ("data", "model")
+        used = dp * mp
+
+    total_chips = len(survivors) * chips_per_host
+    if used > total_chips:
+        raise ValueError(
+            f"replan: {used} chips needed, {total_chips} survive "
+            f"(model_parallel={mp} too wide for the surviving fleet)"
+        )
+    return Plan(
+        mesh_axes=axes,
+        mesh_shape=shape,
+        restore_step=restore_step,
+        hosts=tuple(hosts),
+        dropped_chips=total_chips - used,
+        pod_hosts=pod_hosts,
+    )

@@ -1,0 +1,266 @@
+"""Sharded AC/DC aggregate pass (the paper's plane on the production mesh).
+
+Distribution scheme (DESIGN.md §3): relations are co-partitioned by the root
+variable's key range (locn), so the entire factorized aggregate pass is
+shard-local; only the final aggregate tables are combined:
+
+  * data axes (pod, data): each shard aggregates its partition; one psum
+    per table combines shards (keys are global dictionary ids);
+  * model axis: the AGGREGATE COLUMNS (payload monomials) are split across
+    the 16-way model axis — every device computes 1/16 of the ~46M distinct
+    aggregates for its rows; no communication needed on that axis.
+
+The BGD convergence step runs over the combined sparse Sigma — one gather-
+multiply-scatter per iteration, COO sharded over model, parameters
+replicated. The aggregate pass dominating convergence by orders of magnitude
+(paper Table 1) is what makes the split pay: heavy traffic is one psum per
+table per training run, not per iteration.
+
+``AcdcShapes`` scales the real v4 plan structure to the paper's dataset
+(86M Inventory tuples, |sku| 100k, |zip| 30k, 46M distinct aggregates) so
+the dry-run lowers production-sized buffers without materializing data.
+
+``shard_coo`` / ``distribute_sigma`` are the small-and-real end of the same
+scheme: they lay an in-memory Sigma COO out over every local device so the
+solver's matvec runs as a sharded segment-sum with a GSPMD-inserted psum
+combine — the default multi-device convergence path (core/solver.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from . import compat
+
+
+@dataclasses.dataclass(frozen=True)
+class AcdcShapes:
+    """Per-shard sizes of the production retailer/PR2 workload."""
+
+    rows_per_shard: int = 168_000          # 86M inventory rows / 512 shards
+    n_cont: int = 32                       # continuous features (+bias)
+    # (name, active domain, payload columns) per categorical group-by table
+    cat_tables: Tuple[Tuple[str, int, int], ...] = (
+        ("sku", 100_000, 512),
+        ("zip", 30_000, 512),
+        ("category", 128, 512),
+        ("subcategory", 512, 512),
+        ("cluster", 16, 512),
+        ("weather3", 8, 512),
+    )
+    pair_hash_slots: int = 1 << 22         # sku×zip observed-pair hash table
+    pair_cols: int = 64
+    sigma_nnz: int = 46_000_000            # paper: 46M distinct aggregates
+    n_params: int = 154_624                # padded 154,033 + 562
+
+
+def input_specs(shapes: AcdcShapes, n_shards: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    r = shapes.rows_per_shard
+    out = {
+        "x_cont": jax.ShapeDtypeStruct((n_shards, r, shapes.n_cont), jnp.float32),
+        "response": jax.ShapeDtypeStruct((n_shards, r), jnp.float32),
+        "pair_key": jax.ShapeDtypeStruct((n_shards, r), jnp.int32),
+    }
+    for name, _, _ in shapes.cat_tables:
+        out[f"key_{name}"] = jax.ShapeDtypeStruct((n_shards, r), jnp.int32)
+    return out
+
+
+def _payload(x: jnp.ndarray, cols_local: int, rank) -> jnp.ndarray:
+    """This model-shard's slice of the payload monomial columns: modelled as
+    products of feature pairs indexed by the column id (bandwidth- and
+    FLOP-faithful to the register evaluation). The pair partner is offset
+    by ``rank`` so each model shard evaluates a distinct column slice."""
+    r, f = x.shape
+    reps = int(np.ceil(cols_local / f))
+    base = jnp.tile(x, (1, reps))[:, :cols_local]
+    shift = jnp.roll(x, 1 + rank, axis=1)
+    mult = jnp.tile(shift, (1, reps))[:, :cols_local]
+    return base * mult
+
+
+def aggregate_pass(shapes: AcdcShapes, data_axes: Tuple[str, ...],
+                   model_axis: str, tp: int, combine: str = "psum"):
+    """``combine``: 'psum' (tables replicated over data — baseline) or
+    'reduce_scatter' (each data shard keeps a row range — halves the ring
+    traffic of the big-table combines and the per-device output bytes)."""
+    f = shapes.n_cont
+    f2 = f * f
+    assert f2 % tp == 0
+
+    def _combine(t, shardable: bool = True):
+        for ax in data_axes:
+            n = compat.axis_size(ax)
+            if (
+                combine == "reduce_scatter" and shardable and t.ndim >= 2
+                and t.shape[0] >= 4096 and t.shape[0] % n == 0
+            ):
+                t = jax.lax.psum_scatter(
+                    t, ax, scatter_dimension=0, tiled=True
+                )
+            else:
+                t = jax.lax.psum(t, ax)
+        return t
+
+    def fn(batch):
+        x = batch["x_cont"][0]                     # (r, f)
+        y = batch["response"][0]
+        rank = jax.lax.axis_index(model_axis)
+
+        # --- continuous block: fused expansion + Gram (sigma_fused
+        # schedule); each model shard computes a row block of G ---
+        rows_loc = f2 // tp
+
+        def block(acc, xb):
+            yb = (xb[:, :, None] * xb[:, None, :]).reshape(-1, f2)
+            yrow = jax.lax.dynamic_slice_in_dim(yb, rank * rows_loc, rows_loc, 1)
+            return acc + jnp.dot(yrow.T, yb, preferred_element_type=jnp.float32), None
+
+        xb = x.reshape(-1, 1000, f)
+        gram, _ = jax.lax.scan(
+            block, jnp.zeros((rows_loc, f2), jnp.float32), xb
+        )
+        cvec = jnp.dot(x.T, y)
+        sy = jnp.dot(y, y)
+        gram = _combine(gram)
+        cvec = jax.lax.psum(cvec, data_axes) if data_axes else cvec
+        sy = jax.lax.psum(sy, data_axes) if data_axes else sy
+        out = {"gram": gram[None], "c_cont": cvec, "sy": sy}
+
+        # --- group-by tables: column-sharded segment sums ---
+        for name, adom, cols in shapes.cat_tables:
+            keys = batch[f"key_{name}"][0]
+            pay = _payload(x, cols // tp, rank)
+            tbl = jax.ops.segment_sum(pay, keys, num_segments=adom)
+            tbl = _combine(tbl)
+            out[f"tbl_{name}"] = tbl[None]
+
+        # --- categorical-pair hash table (sku×zip observed combos) ---
+        pk = batch["pair_key"][0] % shapes.pair_hash_slots
+        pay = _payload(x, shapes.pair_cols // tp, rank)
+        ptbl = jnp.zeros(
+            (shapes.pair_hash_slots, shapes.pair_cols // tp), jnp.float32
+        ).at[pk].add(pay)
+        ptbl = _combine(ptbl)
+        out["tbl_pair"] = ptbl[None]
+        return out
+
+    return fn
+
+
+def lower_aggregate_pass(mesh: Mesh, shapes: Optional[AcdcShapes] = None,
+                         combine: str = "psum"):
+    shapes = shapes or AcdcShapes()
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_shards = int(np.prod([mesh.shape[a] for a in daxes]))
+    tp = mesh.shape.get("model", 1)
+    specs = input_specs(shapes, n_shards)
+
+    in_specs = {
+        k: P(daxes, *(None,) * (len(v.shape) - 1)) for k, v in specs.items()
+    }
+    out_specs = {
+        "gram": P("model", None, None),
+        "c_cont": P(),
+        "sy": P(),
+        "tbl_pair": P("model", None, None),
+    }
+    for name, _, _ in shapes.cat_tables:
+        out_specs[f"tbl_{name}"] = P("model", None, None)
+
+    fn = aggregate_pass(shapes, daxes, "model", tp, combine=combine)
+    shmap = compat.shard_map(
+        fn, mesh=mesh, in_specs=(in_specs,), out_specs=out_specs
+    )
+    return jax.jit(shmap).lower(specs)
+
+
+def lower_bgd_step(mesh: Mesh, shapes: Optional[AcdcShapes] = None,
+                   lam: float = 1e-3):
+    """One gradient evaluation over the production sparse Sigma: COO sharded
+    over the model axis, theta replicated, partial matvecs psum-combined."""
+    shapes = shapes or AcdcShapes()
+    nnz, npar = shapes.sigma_nnz, shapes.n_params
+    coo = NamedSharding(mesh, P("model"))
+    rep = NamedSharding(mesh, P())
+
+    def grad_step(rows, cols, vals, c, theta):
+        p = jax.ops.segment_sum(
+            vals * theta[cols], rows, num_segments=npar
+        )
+        return p - c + lam * theta
+
+    jfn = jax.jit(grad_step, in_shardings=(coo, coo, coo, rep, rep))
+    args = (
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.float32),
+        jax.ShapeDtypeStruct((npar,), jnp.float32),
+        jax.ShapeDtypeStruct((npar,), jnp.float32),
+    )
+    return jfn.lower(*args)
+
+
+# ----------------------------------------------------------------------
+# in-memory Sigma sharding (the solver's default multi-device path)
+# ----------------------------------------------------------------------
+
+
+def coo_mesh(mesh: Optional[Mesh] = None) -> Mesh:
+    """A 1-D mesh over every device for COO sharding; pass through a
+    caller-supplied mesh unchanged. Global device count — ``make_mesh``
+    draws from ``jax.devices()``, so sizing by the local count would build
+    a host-0-only mesh in a multi-process run."""
+    if mesh is not None:
+        return mesh
+    n = jax.device_count()
+    return compat.make_mesh((n,), ("shard",))
+
+
+def shard_coo(
+    rows: jnp.ndarray,
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    mesh: Optional[Mesh] = None,
+    axis: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Device-put a Sigma COO evenly sharded along ``axis`` of ``mesh``.
+
+    nnz is padded to a multiple of the axis size with explicit zero-valued
+    entries at position (0, 0) — inert under both ``quad`` and ``matvec``.
+    GSPMD then turns the segment-sum matvec into per-shard partial matvecs
+    plus one psum, which is exactly ``lower_bgd_step``'s production plan.
+    """
+    mesh = coo_mesh(mesh)
+    if axis is None:
+        axis = "model" if "model" in mesh.shape else list(mesh.shape)[0]
+    n = mesh.shape[axis]
+    nnz = rows.shape[0]
+    pad = (-nnz) % n
+    if pad:
+        rows = jnp.concatenate([rows, jnp.zeros((pad,), rows.dtype)])
+        cols = jnp.concatenate([cols, jnp.zeros((pad,), cols.dtype)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
+    sh = NamedSharding(mesh, P(axis))
+    return (
+        jax.device_put(rows, sh),
+        jax.device_put(cols, sh),
+        jax.device_put(vals, sh),
+    )
+
+
+def distribute_sigma(sig, mesh: Optional[Mesh] = None, axis: Optional[str] = None):
+    """Return a copy of a ``SigmaCSY``-like dataclass with its COO sharded
+    over the mesh (``c`` stays replicated). No-op on a single device."""
+    mesh = coo_mesh(mesh)
+    if int(np.prod(list(mesh.shape.values()))) <= 1:
+        return sig
+    rows, cols, vals = shard_coo(sig.rows, sig.cols, sig.vals, mesh, axis)
+    return dataclasses.replace(sig, rows=rows, cols=cols, vals=vals)

@@ -114,6 +114,35 @@ class CellResult:
     strategy: str = ""
 
 
+def mesh_str(mesh) -> str:
+    """The mesh label artifact rows group by — one format, every row."""
+    return "x".join(map(str, tuple(mesh.shape.values())))
+
+
+def _compile_and_measure(result: CellResult, lowered):
+    """Compile a lowered program and fill the CellResult metric fields —
+    shared by the LM cells and the acdc plane so the rows stay uniform.
+    Returns ``(compiled, memory_stats)``."""
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    result.compile_s = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # jax 0.4.x: list of per-program dicts
+        ca = ca[0] if ca else {}
+    hc = analyze_hlo(compiled.as_text())
+    result.flops = hc.flops
+    result.bytes_accessed = hc.bytes
+    result.flops_xla = float(ca.get("flops", 0.0))
+    result.argument_bytes = float(ma.argument_size_in_bytes)
+    result.output_bytes = float(ma.output_size_in_bytes)
+    result.temp_bytes = float(ma.temp_size_in_bytes)
+    result.collectives = hc.collectives
+    result.ok = True
+    return compiled, ma
+
+
 def lower_cell(
     arch: str,
     cell_name: str,
@@ -151,7 +180,7 @@ def lower_cell(
 
     result = CellResult(
         arch=arch, cell=cell_name,
-        mesh="x".join(map(str, tuple(mesh.shape.values()))),
+        mesh=mesh_str(mesh),
         ok=False, optimizer=opt_name, model_flops=model_flops(cfg, cell_name),
         strategy=strategy,
     )
@@ -228,21 +257,7 @@ def lower_cell(
             )
     result.lower_s = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    compiled = lowered.compile()
-    result.compile_s = time.perf_counter() - t0
-
-    ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
-    hc = analyze_hlo(compiled.as_text())
-    result.flops = hc.flops
-    result.bytes_accessed = hc.bytes
-    result.flops_xla = float(ca.get("flops", 0.0))
-    result.argument_bytes = float(ma.argument_size_in_bytes)
-    result.output_bytes = float(ma.output_size_in_bytes)
-    result.temp_bytes = float(ma.temp_size_in_bytes)
-    result.collectives = hc.collectives
-    result.ok = True
+    compiled, ma = _compile_and_measure(result, lowered)
     if verbose:
         print(
             f"[dryrun] {arch:22s} {cell_name:12s} mesh={result.mesh:9s} "
@@ -256,11 +271,59 @@ def lower_cell(
     return result
 
 
+ACDC_CELLS = ("aggregate_pass", "bgd_step")
+
+
+def lower_acdc_cell(mesh, cell_name: str, combine: str = "psum",
+                    verbose: bool = True, shapes=None) -> CellResult:
+    """Lower one repro.dist AC/DC cell (``aggregate_pass`` or ``bgd_step``)
+    on the given mesh. Emits the same CellResult rows as the LM cells so
+    the roofline pass consumes them uniformly. ``shapes`` overrides the
+    production ``AcdcShapes`` (smoke tests shrink it)."""
+    from repro.dist import lower_aggregate_pass, lower_bgd_step
+
+    mesh_s = mesh_str(mesh)
+    result = CellResult(
+        arch="acdc", cell=cell_name, mesh=mesh_s, ok=False, strategy=combine,
+    )
+    t0 = time.perf_counter()
+    if cell_name == "aggregate_pass":
+        lowered = lower_aggregate_pass(mesh, shapes=shapes, combine=combine)
+    elif cell_name == "bgd_step":
+        lowered = lower_bgd_step(mesh, shapes=shapes)
+    else:
+        raise ValueError(f"unknown acdc cell {cell_name!r}")
+    result.lower_s = time.perf_counter() - t0
+    _compile_and_measure(result, lowered)
+    if verbose:
+        print(
+            f"[dryrun] {'acdc':22s} {cell_name:14s} mesh={mesh_s:9s} "
+            f"lower={result.lower_s:6.1f}s compile={result.compile_s:6.1f}s "
+            f"temp/dev={result.temp_bytes/2**30:.2f}GiB "
+            f"coll={ {k: f'{v/2**20:.0f}MiB' for k, v in result.collectives.items()} }"
+        )
+    return result
+
+
+def lower_acdc(mesh, combine: str = "psum", verbose: bool = True,
+               shapes=None):
+    """Lower every AC/DC cell; raises on the first failure (smoke tests)."""
+    return [
+        lower_acdc_cell(mesh, c, combine=combine, verbose=verbose,
+                        shapes=shapes)
+        for c in ACDC_CELLS
+    ]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--cell", default=None)
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--acdc", action="store_true",
+                    help="lower the repro.dist AC/DC aggregate+BGD plane")
+    ap.add_argument("--combine", default="psum",
+                    choices=["psum", "reduce_scatter"])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="artifacts/dryrun")
@@ -276,7 +339,11 @@ def main():
                    meshlib.make_production_mesh(multi_pod=mp))]
 
     cells = []
-    if args.all:
+    if args.acdc:
+        # the acdc artifact label carries the combine strategy so psum /
+        # reduce_scatter runs can sit side by side in one --out dir
+        cells = [(f"acdc_{args.combine}", c) for c in ACDC_CELLS]
+    elif args.all:
         for arch in list_archs():
             for cell in cells_for(arch):
                 cells.append((arch, cell))
@@ -286,13 +353,21 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     failures = []
     for mesh_name, mesh in meshes:
+        mesh_s = mesh_str(mesh)
         for arch, cell in cells:
             try:
-                res = lower_cell(arch, cell, mesh)
+                if args.acdc:
+                    res = lower_acdc_cell(mesh, cell, combine=args.combine)
+                else:
+                    res = lower_cell(arch, cell, mesh)
             except Exception as e:  # noqa: BLE001 — record and continue
+                # failure rows mirror success rows (arch/mesh/strategy) so
+                # downstream grouping never depends on the outcome
                 res = CellResult(
-                    arch=arch, cell=cell, mesh=mesh_name, ok=False,
+                    arch="acdc" if args.acdc else arch, cell=cell,
+                    mesh=mesh_s, ok=False,
                     error=f"{type(e).__name__}: {e}",
+                    strategy=args.combine if args.acdc else "",
                 )
                 failures.append((arch, cell, mesh_name, str(e)[:200]))
                 print(f"[dryrun] FAIL {arch} {cell} {mesh_name}: {str(e)[:300]}")

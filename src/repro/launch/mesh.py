@@ -27,6 +27,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.dist import compat
+from repro.dist.heartbeat import Plan
 from repro.models.config import ModelConfig
 from repro.models.model import MeshInfo
 
@@ -41,9 +43,58 @@ HARDWARE = {
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
+
+
+def mesh_from_plan(plan: Plan) -> Mesh:
+    """Build the post-replan mesh (the elastic-restart path): a
+    ``repro.dist.heartbeat.Plan`` fixes the axis names and sizes; the chips
+    beyond ``plan.n_chips`` idle until the next full-fleet restart.
+
+    Devices are drawn from the SURVIVING hosts (``plan.hosts`` are host
+    ids == jax process indices) — a bare ``jax.make_mesh`` would truncate
+    ``jax.devices()`` from the front and happily map shards onto the dead
+    hosts' chips. Pod-grouped plans additionally assign each pod-axis row
+    its own pod's chips (``plan.pod_hosts``), keeping the intra-pod
+    collectives on intra-pod links. In a real multi-process run a
+    survivor-device shortfall raises (a mesh quietly including dead chips
+    hangs at the first collective); only single-process runs, where the
+    runtime does not model the fleet's hosts, fall back to the first
+    ``plan.n_chips`` devices."""
+    single = jax.process_count() == 1
+    by_proc: Dict[int, list] = {}
+    for d in jax.devices():
+        by_proc.setdefault(d.process_index, []).append(d)
+
+    if plan.pod_hosts and not single:
+        per_pod = plan.n_chips // len(plan.pod_hosts)
+        devs = []
+        for pod, hosts in enumerate(plan.pod_hosts):
+            pool = [d for h in hosts for d in by_proc.get(h, [])]
+            if len(pool) < per_pod:
+                raise ValueError(
+                    f"mesh_from_plan: pod {pod} has {len(pool)} chips, "
+                    f"plan needs {per_pod} per pod"
+                )
+            devs.extend(pool[:per_pod])
+    else:
+        devs = [d for h in sorted(set(plan.hosts)) for d in by_proc.get(h, [])]
+        if len(devs) < plan.n_chips:
+            if not single:
+                raise ValueError(
+                    f"mesh_from_plan: plan needs {plan.n_chips} chips but "
+                    f"only {len(devs)} belong to surviving hosts "
+                    f"{plan.hosts} (chips_per_host mismatch?)"
+                )
+            devs = list(jax.devices())
+    if len(devs) < plan.n_chips:
+        raise ValueError(
+            f"mesh_from_plan: plan needs {plan.n_chips} chips but this "
+            f"process sees only {len(devs)} devices "
+            f"(raise --xla_force_host_platform_device_count for simulation)"
+        )
+    arr = np.asarray(devs[: plan.n_chips]).reshape(plan.mesh_shape)
+    return Mesh(arr, plan.mesh_axes)
 
 
 def mesh_axis_size(mesh: Mesh, name: str) -> int:

@@ -7,7 +7,7 @@ Production anatomy on one replica group:
   * finished requests (EOS or max_new) free their slot; new requests join
     at the next cohort boundary (cohort-level continuous batching — slot
     reuse WITHIN a decode loop needs per-slot prefill, a paged-KV feature
-    noted in DESIGN.md).
+    noted in DESIGN.md §7).
 
 CPU-runnable with smoke configs (`examples/serve_decode.py` drives one
 cohort; `tests/test_serve.py` exercises the scheduler).

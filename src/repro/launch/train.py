@@ -2,8 +2,12 @@
 
 ``make_train_step`` builds the jitted full update (fwd + bwd + clip +
 optimizer) used both by the real training loop below and by the dry-run
-lowering. The loop wires in the substrate: deterministic seed-addressed
-data, async atomic checkpoints, heartbeat/straggler hooks, restart-from-step.
+lowering. The loop wires in the substrate (repro.dist, DESIGN.md §3):
+deterministic seed-addressed data, async atomic checkpoints, heartbeat/
+straggler hooks, restart-from-step, and — when the heartbeat monitor
+declares hosts dead — an elastic exit that checkpoints and hands back a
+``repro.dist.Plan`` for the surviving fleet (``launch.mesh.mesh_from_plan``
+turns it into the restart mesh).
 """
 
 from __future__ import annotations
@@ -17,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.ckpt import CheckpointManager
 from repro.ckpt.checkpoint import latest_step
+from repro.dist import HeartbeatMonitor, replan
 from repro.optim import Optimizer, apply_updates, clip_by_global_norm
 
 
@@ -101,6 +106,14 @@ class LoopConfig:
     ckpt_dir: Optional[str] = None
     log_every: int = 10
     keep: int = 3
+    # elastic restart (only consulted when a HeartbeatMonitor is wired in).
+    # chips_per_host / model_parallel MUST match the live mesh: replan
+    # preserves the model axis exactly, so a guessed default would emit
+    # plans that silently re-partition the TP layout — they have no
+    # defaults and train_loop refuses elastic mode until they are set.
+    elastic: bool = True
+    chips_per_host: Optional[int] = None
+    model_parallel: Optional[int] = None
 
 
 def train_loop(
@@ -109,12 +122,26 @@ def train_loop(
     data,                      # object with .batch(step) -> dict of np arrays
     loop: LoopConfig,
     key=None,
-    heartbeat=None,            # Optional dist.HeartbeatMonitor
+    heartbeat: Optional[HeartbeatMonitor] = None,
     host_id: int = 0,
 ) -> Dict[str, Any]:
     """Single-process training loop with the full fault-tolerance contract:
     restart this function with the same arguments after a crash and it
-    resumes from the newest checkpoint + deterministic data step."""
+    resumes from the newest checkpoint + deterministic data step. If the
+    heartbeat monitor reports dead hosts mid-run (and ``loop.elastic``),
+    the loop checkpoints, computes a ``replan`` over the survivors, and
+    returns early with the plan under ``"plan"`` — the caller rebuilds the
+    mesh (``mesh_from_plan``) and re-enters with the smaller fleet."""
+    if (
+        heartbeat is not None and loop.elastic
+        and (loop.chips_per_host is None or loop.model_parallel is None)
+    ):
+        raise ValueError(
+            "elastic mode needs LoopConfig.chips_per_host and "
+            "model_parallel matching the live mesh (replan preserves the "
+            "model axis exactly); set loop.elastic=False for heartbeat "
+            "monitoring without replan"
+        )
     key = key if key is not None else jax.random.PRNGKey(0)
     state = init_state(model, opt, key)
     step0 = 0
@@ -127,6 +154,10 @@ def train_loop(
 
     step_fn = jax.jit(make_train_step(model, opt), donate_argnums=0)
     history = []
+    if heartbeat is not None:
+        # (re-)entry liveness grant: restore + re-jit can exceed the
+        # timeout, and peers' stamps are stale from before the restart
+        heartbeat.touch()
     t_last = time.perf_counter()
     for step in range(step0, loop.total_steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
@@ -135,6 +166,26 @@ def train_loop(
             now = time.perf_counter()
             heartbeat.beat(host_id, now - t_last)
             t_last = now
+            dead = heartbeat.dead_hosts()
+            if dead and loop.elastic:
+                # elastic exit: persist progress, hand the caller a plan
+                # for the surviving fleet (mesh_from_plan -> restart)
+                if mgr:
+                    mgr.save(step + 1, state)
+                    mgr.close()
+                plan = replan(
+                    heartbeat.survivors(),
+                    chips_per_host=loop.chips_per_host,
+                    model_parallel=loop.model_parallel,
+                    # only promise a restore point that was actually saved
+                    restore_step=step + 1 if mgr else None,
+                )
+                # acknowledge: re-entering with this monitor must not
+                # instantly re-trigger on the hosts the plan wrote off
+                heartbeat.drop(dead)
+                print(f"[train] hosts {dead} dead; replan -> "
+                      f"{plan.mesh_axes}={plan.mesh_shape}")
+                return {"state": state, "history": history, "plan": plan}
         if (step + 1) % loop.log_every == 0 or step == step0:
             loss = float(metrics["loss"])
             history.append((step + 1, loss))
@@ -144,4 +195,4 @@ def train_loop(
     if mgr:
         mgr.save(loop.total_steps, state)
         mgr.close()
-    return {"state": state, "history": history}
+    return {"state": state, "history": history, "plan": None}

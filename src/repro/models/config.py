@@ -124,7 +124,7 @@ SHAPES: Dict[str, ShapeCell] = {
 }
 
 # Architectures for which long_500k is runnable (sub-quadratic path exists).
-# Pure full-attention archs are skipped per the brief; see DESIGN.md.
+# Pure full-attention archs are skipped per the brief; see DESIGN.md §4.
 LONG_CONTEXT_OK = {"hymba-1.5b", "xlstm-1.3b", "h2o-danube-1.8b", "gemma3-27b"}
 
 

@@ -359,7 +359,7 @@ class LM:
             info = M.MoEMeshInfo()
             return M.apply_moe(cfg, p, x, info, seq_sharded=False)
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.dist.compat import shard_map
 
         ep = cfg.moe.num_experts % mi.tp_size == 0
         # tokens may be sequence-sharded over the model axis ONLY in the EP
@@ -413,7 +413,6 @@ class LM:
             mesh=mi.mesh,
             in_specs=(pspec, xs),
             out_specs=(xs, P()),
-            check_vma=False,
         )
         return fn(p, x)
 

@@ -1,0 +1,322 @@
+"""repro.dist unit coverage: compression contracts, COO sharding, replan.
+
+test_substrate.py holds the cross-cutting substrate suite; this file digs
+into the compression math (bit widths, degenerate inputs, convergence of
+the error-feedback telescope), the shard/replan edge cases, and the
+default multi-device BGD path (subprocess with 8 fake devices).
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import (
+    AcdcShapes,
+    HeartbeatMonitor,
+    Plan,
+    compress_with_feedback,
+    dequantize,
+    distribute_sigma,
+    input_specs,
+    quantize,
+    replan,
+    shard_coo,
+)
+
+
+# ----------------------------- compress ------------------------------
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_quantize_roundtrip_bound_bitwidths(bits):
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(512,)))
+    q, s = quantize(x, bits=bits)
+    err = jnp.abs(dequantize(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-6
+    # the top code is actually used (scale is tight)
+    levels = (1 << (bits - 1)) - 1
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) == levels
+    # the container is the wire format: it must be the narrowest fit
+    assert q.dtype == {4: jnp.int8, 8: jnp.int8, 16: jnp.int16}[bits]
+
+
+def test_quantize_zero_vector_stable():
+    q, s = quantize(jnp.zeros(16))
+    assert float(jnp.max(jnp.abs(dequantize(q, s)))) == 0.0
+    assert np.isfinite(float(s))
+
+
+def test_quantize_preserves_sign_and_monotone():
+    x = jnp.asarray([-3.0, -1.0, 0.0, 1.0, 3.0])
+    q, s = quantize(x)
+    d = np.asarray(dequantize(q, s))
+    assert np.all(np.sign(d) == np.sign(np.asarray(x)))
+    assert np.all(np.diff(d) >= 0)
+
+
+def test_error_feedback_telescopes_exactly():
+    """sum_t deq_t == sum_t g_t + err_0 - err_T (exact identity, f32)."""
+    rng = np.random.default_rng(7)
+    err = jnp.zeros(32)
+    total_sent = jnp.zeros(32)
+    total_true = jnp.zeros(32)
+    for t in range(50):
+        g = jnp.asarray(rng.normal(size=32).astype(np.float32))
+        q, s, err_new = compress_with_feedback(g, err)
+        total_sent = total_sent + dequantize(q, s)
+        total_true = total_true + g
+        err = err_new
+    np.testing.assert_allclose(
+        np.asarray(total_sent + err), np.asarray(total_true),
+        rtol=0, atol=1e-4,
+    )
+
+
+def test_error_feedback_residual_bounded():
+    """The carried residual never exceeds half a quantization step of the
+    message it came from — errors do not accumulate across steps."""
+    rng = np.random.default_rng(3)
+    err = jnp.zeros(64)
+    for _ in range(100):
+        g = jnp.asarray(rng.normal(size=64))
+        q, s, err = compress_with_feedback(g, err)
+        assert float(jnp.max(jnp.abs(err))) <= float(s) * 0.5 + 1e-6
+
+
+def test_compress_jit_traceable():
+    fn = jax.jit(compress_with_feedback)
+    q, s, e = fn(jnp.ones(8), jnp.zeros(8))
+    np.testing.assert_allclose(np.asarray(dequantize(q, s)), np.ones(8),
+                               atol=1e-6)
+
+
+# ------------------------------ shard --------------------------------
+
+
+def test_shard_coo_padding_inert():
+    """Padded COO gives the same quadratic form and matvec as unpadded."""
+    rng = np.random.default_rng(0)
+    npar, nnz = 10, 13                 # 13 does not divide any device count
+    rows = jnp.asarray(rng.integers(0, npar, nnz), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, npar, nnz), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=nnz).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=npar).astype(np.float32))
+
+    sr, sc, sv = shard_coo(rows, cols, vals)
+    quad0 = float(jnp.sum(g[rows] * vals * g[cols]))
+    quad1 = float(jnp.sum(g[sr] * sv * g[sc]))
+    assert abs(quad0 - quad1) < 1e-4
+    mv0 = jax.ops.segment_sum(vals * g[cols], rows, num_segments=npar)
+    mv1 = jax.ops.segment_sum(sv * g[sc], sr, num_segments=npar)
+    np.testing.assert_allclose(np.asarray(mv0), np.asarray(mv1), atol=1e-5)
+
+
+def test_distribute_sigma_single_device_noop():
+    @dataclasses.dataclass
+    class FakeSigma:
+        rows: jnp.ndarray
+        cols: jnp.ndarray
+        vals: jnp.ndarray
+
+    sig = FakeSigma(jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32),
+                    jnp.ones(4))
+    if jax.local_device_count() == 1:
+        assert distribute_sigma(sig) is sig
+
+
+def test_api_train_sharded_sigma_matches_closed_form():
+    """The default multi-device path (api.train -> shard_sigma_for_bgd)
+    must converge to the same optimum as the single-device solve."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        assert jax.local_device_count() == 8
+        import numpy as np
+        from repro.core.api import train
+        from repro.core.solver import closed_form_ridge
+        from repro.data.retailer import (
+            RetailerSpec, features, generate, variable_order,
+        )
+        db = generate(RetailerSpec(n_locn=10, n_zip=6, n_date=12, n_sku=15))
+        r = train(db, variable_order(), features(), response="units",
+                  model="lr", lam=1e-2)
+        assert "shard" in str(r.sigma.vals.sharding).lower(), r.sigma.vals.sharding
+        theta = np.asarray(r.params)
+        cf = closed_form_ridge(r.sigma.dense(), np.asarray(r.sigma.c), 1e-2)
+        err = np.abs(theta - cf).max()
+        assert err < 5e-3, err
+        print("sharded api.train OK", err)
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "sharded api.train OK" in out.stdout
+
+
+def test_acdc_input_specs_shapes():
+    shapes = AcdcShapes()
+    specs = input_specs(shapes, n_shards=4)
+    assert specs["x_cont"].shape == (4, shapes.rows_per_shard, shapes.n_cont)
+    for name, _, _ in shapes.cat_tables:
+        assert specs[f"key_{name}"].shape == (4, shapes.rows_per_shard)
+
+
+def test_train_loop_refuses_elastic_without_topology():
+    from repro.launch.train import LoopConfig, train_loop
+
+    mon = HeartbeatMonitor([0, 1], timeout=60.0)
+    with pytest.raises(ValueError, match="elastic"):
+        train_loop(None, None, None, LoopConfig(), heartbeat=mon)
+    # monitoring without replan is still allowed
+    assert LoopConfig(elastic=False).chips_per_host is None
+
+
+def test_mesh_from_plan_shortfall_is_clear_error():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent("""
+        from repro.dist import replan
+        from repro.launch.mesh import mesh_from_plan
+        plan = replan(range(16), chips_per_host=4, model_parallel=4)
+        try:
+            mesh_from_plan(plan)
+        except ValueError as e:
+            assert "devices" in str(e), e
+            print("clear shortfall error OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "clear shortfall error OK" in out.stdout
+
+
+def test_stragglers_default_z_fires_on_small_fleets():
+    # with a fleet-wide std, one outlier among 5 hosts has z = sqrt(4) = 2
+    # and a default z=3 could never fire; leave-one-out must flag it
+    t = [0.0]
+    mon = HeartbeatMonitor(range(5), timeout=100.0, clock=lambda: t[0])
+    for _ in range(10):
+        for h in range(5):
+            mon.beat(h, 10.0 if h == 3 else 1.0)
+    assert mon.stragglers() == [3]          # default z=3.0
+    # a healthy fleet with small jitter flags nobody
+    mon2 = HeartbeatMonitor(range(5), timeout=100.0, clock=lambda: t[0])
+    for i in range(10):
+        for h in range(5):
+            mon2.beat(h, 1.0 + 0.01 * ((h + i) % 3))
+    assert mon2.stragglers() == []
+
+
+def test_heartbeat_touch_grants_fresh_window():
+    # survivors' stamps go stale during a restart gap (mesh rebuild +
+    # re-jit); touch() on loop re-entry must not leave them "dead"
+    t = [0.0]
+    mon = HeartbeatMonitor(range(4), timeout=5.0, clock=lambda: t[0])
+    t[0] = 100.0                            # long restart gap
+    assert set(mon.dead_hosts()) == {0, 1, 2, 3}
+    mon.touch()
+    assert mon.dead_hosts() == []
+
+
+def test_heartbeat_drop_acknowledges_dead_hosts():
+    t = [0.0]
+    mon = HeartbeatMonitor([0, 1, 2], timeout=5.0, clock=lambda: t[0])
+    t[0] = 100.0
+    mon.beat(0)
+    assert mon.dead_hosts() == [1, 2]
+    mon.drop([1, 2])
+    # re-entry with the same monitor must not re-trigger on written-off hosts
+    assert mon.dead_hosts() == []
+    assert mon.hosts == [0]
+    assert mon.survivors() == [0]
+
+
+def test_mesh_from_plan_matches_plan_chips():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent("""
+        import numpy as np
+        from repro.dist import replan
+        from repro.launch.mesh import mesh_from_plan
+        plan = replan([1, 2, 3], chips_per_host=2, model_parallel=2)
+        mesh = mesh_from_plan(plan)
+        assert tuple(mesh.shape.values()) == plan.mesh_shape, mesh.shape
+        assert mesh.devices.size == plan.n_chips
+        print("mesh_from_plan OK", dict(mesh.shape))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "mesh_from_plan OK" in out.stdout
+
+
+# ------------------------------ replan -------------------------------
+
+
+def test_replan_full_fleet_identity():
+    plan = replan(range(64), chips_per_host=4, model_parallel=16,
+                  restore_step=None)
+    assert plan.mesh_shape == (16, 16)
+    assert plan.dropped_chips == 0
+    assert plan.restore_step is None
+    assert plan.n_chips == 256
+
+
+def test_replan_model_axis_never_shrinks():
+    # 2 hosts x 4 chips = 8 chips < model_parallel=16: must refuse, never
+    # silently re-partition the TP layout
+    with pytest.raises(ValueError):
+        replan([0, 1], chips_per_host=4, model_parallel=16)
+
+
+def test_replan_no_survivors():
+    with pytest.raises(ValueError):
+        replan([], chips_per_host=4, model_parallel=16)
+
+
+def test_replan_accounts_dropped_chips():
+    survivors = range(55)              # 220 chips, mesh 8x16=128 used
+    plan = replan(survivors, chips_per_host=4, model_parallel=16)
+    assert plan.n_chips + plan.dropped_chips == 220
+    assert isinstance(plan, Plan)
+
+
+def test_replan_drops_pods_below_one_model_slice():
+    # pod 0 survives with 1 chip < model_parallel=4: it must be excluded
+    # (idle), not assigned a dp*mp slice it cannot host
+    survivors = [0] + list(range(8, 16))
+    plan = replan(survivors, chips_per_host=1, model_parallel=4,
+                  pod_size_hosts=8)
+    assert plan.mesh_shape == (1, 2, 4)
+    assert 0 not in plan.hosts
+    assert plan.dropped_chips == 1
+    with pytest.raises(ValueError):
+        replan([0], chips_per_host=1, model_parallel=4, pod_size_hosts=8)
+
+
+def test_replan_multipod_equal_pod_width():
+    # pod0 has 33 hosts (132 chips), pod1 has 64 (256): the common data
+    # width is set by the weakest pod -> 132//16=8 -> pow2 floor 8
+    survivors = list(range(31, 64)) + list(range(64, 128))
+    plan = replan(survivors, chips_per_host=4, model_parallel=16,
+                  pod_size_hosts=64)
+    assert plan.mesh_axes == ("pod", "data", "model")
+    assert plan.mesh_shape[0] == 2
+    d = plan.mesh_shape[1]
+    assert d & (d - 1) == 0
+    assert plan.mesh_shape[1] * plan.mesh_shape[2] <= 132

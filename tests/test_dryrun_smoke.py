@@ -19,8 +19,8 @@ def test_lower_cell_smoke_configs():
         import dataclasses, jax
         from repro.configs import get_config
         from repro.launch.dryrun import lower_cell
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.dist.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         for arch in ("deepseek-7b", "qwen3-moe-30b-a3b", "xlstm-1.3b"):
             smoke = get_config(arch, smoke=True)
             for cell in ("train_4k", "decode_32k"):
@@ -38,3 +38,27 @@ def test_lower_cell_smoke_configs():
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "dryrun machinery OK" in out.stdout
+
+
+def test_lower_acdc_plane():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = textwrap.dedent("""
+        from repro.dist import AcdcShapes
+        from repro.dist.compat import make_mesh
+        from repro.launch.dryrun import lower_acdc
+        mesh = make_mesh((2, 4), ("data", "model"))
+        small = AcdcShapes(rows_per_shard=2000, pair_hash_slots=1 << 12,
+                           sigma_nnz=40_000, n_params=1024)
+        for combine in ("psum", "reduce_scatter"):
+            rs = lower_acdc(mesh, combine=combine, shapes=small,
+                            verbose=False)
+            assert [r.cell for r in rs] == ["aggregate_pass", "bgd_step"]
+            assert all(r.ok and r.compile_s > 0 for r in rs)
+        print("acdc plane OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "acdc plane OK" in out.stdout

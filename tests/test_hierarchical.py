@@ -15,10 +15,10 @@ def test_hierarchical_psum_matches_flat():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.dist.compat import make_mesh, shard_map
         from repro.dist.hierarchical import hierarchical_psum
 
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("pod", "data"))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
 
         def flat(xl):
@@ -29,10 +29,9 @@ def test_hierarchical_psum_matches_flat():
 
         # replicated operand: every device holds the full (8, 16) gradient
         # block, so the in-pod reduce-scatter path is actually exercised
-        specs = dict(mesh=mesh, in_specs=(P(),),
-                     out_specs=P(), check_vma=False)
-        a = jax.jit(jax.shard_map(flat, **specs))(x)
-        b = jax.jit(jax.shard_map(hier, **specs))(x)
+        specs = dict(mesh=mesh, in_specs=(P(),), out_specs=P())
+        a = jax.jit(shard_map(flat, **specs))(x)
+        b = jax.jit(shard_map(hier, **specs))(x)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-6)
         print("hierarchical psum OK")

@@ -25,9 +25,9 @@ def test_best_batch_axes_and_resolve():
         import jax
         from jax.sharding import PartitionSpec as P
         from repro.launch import mesh as M
+        from repro.dist.compat import make_mesh
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         # full product divides -> all data axes
         assert M.best_batch_axes(mesh, 8, ("pod", "data")) == ("pod", "data")
         # only a suffix divides

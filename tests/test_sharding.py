@@ -33,6 +33,7 @@ def test_moe_ep_matches_single_device():
         from repro.configs import get_config
         from repro.models.model import LM
         from repro.launch import mesh as meshlib
+        from repro.dist.compat import make_mesh
 
         cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
         import dataclasses
@@ -46,8 +47,7 @@ def test_moe_ep_matches_single_device():
         params = m1.init(key)
         l1 = float(jax.jit(m1.train_loss)(params, batch))
 
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2,4), ("data","model"))
         m2 = LM(cfg, mesh_info=meshlib.mesh_info(mesh))
         l2 = float(jax.jit(m2.train_loss)(params, batch))
         assert abs(l1 - l2) < 2e-3, (l1, l2)
@@ -61,6 +61,7 @@ def test_tp_dense_matches_single_device():
         from repro.configs import get_config
         from repro.models.model import LM
         from repro.launch import mesh as meshlib
+        from repro.dist.compat import make_mesh
 
         cfg = dataclasses.replace(get_config("gemma3-27b", smoke=True), dtype="float32")
         key = jax.random.PRNGKey(0)
@@ -70,8 +71,7 @@ def test_tp_dense_matches_single_device():
         m1 = LM(cfg)
         params = m1.init(key)
         l1 = float(jax.jit(m1.train_loss)(params, batch))
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2,4), ("data","model"))
         m2 = LM(cfg, mesh_info=meshlib.mesh_info(mesh))
         shapes, specs = m2.param_shapes_and_specs(key)
         shard = meshlib.resolve(specs, shapes, mesh, cfg, fsdp=False)
@@ -90,6 +90,7 @@ def test_moe_tp_layout_matches_single_device():
         from repro.configs import get_config
         from repro.models.model import LM
         from repro.launch import mesh as meshlib
+        from repro.dist.compat import make_mesh
 
         cfg = dataclasses.replace(get_config("grok-1-314b", smoke=True), dtype="float32")
         assert cfg.moe.num_experts % 8 != 0
@@ -100,8 +101,7 @@ def test_moe_tp_layout_matches_single_device():
         m1 = LM(cfg)
         params = m1.init(key)
         l1 = float(jax.jit(m1.train_loss)(params, batch))
-        mesh = jax.make_mesh((1,8), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((1,8), ("data","model"))
         m2 = LM(cfg, mesh_info=meshlib.mesh_info(mesh))
         l2 = float(jax.jit(m2.train_loss)(params, batch))
         assert abs(l1 - l2) < 2e-3, (l1, l2)
@@ -114,16 +114,16 @@ def test_compressed_psum_under_shard_map():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.dist import compressed_psum
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.compat import make_mesh, shard_map
+        mesh = make_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
         e = jnp.zeros((8, 128))
         def body(gl, el):
             mean, err = compressed_psum(gl[0], el[0], "data")
             return mean[None], err[None]
-        fn = jax.jit(jax.shard_map(body, mesh=mesh,
+        fn = jax.jit(shard_map(body, mesh=mesh,
                      in_specs=(P("data"), P("data")),
-                     out_specs=(P("data"), P("data")), check_vma=False))
+                     out_specs=(P("data"), P("data"))))
         mean, err = fn(g, e)
         true_mean = jnp.mean(g, axis=0)
         got = np.asarray(mean[0])
