@@ -17,7 +17,6 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.api import prepare, train
 from repro.core.engine import compute_aggregates
 from repro.core.oracle import (
     materialize_join,
@@ -27,6 +26,16 @@ from repro.core.oracle import (
 from repro.core.solver import closed_form_ridge
 from repro.core.variable_order import analyze
 from repro.data.retailer import fragment, variable_order
+from repro.session import (
+    FactorizationMachine,
+    LinearRegression,
+    PolynomialRegression,
+    Session,
+    SolverConfig,
+    compressed_bytes_per_step,
+    psum_bytes_per_step,
+    spec_from_string,
+)
 
 FRAGMENTS = ["v1", "v2", "v3", "v4"]
 SCALE = 1.0
@@ -52,30 +61,26 @@ def bench_compression(emit) -> None:
 
 
 def _bench_model(model: str, emit, fd_on_v4: bool = True) -> None:
+    cfg = SolverConfig(max_iters=500, tol=1e-9, policy="single")
     for name in FRAGMENTS:
         db, feats = fragment(name, SCALE)
-        order = variable_order()
+        sess = Session(db, variable_order())
         variants = [("", ())]
         if fd_on_v4 and name == "v4" and db.fds:
             variants.append(("+FD", db.fds))
         for tag, fds in variants:
-            t0 = time.perf_counter()
-            m, sig, wl, plan, agg_s = prepare(
-                db, order, feats, "units", model, 1e-2, fds, 8
+            r = sess.fit(
+                spec_from_string(model, lam=1e-2), feats, "units",
+                fds=fds, solver=cfg,
             )
-            t0 = time.perf_counter()
-            from repro.core.solver import bgd
-
-            sol = bgd(lambda p: m.loss(sig, p), m.init_params(),
-                      max_iters=500, tol=1e-9)
-            conv_s = time.perf_counter() - t0
+            sig = r.sigma
             n_cat = sum(b.size for b in sig.space.blocks if b.sig)
             n_cont = sig.space.total - n_cat
             emit(
-                f"{model}{tag}/{name}", agg_s * 1e6,
+                f"{model}{tag}/{name}", r.aggregate_seconds * 1e6,
                 f"features={n_cont}+{n_cat};distinct_aggs={sig.nnz_distinct};"
-                f"agg_s={agg_s:.2f};conv_s={conv_s:.2f};iters={sol.iterations};"
-                f"loss={sol.loss:.4f}",
+                f"agg_s={r.aggregate_seconds:.2f};conv_s={r.converge_seconds:.2f};"
+                f"iters={r.solver.iterations};loss={r.loss:.4f}",
             )
 
 
@@ -98,11 +103,14 @@ def bench_materialize_baseline(emit) -> None:
     paper, where each competitor hits its own size limit."""
     for name in ("v1", "v4"):
         db, feats = fragment(name, SCALE)
-        order = variable_order()
         t0 = time.perf_counter()
         join = materialize_join(db)
         mat_s = time.perf_counter() - t0
-        m, sig, wl, plan, agg_s = prepare(db, order, feats, "units", "lr", 1e-2)
+        sess = Session(db, variable_order())
+        m, sig, wl, bundle = sess.materialize(
+            LinearRegression(lam=1e-2), feats, "units"
+        )
+        agg_s = bundle.aggregate_seconds
         n_onehot = sig.space.total
         if len(join["units"]) * n_onehot > 4e8:
             emit(f"baseline-onehot/{name}", 0.0,
@@ -144,4 +152,71 @@ def bench_sharing(emit) -> None:
         f"all_{len(wl.aggregates)}_shared_s={shared_s:.2f};"
         f"extrapolated_individual_s={indiv_s:.2f};"
         f"speedup={indiv_s/max(shared_s,1e-9):.1f}x",
+    )
+
+
+def bench_session_reuse(emit) -> None:
+    """The session API's multi-model sharing: LR + PR2 + FaMa off one
+    bundle vs three one-shot pipelines (the legacy train() cost model)."""
+    db, feats = fragment("v1", SCALE)
+    specs = [
+        LinearRegression(lam=1e-2),
+        PolynomialRegression(degree=2, lam=1e-2),
+        FactorizationMachine(rank=8, lam=1e-2),
+    ]
+    cfg = SolverConfig(max_iters=300, tol=1e-9, policy="single")
+
+    t0 = time.perf_counter()
+    sess = Session(db, variable_order())
+    shared = sess.fit_many(specs, feats, "units", solver=cfg)
+    shared_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for spec in specs:
+        Session(db, variable_order()).fit(spec, feats, "units", solver=cfg)
+    separate_s = time.perf_counter() - t0
+
+    emit(
+        "session-reuse/v1", shared_s * 1e6,
+        f"models={len(specs)};aggregate_passes={sess.stats.aggregate_passes};"
+        f"shared_s={shared_s:.2f};separate_sessions_s={separate_s:.2f};"
+        f"speedup={separate_s/max(shared_s,1e-9):.2f}x;"
+        f"losses={'/'.join(f'{r.loss:.4f}' for r in shared)}",
+    )
+
+
+def bench_grad_compression(emit) -> None:
+    """ROADMAP "Quantized all-reduce benchmark": the int8 error-feedback
+    gradient combine (dist.compressed_psum under SolverConfig) vs the f32
+    psum — convergence cost measured, per-device wire bytes/step recorded
+    for the local device count and the production 8-way data axis."""
+    import jax
+
+    db, feats = fragment("v1", SCALE)
+    sess = Session(db, variable_order())
+    spec = LinearRegression(lam=1e-2)
+
+    t0 = time.perf_counter()
+    base = sess.fit(spec, feats, "units",
+                    solver=SolverConfig(max_iters=1000, tol=1e-9,
+                                        policy="single"))
+    base_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    comp = sess.fit(spec, feats, "units",
+                    solver=SolverConfig(max_iters=1000, tol=1e-9,
+                                        grad_compression="int8"))
+    comp_s = time.perf_counter() - t0
+
+    npar = base.sigma.space.total
+    n_local = jax.device_count()
+    emit(
+        "grad-compression/v1-lr", comp_s * 1e6,
+        f"params={npar};"
+        f"f32_bytes_step_n{n_local}={psum_bytes_per_step(npar, n_local)};"
+        f"int8_bytes_step_n{n_local}={compressed_bytes_per_step(npar, n_local)};"
+        f"f32_bytes_step_n8={psum_bytes_per_step(npar, 8)};"
+        f"int8_bytes_step_n8={compressed_bytes_per_step(npar, 8)};"
+        f"f32_iters={base.solver.iterations};int8_iters={comp.solver.iterations};"
+        f"f32_s={base_s:.2f};int8_s={comp_s:.2f};"
+        f"loss_delta={abs(base.loss - comp.loss):.2e}",
     )

@@ -24,6 +24,8 @@ BENCHES = [
     bench_acdc.bench_fama,
     bench_acdc.bench_materialize_baseline,
     bench_acdc.bench_sharing,
+    bench_acdc.bench_session_reuse,
+    bench_acdc.bench_grad_compression,
     bench_kernels.bench_sigma_fused,
     bench_kernels.bench_seg_outer,
     bench_kernels.bench_swa_vs_full,

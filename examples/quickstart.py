@@ -1,8 +1,10 @@
 """Quickstart: in-database ridge regression over a multi-relation join.
 
-Builds a tiny retailer database (5 relations), trains LR entirely in the
-database via factorized aggregates + BGD, and verifies against the closed
-form. Run:  PYTHONPATH=src python examples/quickstart.py
+Builds a tiny retailer database (5 relations), registers it in a Session,
+trains LR entirely in the database via one factorized aggregate pass + BGD,
+and verifies against the closed form — then fits PR2 off the SAME session
+to show the bundle cache at work.
+Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
@@ -11,18 +13,18 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core.api import train
 from repro.core.solver import closed_form_ridge
 from repro.data.retailer import RetailerSpec, features, generate, variable_order
+from repro.session import LinearRegression, PolynomialRegression, Session
 
 
 def main():
     db = generate(RetailerSpec(n_locn=15, n_zip=8, n_date=20, n_sku=25))
     print("relations:", {n: r.num_rows for n, r in db.relations.items()})
 
-    order = variable_order()
+    sess = Session(db, variable_order())
     feats = features()
-    result = train(db, order, feats, response="units", model="lr", lam=1e-2)
+    result = sess.fit(LinearRegression(lam=1e-2), feats, response="units")
 
     fz = result.plan.fz
     print(f"|Q(D)| = {int(result.sigma.count)} join rows")
@@ -41,6 +43,16 @@ def main():
     err = np.abs(np.asarray(result.params) - theta_cf).max()
     print(f"max |theta - closed_form| = {err:.2e}")
     assert err < 5e-3  # BGD tol vs closed form
+
+    # A degree-2 model needs a new bundle (LR's aggregates don't subsume
+    # it); refitting LR afterwards is pure cache — no third pass.
+    pr2 = sess.fit(PolynomialRegression(degree=2, lam=1e-2), feats, "units")
+    lr2 = sess.fit(LinearRegression(lam=1e-2), feats, "units")
+    print(f"PR2 loss {pr2.loss:.5f}, LR refit loss {lr2.loss:.5f} "
+          f"(aggregate passes: {sess.stats.aggregate_passes}, "
+          f"bundle hits: {sess.stats.bundle_hits})")
+    assert sess.stats.aggregate_passes == 2   # 3 fits, 2 passes
+    assert sess.stats.bundle_hits == 1
     print("OK")
 
 

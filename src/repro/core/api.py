@@ -1,36 +1,34 @@
-"""End-to-end in-database learning API (the paper's full pipeline).
+"""DEPRECATED one-shot API — thin wrappers over ``repro.session``.
 
     result = train(db, order, features=..., response=..., model="pr2")
 
-runs: variable-order analysis -> factorize -> aggregate registers -> one
-factorized aggregate pass -> sparse (Sigma, c, s_Y) -> BGD until convergence.
-With ``fds=db.fds`` the workload is computed over the FD-reduced feature set
-and the penalty is reparameterized (AC/DC+FD).
+The monolithic entry point re-ran variable-order analysis and the full
+factorized aggregate pass per call and hid the multi-device decision in a
+device-count check. New code should use the staged surface (DESIGN.md §8):
+
+    from repro.session import Session, PolynomialRegression, SolverConfig
+    sess = Session(db, order)
+    r = sess.fit(PolynomialRegression(degree=2, lam=...), features, response)
+
+which shares one aggregate pass across every model whose cofactors it
+subsumes. These wrappers delegate to a fresh single-use ``Session`` so the
+numerics (and the ``jax.device_count() > 1`` sharding default, now the
+``auto`` ExecutionPolicy) are identical to the historical behavior.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import List, Optional, Sequence
+import warnings
+from typing import Sequence
 
-import numpy as np
-
-from . import fd as fdmod
-from .engine import AggregateResult, EnginePlan, compute_aggregates
-from .glm import (
-    polynomial_regression,
-    Model,
-    factorization_machine,
-    linear_regression,
-    polynomial_regression2,
-    workload_for,
-)
+from .engine import EnginePlan
+from .glm import Model
 from .monomials import Workload
 from .schema import FD, Database
-from .sigma import SigmaCSY, build_param_space, build_sigma
-from .solver import SolverResult, bgd, shard_sigma_for_bgd
-from .variable_order import OrderInfo, VarNode, analyze
+from .sigma import SigmaCSY
+from .solver import SolverResult
+from .variable_order import VarNode
 
 
 @dataclasses.dataclass
@@ -49,6 +47,15 @@ class TrainResult:
         return self.solver.loss
 
 
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"core.api.{name}() is deprecated; use repro.session.Session — it "
+        f"shares one aggregate pass across models (DESIGN.md §8)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def prepare(
     db: Database,
     order: VarNode,
@@ -60,30 +67,13 @@ def prepare(
     rank: int = 8,
 ):
     """Aggregate pass only: returns (model, sigma, workload, plan, seconds)."""
-    info = analyze(order, db)
-    feats = list(features)
-    fd_penalty = None
-    if fds:
-        feats = fdmod.reduced_features(feats, fds)
-    wl = workload_for(db, feats, response, model)
-    t0 = time.perf_counter()
-    res, plan = compute_aggregates(db, info, wl.aggregates)
-    sig = build_sigma(db, wl, res)
-    agg_s = time.perf_counter() - t0
-    if fds:
-        fd_penalty = fdmod.build_fd_penalty(db, sig.space, fds)
-    if model == "lr":
-        m = linear_regression(db, wl, sig.space, lam)
-    elif model == "pr2":
-        m = polynomial_regression2(db, wl, sig.space, lam)
-    elif model.startswith("pr") and model[2:].isdigit():
-        m = polynomial_regression(db, wl, sig.space, int(model[2:]), lam)
-    elif model == "fama":
-        m = factorization_machine(db, wl, sig.space, rank=rank, lam=lam)
-    else:
-        raise ValueError(model)
-    m.fd_penalty = fd_penalty
-    return m, sig, wl, plan, agg_s
+    _deprecated("prepare")
+    from repro.session import Session, spec_from_string
+
+    sess = Session(db, order)
+    spec = spec_from_string(model, rank=rank, lam=lam)
+    m, sig, wl, bundle = sess.materialize(spec, features, response, fds)
+    return m, sig, wl, bundle.plan, bundle.aggregate_seconds
 
 
 def train(
@@ -98,29 +88,25 @@ def train(
     max_iters: int = 1000,
     tol: float = 1e-10,
 ) -> TrainResult:
-    m, sig, wl, plan, agg_s = prepare(
-        db, order, features, response, model, lam, fds, rank
-    )
-    import jax
+    _deprecated("train")
+    from repro.session import Session, SolverConfig, spec_from_string
 
-    if jax.device_count() > 1:
-        # multi-device: Sigma COO sharded, matvec partials psum-combined
-        sig = shard_sigma_for_bgd(sig)
-    t0 = time.perf_counter()
-    sol = bgd(
-        lambda p: m.loss(sig, p),
-        m.init_params(),
-        max_iters=max_iters,
-        tol=tol,
+    sess = Session(db, order)
+    spec = spec_from_string(model, rank=rank, lam=lam)
+    r = sess.fit(
+        spec,
+        features,
+        response,
+        fds=fds,
+        solver=SolverConfig(max_iters=max_iters, tol=tol),
     )
-    conv_s = time.perf_counter() - t0
     return TrainResult(
-        model=m,
-        params=sol.params,
-        sigma=sig,
-        workload=wl,
-        plan=plan,
-        solver=sol,
-        aggregate_seconds=agg_s,
-        converge_seconds=conv_s,
+        model=r.model,
+        params=r.params,
+        sigma=r.sigma,
+        workload=r.workload,
+        plan=r.plan,
+        solver=r.solver,
+        aggregate_seconds=r.aggregate_seconds,
+        converge_seconds=r.converge_seconds,
     )

@@ -217,15 +217,29 @@ def factorization_machine(
     )
 
 
+# the aggregate requirement of each model string: (degree, squares in h).
+# ``repro.session.specs`` is the typed surface over the same mapping; this
+# stays in core so the core package never imports upward.
+MODEL_REQUIREMENTS = {
+    "lr": (1, True),
+    "pr2": (2, True),
+    "fama": (2, False),
+}
+
+
+def model_requirement(model: str):
+    """(degree, squares) for a legacy model string."""
+    if model in MODEL_REQUIREMENTS:
+        return MODEL_REQUIREMENTS[model]
+    if model.startswith("pr") and model[2:].isdigit():
+        return int(model[2:]), True
+    raise ValueError(model)
+
+
 def workload_for(
     db: Database, features: Sequence[str], response: str, model: str
 ) -> Workload:
-    if model == "lr":
-        return build_workload(db, features, response, 1)
-    if model == "pr2":
-        return build_workload(db, features, response, 2)
-    if model.startswith("pr") and model[2:].isdigit():
-        return build_workload(db, features, response, int(model[2:]))
-    if model == "fama":
-        return build_workload(db, features, response, 2, squares=False)
-    raise ValueError(model)
+    """Legacy string dispatch (kept for the deprecation surface; new code
+    uses typed specs — ``repro.session.specs``)."""
+    degree_, squares = model_requirement(model)
+    return build_workload(db, features, response, degree_, squares=squares)

@@ -30,6 +30,7 @@ class SolverState(NamedTuple):
     alpha: jnp.ndarray
     it: jnp.ndarray
     converged: jnp.ndarray
+    carry: object                 # grad_fn state (e.g. error-feedback residual)
 
 
 @dataclasses.dataclass
@@ -38,6 +39,7 @@ class SolverResult:
     loss: float
     iterations: int
     converged: bool
+    carry: object = None          # final grad_fn state
 
 
 def bgd(
@@ -48,15 +50,35 @@ def bgd(
     alpha0: float = 1.0,
     bb_step: bool = True,
     max_backtracks: int = 50,
+    grad_fn: Optional[Callable] = None,
+    carry0=None,
 ) -> SolverResult:
-    """Minimize ``loss_fn(params)``; params may be any pytree."""
+    """Minimize ``loss_fn(params)``; params may be any pytree.
+
+    ``grad_fn(theta, carry) -> (loss, grad, new_carry)`` overrides the
+    default ``jax.value_and_grad`` over flattened parameters and threads an
+    arbitrary state pytree through the loop — how the session API wires the
+    error-feedback compressed gradient combine (``dist.compressed_psum``)
+    into the BGD iteration. The Armijo line search always evaluates the
+    exact ``loss_fn`` (compression perturbs the step direction, never the
+    acceptance test).
+    """
     theta0, unravel = ravel_pytree(params0)
     theta0 = theta0.astype(jnp.float64)
 
     def f(theta):
         return loss_fn(unravel(theta))
 
-    vg = jax.value_and_grad(f)
+    carry0 = () if carry0 is None else carry0
+    if grad_fn is None:
+        _vg = jax.value_and_grad(f)
+
+        def vg(theta, carry):
+            loss, grad = _vg(theta)
+            return loss, grad, carry
+
+    else:
+        vg = grad_fn
 
     def line_search(theta, loss, grad, alpha):
         gnorm2 = jnp.dot(grad, grad)
@@ -75,7 +97,7 @@ def bgd(
         return alpha
 
     def step(state: SolverState) -> SolverState:
-        loss, grad = vg(state.theta)
+        loss, grad, carry = vg(state.theta, state.carry)
         # Barzilai-Borwein initial step for this iteration
         dx = state.theta - state.prev_theta
         dg = grad - state.prev_grad
@@ -101,12 +123,13 @@ def bgd(
             alpha=alpha,
             it=state.it + 1,
             converged=converged,
+            carry=carry,
         )
 
     def cond(state: SolverState):
         return jnp.logical_and(state.it < max_iters, ~state.converged)
 
-    loss0, grad0 = vg(theta0)
+    loss0, grad0, carry0 = vg(theta0, carry0)
     init = SolverState(
         theta=theta0,
         prev_theta=theta0 + 1e-8,
@@ -115,6 +138,7 @@ def bgd(
         alpha=jnp.float64(alpha0),
         it=jnp.int32(0),
         converged=jnp.array(False),
+        carry=carry0,
     )
     final = jax.lax.while_loop(cond, step, init)
     return SolverResult(
@@ -122,6 +146,7 @@ def bgd(
         loss=float(final.loss),
         iterations=int(final.it),
         converged=bool(final.converged),
+        carry=final.carry,
     )
 
 

@@ -8,6 +8,10 @@ straggler hooks, restart-from-step, and — when the heartbeat monitor
 declares hosts dead — an elastic exit that checkpoints and hands back a
 ``repro.dist.Plan`` for the surviving fleet (``launch.mesh.mesh_from_plan``
 turns it into the restart mesh).
+
+``acdc_main`` (the module's CLI) is the AC/DC-plane launch entry: it
+drives the ``repro.session`` Session/ModelSpec surface — one shared
+aggregate bundle, N models, explicit ExecutionPolicy.
 """
 
 from __future__ import annotations
@@ -196,3 +200,76 @@ def train_loop(
         mgr.save(loop.total_steps, state)
         mgr.close()
     return {"state": state, "history": history, "plan": None}
+
+
+# ----------------------------------------------------------------------
+# AC/DC plane: session-driven launch entry
+# ----------------------------------------------------------------------
+
+
+def acdc_main(argv=None) -> int:
+    """Train the retailer workload off one shared session bundle.
+
+        python -m repro.launch.train --fragment v4 --models lr,pr2,fama \
+            --policy auto [--fd] [--grad-compression int8]
+
+    Replaces the old ``core.api.train`` one-shot path on the launch
+    surface: the aggregate pass is compiled once per (features, response,
+    FD set) and every requested model trains off the shared bundle; the
+    multi-device decision is the explicit ``--policy`` ExecutionPolicy
+    instead of a hidden device-count branch."""
+    import argparse
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.data.retailer import fragment, variable_order
+    from repro.session import (
+        ExecutionPolicy, Session, SolverConfig, spec_from_string,
+    )
+
+    p = argparse.ArgumentParser(description=acdc_main.__doc__)
+    p.add_argument("--fragment", default="v1", choices=["v1", "v2", "v3", "v4"])
+    p.add_argument("--scale", type=float, default=0.5)
+    p.add_argument("--models", default="lr,pr2,fama",
+                   help="comma-separated: lr | prN | fama")
+    p.add_argument("--policy", default=ExecutionPolicy.AUTO,
+                   choices=list(ExecutionPolicy.ALL))
+    p.add_argument("--grad-compression", default="none",
+                   choices=["none", "int4", "int8", "int16"])
+    p.add_argument("--fd", action="store_true",
+                   help="train over the FD-reduced feature set")
+    p.add_argument("--lam", type=float, default=1e-2)
+    p.add_argument("--rank", type=int, default=8)
+    p.add_argument("--max-iters", type=int, default=500)
+    p.add_argument("--tol", type=float, default=1e-9)
+    args = p.parse_args(argv)
+
+    db, feats = fragment(args.fragment, args.scale)
+    sess = Session(db, variable_order())
+    specs = [
+        spec_from_string(m.strip(), rank=args.rank, lam=args.lam)
+        for m in args.models.split(",") if m.strip()
+    ]
+    cfg = SolverConfig(
+        max_iters=args.max_iters,
+        tol=args.tol,
+        policy=args.policy,
+        grad_compression=(
+            None if args.grad_compression == "none" else args.grad_compression
+        ),
+    )
+    results = sess.fit_many(
+        specs, feats, "units", fds=db.fds if args.fd else (), solver=cfg
+    )
+    print(f"[acdc] {len(specs)} models, "
+          f"{sess.stats.aggregate_passes} aggregate pass(es), "
+          f"policy={args.policy}, devices={jax.device_count()}")
+    for spec, r in zip(specs, results):
+        print(f"[acdc] {spec.name:5s} loss={r.loss:.5f} "
+              f"iters={r.solver.iterations} agg={r.aggregate_seconds:.2f}s "
+              f"conv={r.converge_seconds:.2f}s params={r.sigma.space.total}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(acdc_main())

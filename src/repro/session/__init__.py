@@ -1,0 +1,45 @@
+"""repro.session — the staged Session/ModelSpec learning API (DESIGN.md §8).
+
+One aggregate pass, many models: ``Session`` registers a database once,
+``compile`` turns a (features, response, degree) workload into a cached
+``AggregateBundle``, and ``fit``/``fit_many`` train typed ``ModelSpec``s
+off the shared bundle under an explicit ``SolverConfig``/``ExecutionPolicy``.
+The legacy ``core.api.train``/``prepare`` are deprecation wrappers over
+this surface.
+"""
+
+from .bundle import AggregateBundle, BundleKey, workload_key
+from .compressed import (
+    compressed_bytes_per_step,
+    make_compressed_grad_fn,
+    psum_bytes_per_step,
+)
+from .session import FitResult, Session, SessionStats
+from .specs import (
+    ExecutionPolicy,
+    FactorizationMachine,
+    LinearRegression,
+    ModelSpec,
+    PolynomialRegression,
+    SolverConfig,
+    spec_from_string,
+)
+
+__all__ = [
+    "AggregateBundle",
+    "BundleKey",
+    "ExecutionPolicy",
+    "FactorizationMachine",
+    "FitResult",
+    "LinearRegression",
+    "ModelSpec",
+    "PolynomialRegression",
+    "Session",
+    "SessionStats",
+    "SolverConfig",
+    "compressed_bytes_per_step",
+    "make_compressed_grad_fn",
+    "psum_bytes_per_step",
+    "spec_from_string",
+    "workload_key",
+]

@@ -1,0 +1,111 @@
+"""The shared aggregate bundle: one factorized pass, many models.
+
+AC/DC's headline economics (paper Table 1) come from the aggregate pass
+dominating convergence — and from the pass being SHARED: the cofactor
+aggregates of degree-2 polynomial regression subsume those of linear
+regression and the factorization machine. ``AggregateBundle`` is that
+sharing made explicit: it holds the output of ONE factorized aggregate
+pass (the ``AggregateResult`` monomial tables + the ``EnginePlan``) and
+assembles per-model ``SigmaCSY`` views from it with zero recomputation.
+
+Subsumption rule (DESIGN.md §8): a bundle covers a model workload W iff
+every aggregate monomial of W is present in the bundle's tables —
+``aggs(W) ⊆ aggs(B)``. Structurally this holds whenever features(W) ⊆
+features(B), degree(W) ≤ degree(B), squares(W) ⇒ squares(B), and the
+response and FD set match; the check below is the monomial-level one, so
+any coverage the structure implies is found without special cases.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core import fd as fdmod
+from repro.core.engine import AggregateResult, EnginePlan
+from repro.core.monomials import Workload
+from repro.core.schema import FD, Database
+from repro.core.sigma import SigmaCSY, build_sigma
+
+# identity of a model workload within a bundle's caches: the feature-map
+# components + response pin down Sigma/c/s_Y exactly
+WorkloadKey = Tuple[Tuple, str]
+
+
+def workload_key(wl: Workload) -> WorkloadKey:
+    return (tuple(wl.h_monos), wl.response)
+
+
+@dataclasses.dataclass(frozen=True)
+class BundleKey:
+    """Structural identity of a compiled bundle (fast-path lookup; the
+    authoritative coverage test is ``AggregateBundle.covers``)."""
+
+    features: Tuple[str, ...]          # post-FD-reduction, as compiled
+    response: str
+    degree: int
+    squares: bool
+    fds: Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+
+def fd_key(fds) -> Tuple[Tuple[str, Tuple[str, ...]], ...]:
+    return tuple((f.determinant, tuple(f.determined)) for f in fds)
+
+
+@dataclasses.dataclass
+class AggregateBundle:
+    """One aggregate pass's worth of reusable state."""
+
+    key: BundleKey
+    workload: Workload                 # the bundle's (superset) workload
+    result: AggregateResult
+    plan: EnginePlan
+    aggregate_seconds: float
+    fds: Tuple[FD, ...] = ()
+    sigma_builds: int = 0
+    _sigmas: Dict[WorkloadKey, SigmaCSY] = dataclasses.field(
+        default_factory=dict, repr=False
+    )
+    _sharded: Dict[WorkloadKey, SigmaCSY] = dataclasses.field(
+        default_factory=dict, repr=False
+    )
+    _penalties: Dict[WorkloadKey, object] = dataclasses.field(
+        default_factory=dict, repr=False
+    )
+
+    def covers(self, wl: Workload) -> bool:
+        """Monomial-level subsumption: every aggregate W needs is here."""
+        tables = self.result.tables
+        return (
+            wl.response == self.key.response
+            and all(m in tables for m in wl.aggregates)
+        )
+
+    def sigma_for(self, db: Database, wl: Workload) -> SigmaCSY:
+        """Assemble (Sigma, c, s_Y) for a covered model workload from the
+        shared tables — numpy gather/scatter only, no aggregate pass."""
+        k = workload_key(wl)
+        if k not in self._sigmas:
+            self._sigmas[k] = build_sigma(db, wl, self.result)
+            self.sigma_builds += 1
+        return self._sigmas[k]
+
+    def sharded_sigma_for(self, db: Database, wl: Workload) -> SigmaCSY:
+        """The same Sigma with its COO laid over the device mesh (cached so
+        ``fit_many`` device-puts each workload's COO once)."""
+        k = workload_key(wl)
+        if k not in self._sharded:
+            from repro.core.solver import shard_sigma_for_bgd
+
+            self._sharded[k] = shard_sigma_for_bgd(self.sigma_for(db, wl))
+        return self._sharded[k]
+
+    def penalty_for(self, db: Database, wl: Workload) -> Optional[object]:
+        """FD reparameterization penalty over this workload's param space."""
+        if not self.fds:
+            return None
+        k = workload_key(wl)
+        if k not in self._penalties:
+            space = self.sigma_for(db, wl).space
+            self._penalties[k] = fdmod.build_fd_penalty(db, space, self.fds)
+        return self._penalties[k]

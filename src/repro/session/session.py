@@ -1,0 +1,320 @@
+"""``Session`` — the staged, multi-model replacement for ``core.api.train``.
+
+The legacy entry point re-ran variable-order analysis and the full
+factorized aggregate pass on every call and hid the multi-device decision
+in a ``jax.device_count() > 1`` check. The session decomposes the pipeline
+into explicit, reusable stages:
+
+  Session(db, order)      register the database once: ``variable_order
+                          .analyze`` and the factorized representation are
+                          memoized for the session's lifetime;
+  session.compile(...)    ONE factorized aggregate pass per distinct
+                          monomial workload -> a cached AggregateBundle.
+                          A workload subsumed by an existing bundle
+                          (aggs(W) ⊆ aggs(B): lr ⊆ pr2, fama shares the
+                          cofactor tables) reuses it with zero
+                          recomputation;
+  session.fit(spec, ...)  assemble the spec's Sigma view from the bundle
+                          and run BGD under a SolverConfig whose
+                          ExecutionPolicy replaces the hidden device-count
+                          branch;
+  session.fit_many([...]) N models off one bundle, optional warm-starting.
+
+``session.stats`` counts aggregate passes / bundle hits so the sharing is
+observable (and testable): fitting LR + PR2 + FaMa costs exactly one pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import fd as fdmod
+from repro.core.engine import (
+    EnginePlan,
+    build_plan,
+    execute,
+    factorize,
+)
+from repro.core.glm import Model
+from repro.core.monomials import Workload, build_registers, build_workload
+from repro.core.schema import Database
+from repro.core.sigma import SigmaCSY
+from repro.core.solver import SolverResult, bgd
+from repro.core.variable_order import OrderInfo, VarNode, analyze
+
+from .bundle import AggregateBundle, BundleKey, fd_key
+from .compressed import make_compressed_grad_fn
+from .specs import ExecutionPolicy, ModelSpec, SolverConfig
+
+
+@dataclasses.dataclass
+class SessionStats:
+    aggregate_passes: int = 0      # factorized passes actually executed
+    bundle_hits: int = 0           # compile() requests served by subsumption
+    bundle_misses: int = 0
+    fits: int = 0
+
+
+@dataclasses.dataclass
+class FitResult:
+    """One fitted model + everything needed to predict/inspect it."""
+
+    spec: ModelSpec
+    model: Model
+    params: object
+    sigma: SigmaCSY                # the Sigma the solver actually ran on
+    workload: Workload
+    plan: EnginePlan
+    solver: SolverResult
+    bundle: AggregateBundle
+    aggregate_seconds: float       # the (shared) bundle's pass time
+    converge_seconds: float
+
+    @property
+    def loss(self) -> float:
+        return self.solver.loss
+
+
+class Session:
+    """A registered database + memoized analysis + compiled bundles."""
+
+    def __init__(self, db: Database, order: VarNode):
+        self.db = db
+        self.order = order
+        self.info: OrderInfo = analyze(order, db)
+        self._fz = None
+        self.bundles: List[AggregateBundle] = []
+        self.stats = SessionStats()
+
+    # ------------------------------------------------------------------
+    def _factorized(self):
+        """The semi-join-reduced node tables: per-database work, built on
+        first use and shared by every subsequent aggregate pass."""
+        if self._fz is None:
+            self._fz = factorize(self.db, self.info)
+        return self._fz
+
+    def _reduced(self, features: Sequence[str], fds) -> List[str]:
+        feats = list(features)
+        return fdmod.reduced_features(feats, fds) if fds else feats
+
+    # ------------------------------------------------------------------
+    def compile(
+        self,
+        features: Sequence[str],
+        response: str,
+        fds=(),
+        degree: int = 2,
+        squares: bool = True,
+    ) -> AggregateBundle:
+        """Return a bundle covering the requested workload, running the
+        factorized aggregate pass only when no compiled bundle subsumes it."""
+        fds = tuple(fds)
+        feats = self._reduced(features, fds)
+        wl = build_workload(self.db, feats, response, degree, squares=squares)
+        fk = fd_key(fds)
+        for b in self.bundles:
+            if b.key.fds == fk and b.covers(wl):
+                self.stats.bundle_hits += 1
+                return b
+        self.stats.bundle_misses += 1
+
+        # factorization is session-memoized, per-database work: keep it out
+        # of the per-bundle timer so bundle timings are comparable
+        fz = self._factorized()
+        t0 = time.perf_counter()
+        regs = build_registers(wl.aggregates, self.info, self.db)
+        plan = build_plan(fz, regs)
+        res = execute(plan)
+        fz.num_join_rows = int(res.count)
+        agg_s = time.perf_counter() - t0
+        self.stats.aggregate_passes += 1
+
+        bundle = AggregateBundle(
+            key=BundleKey(
+                features=tuple(feats),
+                response=response,
+                degree=degree,
+                squares=squares,
+                fds=fk,
+            ),
+            workload=wl,
+            result=res,
+            plan=plan,
+            aggregate_seconds=agg_s,
+            fds=fds,
+        )
+        self.bundles.append(bundle)
+        return bundle
+
+    # ------------------------------------------------------------------
+    def materialize(
+        self,
+        spec: ModelSpec,
+        features: Sequence[str],
+        response: str,
+        fds=(),
+        bundle: Optional[AggregateBundle] = None,
+    ):
+        """Aggregate stage only: ``(model, sigma, workload, bundle)`` with
+        the spec's Sigma view assembled from a (possibly shared) bundle."""
+        fds = tuple(fds)
+        feats = self._reduced(features, fds)
+        wl = spec.workload(self.db, feats, response)
+        if bundle is None:
+            bundle = self.compile(
+                features, response, fds, degree=spec.degree,
+                squares=spec.squares,
+            )
+        elif bundle.key.fds != fd_key(fds):
+            # a plain bundle's tables can cover an FD-reduced workload, but
+            # its penalty_for would silently return the plain L2 penalty
+            raise ValueError(
+                f"bundle was compiled with fds={bundle.key.fds}, "
+                f"fit requested fds={fd_key(fds)}"
+            )
+        elif not bundle.covers(wl):
+            raise ValueError(
+                f"bundle {bundle.key} does not subsume the {spec.name} "
+                f"workload over {feats}"
+            )
+        sig = bundle.sigma_for(self.db, wl)
+        model = spec.build(self.db, wl, sig.space)
+        if fds:
+            model.fd_penalty = bundle.penalty_for(self.db, wl)
+        return model, sig, wl, bundle
+
+    # ------------------------------------------------------------------
+    def fit(
+        self,
+        spec: ModelSpec,
+        features: Sequence[str],
+        response: str,
+        fds=(),
+        solver: Optional[SolverConfig] = None,
+        bundle: Optional[AggregateBundle] = None,
+        warm_from: Optional[FitResult] = None,
+    ) -> FitResult:
+        solver = solver or SolverConfig()
+        model, sig, wl, bundle = self.materialize(
+            spec, features, response, fds, bundle
+        )
+
+        grad_fn = carry0 = None
+        if solver.grad_compression is not None:
+            # the compressed combine IS the sharded execution: it lays the
+            # COO over the device mesh itself, so the policy shard is moot
+            sig_exec = sig
+            grad_fn, carry0 = make_compressed_grad_fn(
+                model, sig, bits=solver.compression_bits
+            )
+        elif solver.policy == ExecutionPolicy.SINGLE:
+            sig_exec = sig
+        elif solver.policy == ExecutionPolicy.SHARDED_COO or (
+            solver.policy == ExecutionPolicy.AUTO and jax.device_count() > 1
+        ):
+            sig_exec = bundle.sharded_sigma_for(self.db, wl)
+        else:
+            sig_exec = sig
+
+        params0 = (
+            self._warm_params(model, warm_from)
+            if warm_from is not None
+            else model.init_params()
+        )
+        t0 = time.perf_counter()
+        sol = bgd(
+            lambda p: model.loss(sig_exec, p),
+            params0,
+            max_iters=solver.max_iters,
+            tol=solver.tol,
+            alpha0=solver.alpha0,
+            bb_step=solver.bb_step,
+            grad_fn=grad_fn,
+            carry0=carry0,
+        )
+        conv_s = time.perf_counter() - t0
+        self.stats.fits += 1
+        return FitResult(
+            spec=spec,
+            model=model,
+            params=sol.params,
+            sigma=sig_exec,
+            workload=wl,
+            plan=bundle.plan,
+            solver=sol,
+            bundle=bundle,
+            aggregate_seconds=bundle.aggregate_seconds,
+            converge_seconds=conv_s,
+        )
+
+    # ------------------------------------------------------------------
+    def fit_many(
+        self,
+        specs: Sequence[ModelSpec],
+        features: Sequence[str],
+        response: str,
+        fds=(),
+        solver: Optional[SolverConfig] = None,
+        warm_start: bool = False,
+    ) -> List[FitResult]:
+        """Train every spec off ONE bundle: the joint requirement (max
+        degree, squares if any spec's h has them) is compiled once and
+        every model's Sigma view is assembled from it."""
+        specs = list(specs)
+        if not specs:
+            return []
+        degree = max(s.degree for s in specs)
+        squares = any(s.squares and s.degree >= 2 for s in specs)
+        bundle = self.compile(
+            features, response, fds, degree=degree, squares=squares
+        )
+        out: List[FitResult] = []
+        for spec in specs:
+            out.append(
+                self.fit(
+                    spec,
+                    features,
+                    response,
+                    fds,
+                    solver=solver,
+                    bundle=bundle,
+                    warm_from=out[-1] if (warm_start and out) else None,
+                )
+            )
+        return out
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _warm_params(model: Model, warm: FitResult):
+        """Scatter a previous fit's theta into the new parameter space,
+        matching blocks by feature-map monomial (shared bundle => equal
+        block key tables, so matched blocks have equal sizes)."""
+        import jax.numpy as jnp
+
+        prev = warm.params
+        prev_vec = np.asarray(prev["theta"] if warm.model.name == "fama" else prev)
+        prev_by_mono = {b.mono: b for b in warm.model.space.blocks}
+        # FaMa interaction blocks draw g from V, their theta stays at zero
+        inert = (
+            {ix.block for ix in model.interactions or []}
+            if model.name == "fama"
+            else set()
+        )
+        theta = np.zeros(model.space.total, dtype=np.float64)
+        for i, b in enumerate(model.space.blocks):
+            pb = prev_by_mono.get(b.mono)
+            if i in inert or pb is None or pb.size != b.size:
+                continue
+            theta[b.offset : b.offset + b.size] = prev_vec[
+                pb.offset : pb.offset + pb.size
+            ]
+        if model.name == "fama":
+            init = model.init_params()
+            return {"theta": jnp.asarray(theta), "V": init["V"]}
+        return jnp.asarray(theta)

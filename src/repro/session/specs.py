@@ -1,0 +1,155 @@
+"""Typed model specifications and solver configuration for the session API.
+
+A ``ModelSpec`` is a declarative description of what to train — it carries
+the hyperparameters and knows which monomial workload its feature map needs
+(degree + whether squared continuous terms appear in h). The specs replace
+the ``model="pr2"`` / ``rank=8`` string+kwarg dispatch of the legacy
+``core.api.train`` surface: ``Session.fit`` consumes specs directly, and
+the bundle-subsumption rule (DESIGN.md §8) is driven by the spec's
+``(degree, squares)`` requirement.
+
+``SolverConfig`` surfaces the convergence-loop knobs the legacy API buried
+in kwargs, plus two that were previously implicit:
+
+  * ``policy`` — an explicit ``ExecutionPolicy`` replacing the hidden
+    ``jax.device_count() > 1`` branch: ``auto`` shards the Sigma COO when
+    more than one device is visible, ``single`` never shards,
+    ``sharded_coo`` always routes through ``dist.distribute_sigma``;
+  * ``grad_compression`` — ``"int8"`` (or ``"int4"``/``"int16"``) wires
+    ``dist.compressed_psum`` into the BGD gradient combine with per-shard
+    error feedback (ROADMAP "Quantized all-reduce benchmark").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import ClassVar, Optional, Sequence
+
+from repro.core.glm import (
+    Model,
+    factorization_machine,
+    linear_regression,
+    polynomial_regression,
+)
+from repro.core.monomials import Workload, build_workload
+from repro.core.schema import Database
+from repro.core.sigma import ParamSpace
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Base class: a hashable, typed description of one trainable model."""
+
+    lam: float = 1e-3
+
+    # aggregate requirement (overridden per spec): the feature-map degree
+    # and whether h contains squared continuous terms. Together with the
+    # feature set these determine the monomial workload — and therefore
+    # which AggregateBundle can serve the spec without a new pass.
+    degree: ClassVar[int] = 0
+    squares: ClassVar[bool] = True
+
+    @property
+    def name(self) -> str:
+        raise NotImplementedError
+
+    def workload(
+        self, db: Database, features: Sequence[str], response: str
+    ) -> Workload:
+        return build_workload(
+            db, features, response, self.degree, squares=self.squares
+        )
+
+    def build(self, db: Database, workload: Workload, space: ParamSpace) -> Model:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearRegression(ModelSpec):
+    degree: ClassVar[int] = 1
+
+    @property
+    def name(self) -> str:
+        return "lr"
+
+    def build(self, db, workload, space) -> Model:
+        return linear_regression(db, workload, space, self.lam)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolynomialRegression(ModelSpec):
+    degree: int = 2  # type: ignore[misc]  # instance field shadows the ClassVar
+
+    @property
+    def name(self) -> str:
+        return f"pr{self.degree}"
+
+    def build(self, db, workload, space) -> Model:
+        return polynomial_regression(db, workload, space, self.degree, self.lam)
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizationMachine(ModelSpec):
+    rank: int = 8
+    degree: ClassVar[int] = 2
+    squares: ClassVar[bool] = False   # FaMa h has no x^2 terms (glm.py)
+
+    @property
+    def name(self) -> str:
+        return "fama"
+
+    def build(self, db, workload, space) -> Model:
+        return factorization_machine(
+            db, workload, space, rank=self.rank, lam=self.lam
+        )
+
+
+def spec_from_string(model: str, rank: int = 8, lam: float = 1e-3) -> ModelSpec:
+    """Map the legacy ``model=`` strings onto typed specs (deprecation
+    surface: ``core.api.train``/``prepare`` and ``glm.workload_for``)."""
+    if model == "lr":
+        return LinearRegression(lam=lam)
+    if model.startswith("pr") and model[2:].isdigit():
+        return PolynomialRegression(lam=lam, degree=int(model[2:]))
+    if model == "fama":
+        return FactorizationMachine(lam=lam, rank=rank)
+    raise ValueError(f"unknown model string {model!r}")
+
+
+class ExecutionPolicy:
+    """Where the solver's O(nnz) inner loop runs (DESIGN.md §8)."""
+
+    AUTO = "auto"                # shard iff more than one device is visible
+    SINGLE = "single"            # never shard
+    SHARDED_COO = "sharded_coo"  # always lay the COO over the device mesh
+    ALL = (AUTO, SINGLE, SHARDED_COO)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    max_iters: int = 1000
+    tol: float = 1e-10
+    alpha0: float = 1.0
+    bb_step: bool = True
+    grad_compression: Optional[str] = None   # None | "int4" | "int8" | "int16"
+    policy: str = ExecutionPolicy.AUTO
+
+    def __post_init__(self) -> None:
+        if self.policy not in ExecutionPolicy.ALL:
+            raise ValueError(
+                f"policy must be one of {ExecutionPolicy.ALL}, "
+                f"got {self.policy!r}"
+            )
+        if self.grad_compression is not None and self.compression_bits is None:
+            raise ValueError(
+                f"grad_compression must look like 'int8', "
+                f"got {self.grad_compression!r}"
+            )
+
+    @property
+    def compression_bits(self) -> Optional[int]:
+        if self.grad_compression is None:
+            return None
+        m = re.fullmatch(r"int(\d+)", self.grad_compression)
+        return int(m.group(1)) if m else None

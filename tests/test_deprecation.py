@@ -1,0 +1,73 @@
+"""Deprecation surface: the ``core.distributed`` shim and the legacy
+``train()``/``prepare()`` signatures warn but produce results identical to
+the session path (small retailer workload)."""
+
+import importlib
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.api import prepare, train
+from repro.data.retailer import RetailerSpec, features, generate, variable_order
+from repro.session import LinearRegression, Session, SolverConfig
+
+
+@pytest.fixture(scope="module")
+def db():
+    return generate(RetailerSpec(n_locn=8, n_zip=5, n_date=10, n_sku=12))
+
+
+def test_core_distributed_shim_warns_and_reexports():
+    import repro.core.distributed as shim
+
+    with pytest.warns(DeprecationWarning, match="repro.dist"):
+        shim = importlib.reload(shim)
+    # the re-exports still resolve to the real substrate
+    from repro.dist.shard import lower_bgd_step
+
+    assert shim.lower_bgd_step is lower_bgd_step
+    assert shim.AcdcShapes is not None
+
+
+def test_legacy_train_warns_and_matches_session(db):
+    order, feats = variable_order(), features()
+    with pytest.warns(DeprecationWarning, match="repro.session"):
+        legacy = train(db, order, feats, "units", model="lr", lam=1e-2,
+                       max_iters=400)
+    sess = Session(db, order)
+    r = sess.fit(LinearRegression(lam=1e-2), feats, "units",
+                 solver=SolverConfig(max_iters=400, tol=1e-10))
+    assert abs(legacy.loss - r.loss) < 1e-10
+    np.testing.assert_allclose(
+        np.asarray(legacy.params), np.asarray(r.params), atol=1e-10
+    )
+    assert legacy.solver.iterations == r.solver.iterations
+    assert legacy.sigma.space.total == r.sigma.space.total
+
+
+def test_legacy_prepare_warns_and_matches_materialize(db):
+    order, feats = variable_order(), features()
+    with pytest.warns(DeprecationWarning, match="repro.session"):
+        m, sig, wl, plan, agg_s = prepare(db, order, feats, "units", "lr", 1e-2)
+    sess = Session(db, order)
+    m2, sig2, wl2, bundle = sess.materialize(
+        LinearRegression(lam=1e-2), feats, "units"
+    )
+    assert wl.h_monos == wl2.h_monos
+    assert sig.space.total == sig2.space.total
+    np.testing.assert_allclose(np.asarray(sig.c), np.asarray(sig2.c))
+    np.testing.assert_array_equal(np.asarray(sig.rows), np.asarray(sig2.rows))
+    np.testing.assert_allclose(np.asarray(sig.vals), np.asarray(sig2.vals))
+
+
+def test_fd_legacy_train_matches_session(db):
+    order, feats = variable_order(), features()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = train(db, order, feats, "units", model="lr", lam=1e-2,
+                       fds=db.fds, max_iters=400)
+    sess = Session(db, order)
+    r = sess.fit(LinearRegression(lam=1e-2), feats, "units", fds=db.fds,
+                 solver=SolverConfig(max_iters=400, tol=1e-10))
+    assert abs(legacy.loss - r.loss) < 1e-10

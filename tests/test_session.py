@@ -1,0 +1,200 @@
+"""Session/ModelSpec API: one shared aggregate pass, legacy parity,
+bundle subsumption, execution policy, warm start, compressed combine."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.schema import make_database
+from repro.core.solver import closed_form_ridge
+from repro.core.variable_order import vo
+from repro.session import (
+    ExecutionPolicy,
+    FactorizationMachine,
+    LinearRegression,
+    PolynomialRegression,
+    Session,
+    SolverConfig,
+    spec_from_string,
+)
+
+LAM = 0.1
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(1)
+    nR, nS, nT = 80, 50, 40
+    bvals = rng.integers(0, 10, nS)
+    gmap = rng.integers(0, 3, 10)
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 8, nR), "B": rng.integers(0, 10, nR),
+                   "C": rng.normal(size=nR).round(2)},
+            "S": {"B": bvals, "G": gmap[bvals], "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 8, nT), "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B", "G"],
+        fds=[("B", ["G"])],
+    )
+
+
+ORDER = vo("A", vo("B", vo("C"), vo("G", vo("D"))), vo("E"))
+FEATS = ["A", "B", "C", "D"]
+SPECS = [
+    LinearRegression(lam=LAM),
+    PolynomialRegression(degree=2, lam=LAM),
+    FactorizationMachine(rank=4, lam=LAM),
+]
+
+
+@pytest.fixture(scope="module")
+def fitted(db):
+    """One fit_many shared by the acceptance assertions below."""
+    sess = Session(db, ORDER)
+    results = sess.fit_many(SPECS, FEATS, "E", solver=SolverConfig(max_iters=400))
+    return sess, results
+
+
+def test_fit_many_executes_exactly_one_aggregate_pass(fitted):
+    sess, results = fitted
+    assert len(results) == 3
+    assert sess.stats.aggregate_passes == 1
+    assert sess.stats.bundle_misses == 1
+    # all three Sigma views come off the same bundle object
+    assert results[0].bundle is results[1].bundle is results[2].bundle
+    # and each view is assembled once (lr/pr2/fama have distinct h maps)
+    assert results[0].bundle.sigma_builds == 3
+
+
+def test_fit_many_matches_legacy_train_losses(fitted, db):
+    """Acceptance: each model off the shared bundle matches the one-shot
+    legacy train() loss to 1e-8."""
+    from repro.core.api import train
+
+    _, results = fitted
+    for spec, r in zip(SPECS, results):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            legacy = train(db, ORDER, FEATS, "E", model=spec.name, lam=LAM,
+                           rank=getattr(spec, "rank", 8), max_iters=400)
+        assert abs(legacy.loss - r.loss) < 1e-8, spec.name
+
+
+def test_lr_off_shared_bundle_matches_closed_form(fitted):
+    _, results = fitted
+    lr = results[0]
+    theta_cf = closed_form_ridge(lr.sigma.dense(), np.asarray(lr.sigma.c), LAM)
+    assert np.abs(np.asarray(lr.params) - theta_cf).max() < 1e-4
+
+
+def test_bundle_subsumption_lr_and_fama_reuse_pr2(db):
+    sess = Session(db, ORDER)
+    b_pr2 = sess.compile(FEATS, "E", degree=2, squares=True)
+    assert sess.stats.aggregate_passes == 1
+    # lr ⊆ pr2 and fama shares the cofactor tables: both are cache hits
+    b_lr = sess.compile(FEATS, "E", degree=1)
+    b_fama = sess.compile(FEATS, "E", degree=2, squares=False)
+    assert b_lr is b_pr2 and b_fama is b_pr2
+    # feature-subset workloads are subsumed too
+    b_sub = sess.compile(["A", "C"], "E", degree=1)
+    assert b_sub is b_pr2
+    assert sess.stats.aggregate_passes == 1
+    assert sess.stats.bundle_hits == 3
+    # a higher degree is NOT subsumed -> new pass
+    sess.compile(FEATS, "E", degree=3)
+    assert sess.stats.aggregate_passes == 2
+
+
+def test_fd_bundles_are_separate_and_match_legacy(db):
+    from repro.core.api import train
+
+    sess = Session(db, ORDER)
+    feats = ["A", "B", "G", "C", "D"]
+    plain = sess.fit(LinearRegression(lam=LAM), feats, "E")
+    red = sess.fit(LinearRegression(lam=LAM), feats, "E", fds=db.fds)
+    assert sess.stats.aggregate_passes == 2      # reduced workload != plain
+    assert red.sigma.space.total < plain.sigma.space.total
+    # exact reparameterization: same optimal loss (cf. test_glm)
+    assert abs(plain.loss - red.loss) < 1e-6
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = train(db, ORDER, feats, "E", model="lr", lam=LAM, fds=db.fds)
+    assert abs(legacy.loss - red.loss) < 1e-10
+
+
+def test_explicit_bundle_with_wrong_fd_set_is_rejected(db):
+    """A plain bundle's tables can cover an FD-reduced workload, but using
+    it would silently drop the FD penalty — fit must refuse."""
+    sess = Session(db, ORDER)
+    plain = sess.compile(["A", "B", "G", "C", "D"], "E", degree=1)
+    with pytest.raises(ValueError, match="fds"):
+        sess.fit(LinearRegression(lam=LAM), ["A", "B", "G", "C", "D"], "E",
+                 fds=db.fds, bundle=plain)
+
+
+def test_execution_policy_explicit(db):
+    sess = Session(db, ORDER)
+    auto = sess.fit(LinearRegression(lam=LAM), FEATS, "E",
+                    solver=SolverConfig(policy=ExecutionPolicy.AUTO))
+    single = sess.fit(LinearRegression(lam=LAM), FEATS, "E",
+                      solver=SolverConfig(policy=ExecutionPolicy.SINGLE))
+    sharded = sess.fit(LinearRegression(lam=LAM), FEATS, "E",
+                       solver=SolverConfig(policy=ExecutionPolicy.SHARDED_COO))
+    assert abs(auto.loss - single.loss) < 1e-12
+    assert abs(auto.loss - sharded.loss) < 1e-9
+    with pytest.raises(ValueError):
+        SolverConfig(policy="multi")
+
+
+def test_warm_start_reaches_same_optimum(db):
+    sess = Session(db, ORDER)
+    cold = sess.fit_many([LinearRegression(lam=LAM),
+                          PolynomialRegression(degree=2, lam=LAM)],
+                         FEATS, "E")
+    warm = sess.fit_many([LinearRegression(lam=LAM),
+                          PolynomialRegression(degree=2, lam=LAM)],
+                         FEATS, "E", warm_start=True)
+    # convex objective: warm-started BGD lands on the same optimum
+    assert abs(cold[1].loss - warm[1].loss) < 1e-6
+    assert sess.stats.aggregate_passes == 1
+
+
+def test_compressed_gradient_combine_converges(db):
+    """SolverConfig(grad_compression="int8") routes the BGD combine through
+    dist.compressed_psum; error feedback keeps the optimum intact."""
+    sess = Session(db, ORDER)
+    base = sess.fit(LinearRegression(lam=LAM), FEATS, "E",
+                    solver=SolverConfig(max_iters=2000, tol=1e-10))
+    comp = sess.fit(LinearRegression(lam=LAM), FEATS, "E",
+                    solver=SolverConfig(max_iters=2000, tol=1e-10,
+                                        grad_compression="int8"))
+    assert abs(base.loss - comp.loss) < 1e-6
+    theta_cf = closed_form_ridge(
+        base.sigma.dense(), np.asarray(base.sigma.c), LAM
+    )
+    assert np.abs(np.asarray(comp.params) - theta_cf).max() < 1e-3
+    # the EF carry is threaded through the solver and comes back out
+    assert comp.solver.carry is not None
+    with pytest.raises(ValueError):
+        SolverConfig(grad_compression="float8")
+
+
+def test_spec_from_string_roundtrip():
+    assert spec_from_string("lr", lam=0.5) == LinearRegression(lam=0.5)
+    assert spec_from_string("pr3") == PolynomialRegression(degree=3)
+    assert spec_from_string("fama", rank=2) == FactorizationMachine(rank=2)
+    with pytest.raises(ValueError):
+        spec_from_string("svm")
+
+
+def test_session_memoizes_analysis_and_factorization(db):
+    sess = Session(db, ORDER)
+    info = sess.info
+    fz = sess._factorized()
+    sess.compile(FEATS, "E", degree=1)
+    sess.compile(FEATS, "E", degree=2)
+    assert sess.info is info
+    assert sess._factorized() is fz

@@ -1,0 +1,127 @@
+"""Sharded aggregate pass on real data (ROADMAP): feed actual
+``data/retailer.py`` partitions through ``dist/shard.py``'s aggregate_pass
+and cross-check the psum-combined tables against single-shard execution
+AND against ``core/engine.py`` factorized aggregates for the same monomials.
+
+Runs in a subprocess with 4 fake CPU devices (the established pattern in
+test_dist.py) so the data-axis psum is a real 4-way collective.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def test_sharded_aggregate_pass_matches_engine_on_retailer():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        assert jax.device_count() == 4
+        import numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.engine import compute_aggregates
+        from repro.core.monomials import mono
+        from repro.core.oracle import materialize_join
+        from repro.core.variable_order import analyze
+        from repro.data.retailer import RetailerSpec, generate, variable_order
+        from repro.dist import compat
+        from repro.dist.shard import AcdcShapes, aggregate_pass
+
+        FEATS = ["price", "mean_temp", "population", "dist_comp1"]
+        db = generate(RetailerSpec(n_locn=20, n_zip=12, n_date=30, n_sku=40))
+        join = materialize_join(db)
+        J = len(join["units"])
+        f = len(FEATS)
+
+        # real co-partitioned buffers: rows of the join, zero-padded to a
+        # whole number of 1000-row blocks per shard (zero rows are inert —
+        # every payload is a product of feature values)
+        def padded(col, n_rows, dtype):
+            out = np.zeros(n_rows, dtype=dtype)
+            out[:J] = col
+            return out
+
+        def build_batch(n_shards):
+            r = -(-J // (n_shards * 1000)) * 1000
+            n = n_shards * r
+            x = np.zeros((n, f), np.float32)
+            for i, name in enumerate(FEATS):
+                x[:J, i] = join[name]
+            return {
+                "x_cont": jnp.asarray(x.reshape(n_shards, r, f)),
+                "response": jnp.asarray(
+                    padded(join["units"], n, np.float32).reshape(n_shards, r)),
+                "key_sku": jnp.asarray(
+                    padded(join["sku"], n, np.int32).reshape(n_shards, r)),
+                "pair_key": jnp.asarray(
+                    padded(join["sku"] * 12 + join["zip"], n,
+                           np.int32).reshape(n_shards, r)),
+            }, r
+
+        def run(n_shards):
+            batch, r = build_batch(n_shards)
+            shapes = AcdcShapes(
+                rows_per_shard=r, n_cont=f,
+                cat_tables=(("sku", 40, f),),
+                pair_hash_slots=40 * 12, pair_cols=f,
+            )
+            mesh = compat.make_mesh((n_shards, 1), ("data", "model"))
+            in_specs = {k: P(("data",), *(None,) * (v.ndim - 1))
+                        for k, v in batch.items()}
+            out_specs = {"gram": P("model", None, None), "c_cont": P(),
+                         "sy": P(), "tbl_sku": P("model", None, None),
+                         "tbl_pair": P("model", None, None)}
+            fn = aggregate_pass(shapes, ("data",), "model", tp=1)
+            shm = compat.shard_map(fn, mesh=mesh, in_specs=(in_specs,),
+                                   out_specs=out_specs)
+            return {k: np.asarray(v) for k, v in jax.jit(shm)(batch).items()}
+
+        sharded = run(4)
+        single = run(1)
+
+        # --- sharded vs single-device parity (f32 reduction-order slack) ---
+        for k in sharded:
+            np.testing.assert_allclose(sharded[k], single[k],
+                                       rtol=2e-4, atol=1e-2, err_msg=k)
+
+        # --- cross-check against the factorized engine ---
+        info = analyze(variable_order(), db)
+        m_all4 = mono(*((v, 1) for v in FEATS))          # x0*x1*x2*x3
+        m_sq = mono((FEATS[0], 2), (FEATS[1], 2))        # x0^2*x1^2
+        m_sku = mono((FEATS[0], 1), (FEATS[1], 1), ("sku", 1))
+        m_c0 = mono((FEATS[0], 1), ("units", 1))
+        m_sy = mono(("units", 2))
+        res, _ = compute_aggregates(
+            db, info, [m_all4, m_sq, m_sku, m_c0, m_sy])
+        assert int(res.count) == J
+
+        gram = sharded["gram"][0]                        # (f^2, f^2)
+        # gram[(i*f+j),(k*f+l)] = SUM x_i x_j x_k x_l over the join
+        np.testing.assert_allclose(
+            gram[0 * f + 1, 2 * f + 3], res.scalar(m_all4), rtol=5e-4)
+        np.testing.assert_allclose(
+            gram[0 * f + 1, 0 * f + 1], res.scalar(m_sq), rtol=5e-4)
+
+        # group-by table: payload col 1 = x_1 * x_0 (roll by 1+rank, tp=1)
+        keys, vals = res.tables[m_sku]
+        dense = np.zeros(40)
+        dense[np.asarray(keys["sku"])] = np.asarray(vals)
+        np.testing.assert_allclose(sharded["tbl_sku"][0][:, 1], dense,
+                                   rtol=5e-4, atol=1e-3)
+
+        np.testing.assert_allclose(sharded["c_cont"][0], res.scalar(m_c0),
+                                   rtol=5e-4)
+        np.testing.assert_allclose(sharded["sy"], res.scalar(m_sy), rtol=5e-4)
+        print("shard parity OK", J, "join rows over 4 shards")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "shard parity OK" in out.stdout
