@@ -25,6 +25,7 @@ from repro.core.oracle import (
 )
 from repro.core.solver import closed_form_ridge
 from repro.core.variable_order import analyze
+from repro.data import retailer
 from repro.data.retailer import fragment, variable_order
 from repro.session import (
     FactorizationMachine,
@@ -182,6 +183,38 @@ def bench_session_reuse(emit) -> None:
         f"shared_s={shared_s:.2f};separate_sessions_s={separate_s:.2f};"
         f"speedup={separate_s/max(shared_s,1e-9):.2f}x;"
         f"losses={'/'.join(f'{r.loss:.4f}' for r in shared)}",
+    )
+
+
+def bench_delta_refresh(emit) -> None:
+    """ROADMAP "Incremental bundle maintenance": Session.apply_delta patches
+    the compiled pr2 bundle additively per 1% insert+delete batch vs paying
+    a full compile() (factorize + plan + jitted pass) on the updated data.
+    The acceptance bar is >=5x; the delta path re-executes the bundle's plan
+    signatures over only the delta-reduced subtree, so it lands far above."""
+    import copy
+
+    db, feats = fragment("v1", SCALE)
+    sess = Session(db, variable_order())
+    bundle = sess.compile(feats, "units", degree=2)
+
+    n = 3
+    delta_s = full_s = 0.0
+    for d in retailer.deltas(sess.db, n_batches=n, frac=0.01, seed=1):
+        t0 = time.perf_counter()
+        rep = sess.apply_delta(d)
+        delta_s += time.perf_counter() - t0
+        assert rep.bundles_refreshed == 1
+        db2 = copy.deepcopy(sess.db)
+        t0 = time.perf_counter()
+        Session(db2, variable_order()).compile(feats, "units", degree=2)
+        full_s += time.perf_counter() - t0
+    emit(
+        "delta-refresh/v1-pr2", delta_s / n * 1e6,
+        f"batches={n};frac=1%;tables={len(bundle.result.tables)};"
+        f"refreshes={bundle.refreshes};"
+        f"delta_s={delta_s / n:.3f};full_compile_s={full_s / n:.3f};"
+        f"speedup={full_s / max(delta_s, 1e-9):.1f}x",
     )
 
 

@@ -25,6 +25,7 @@ BENCHES = [
     bench_acdc.bench_materialize_baseline,
     bench_acdc.bench_sharing,
     bench_acdc.bench_session_reuse,
+    bench_acdc.bench_delta_refresh,
     bench_acdc.bench_grad_compression,
     bench_kernels.bench_sigma_fused,
     bench_kernels.bench_seg_outer,

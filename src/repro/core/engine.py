@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .monomials import Entry, Monomial, Registers
-from .schema import Database, Kind
+from .schema import Database, Kind, Relation, key_col
 from .variable_order import OrderInfo, reduce_database, _row_key
 
 
@@ -79,14 +79,9 @@ class Factorized:
         return self.num_join_rows * nv
 
 
-def _as_key_col(c: np.ndarray) -> np.ndarray:
-    """Canonical int64 view of a column for composite keys: float columns
-    by bit pattern (consistent everywhere), ids widened."""
-    if c.dtype == np.float64:
-        return c.view(np.int64)
-    if np.issubdtype(c.dtype, np.floating):
-        return c.astype(np.float64).view(np.int64)
-    return c.astype(np.int64)
+# canonical int64 key view (floats: signed zero collapsed, one NaN bit
+# pattern). One shared branch — see schema.key_col.
+_as_key_col = key_col
 
 
 def _dedup_rows(cols: List[np.ndarray]) -> Tuple[np.ndarray, ...]:
@@ -436,13 +431,45 @@ def make_executor(plan: EnginePlan, dtype=jnp.float64):
     return run, lams
 
 
-def execute(plan: EnginePlan, dtype=jnp.float64) -> AggregateResult:
+def _run_numpy(plan: EnginePlan) -> Dict[Sig, np.ndarray]:
+    """Pure-numpy mirror of the jitted executor. Same dataflow, no jit —
+    the delta path runs it on delta-reduced node tables, where the data is
+    far too small to amortize an XLA compile."""
+    regs, fz = plan.registers, plan.fz
+    payloads: Dict[str, Dict[Sig, np.ndarray]] = {}
+    for var in plan.order:
+        lam = _lambda_matrix(fz.nodes[var], regs.max_power[var])
+        payloads[var] = {}
+        for sig, sp in plan.node_sigs[var].items():
+            # jnp gathers clamp out-of-bounds indices (categorical lambda is
+            # a single ones-column whatever p0 says); numpy must clip.
+            p0 = np.minimum(sp.p0, lam.shape[1] - 1)
+            vals = lam[sp.src_row][:, p0]
+            for c, (ccols, csig) in sp.child_col.items():
+                cmat = payloads[c][csig]
+                gath = sp.child_gather.get(c)
+                if gath is None:
+                    gath = fz.child_lookup[var][c]
+                    vals = vals * cmat[gath][:, ccols][sp.src_row]
+                else:
+                    vals = vals * cmat[gath][:, ccols]
+            out = np.zeros((sp.n_out, vals.shape[1]), dtype=np.float64)
+            np.add.at(out, sp.out_id, vals)
+            payloads[var][sig] = out
+    return payloads[regs.root]
+
+
+def execute(plan: EnginePlan, dtype=jnp.float64, backend: str = "jax") -> AggregateResult:
     """Run the aggregate pass. Index plans are numpy; numeric work is jax,
     wrapped in one jit so XLA fuses the gather/product/segment chains (the
-    analogue of the paper's compiled aggregate updates)."""
+    analogue of the paper's compiled aggregate updates). ``backend="numpy"``
+    skips jit for small (delta) passes."""
     regs = plan.registers
-    run, lams = make_executor(plan, dtype)
-    root_payloads = run(lams)
+    if backend == "numpy":
+        root_payloads = _run_numpy(plan)
+    else:
+        run, lams = make_executor(plan, dtype)
+        root_payloads = run(lams)
 
     tables: Dict[Monomial, Tuple[Dict[str, np.ndarray], jnp.ndarray]] = {}
     root = regs.root
@@ -468,6 +495,147 @@ def compute_aggregates(
     res = execute(plan, dtype=dtype)
     fz.num_join_rows = int(res.count)
     return res, plan
+
+
+# ----------------------------------------------------------------------
+# Delta path: aggregates of a base-relation delta (DESIGN.md §9)
+# ----------------------------------------------------------------------
+
+
+def substitute_relation(
+    db: Database, name: str, rows: Dict[str, np.ndarray]
+) -> Database:
+    """A shallow copy of ``db`` with relation ``name`` replaced by ``rows``
+    (same schema, columns cast to the incumbent dtypes)."""
+    base = db.relations[name]
+    extra = set(rows) - set(base.attrs)
+    missing = set(base.attrs) - set(rows)
+    if extra or missing:
+        raise ValueError(
+            f"delta rows for {name} must carry exactly its attributes "
+            f"(missing={sorted(missing)}, unknown={sorted(extra)})"
+        )
+    cols = {
+        a: np.asarray(rows[a]).astype(base.columns[a].dtype)
+        for a in base.attrs
+    }
+    return Database(
+        relations={**db.relations, name: Relation(name, cols)},
+        attributes=db.attributes,
+        fds=db.fds,
+        adom=db.adom,
+        dictionaries=db.dictionaries,
+    )
+
+
+def delta_factorize(
+    db: Database,
+    info: OrderInfo,
+    relation: str,
+    rows: Optional[Dict[str, np.ndarray]],
+) -> Optional[Factorized]:
+    """Factorized representation of the *delta join* ``rows ⋈ (D \\ R)``.
+
+    Substituting R := rows and semi-join-reducing shrinks every other
+    relation to the tuples that join the delta — the whole variable-order
+    subtree rebuild happens on that delta-reduced data. Reduction starts
+    from the UN-reduced relations: a delta may re-activate tuples that
+    were dangling w.r.t. the old R. Returns None when the delta join is
+    provably empty (no aggregate changes).
+
+    Registers-independent by design: one signed batch is factorized ONCE
+    and shared by every bundle's ``aggregate_patch``.
+    """
+    if not rows:
+        return None
+    n = len(next(iter(rows.values())))
+    if n == 0:
+        return None
+    dbd = substitute_relation(db, relation, rows)
+    dbd = reduce_database(dbd, info)
+    if any(r.num_rows == 0 for r in dbd.relations.values()):
+        return None
+    return factorize(dbd, info)
+
+
+def aggregate_patch(
+    fz: Optional[Factorized], regs: Registers
+) -> Optional[AggregateResult]:
+    """Run one workload's plan signatures over a delta factorization from
+    ``delta_factorize``. The join is linear in each relation, so for a
+    change to R alone the new aggregates are ``agg(Q(D)) + agg(inserts ⋈
+    rest) - agg(deletes ⋈ rest)``. The numpy backend skips jit — the
+    delta-reduced data is far too small to amortize an XLA compile."""
+    if fz is None:
+        return None
+    plan = build_plan(fz, regs)
+    return execute(plan, backend="numpy")
+
+
+def merge_results(
+    base: AggregateResult,
+    patches: Sequence[Tuple[float, Optional[AggregateResult]]],
+) -> AggregateResult:
+    """Additive merge of signed aggregate patches into a base result
+    (deletes carry sign -1: negative multiplicities).
+
+    All results must come from the same ``Registers`` so the monomial sets
+    coincide. Group-by key combos are unioned; a combo whose mass cancels
+    to zero is kept (a dead combo is zero in EVERY table, so keeping it is
+    harmless for Sigma assembly, whereas per-table zero-dropping could
+    desynchronize a block's key table from the aggregate tables that
+    project onto it).
+    """
+    live = [(s, p) for s, p in patches if p is not None]
+    if not live:
+        return base
+
+    # Group monomials by signature: execute() emits ONE shared out_keys
+    # table per (root, sig) plan, so same-sig tables are key-identical —
+    # merge each key table once and share the merged dict the same way.
+    by_sig: Dict[Tuple[str, ...], List[Monomial]] = {}
+    for m, (bkeys, _) in base.tables.items():
+        by_sig.setdefault(tuple(bkeys), []).append(m)
+
+    tables: Dict[Monomial, Tuple[Dict[str, np.ndarray], np.ndarray]] = {}
+    for sig, monos in by_sig.items():
+        if not sig:
+            for m in monos:
+                total = float(np.asarray(base.tables[m][1])[0]) + sum(
+                    s * float(np.asarray(p.tables[m][1])[0]) for s, p in live
+                )
+                tables[m] = ({}, np.array([total]))
+            continue
+        cols = {
+            v: np.concatenate(
+                [np.asarray(base.tables[monos[0]][0][v], dtype=np.int64)]
+                + [
+                    np.asarray(p.tables[monos[0]][0][v], dtype=np.int64)
+                    for _, p in live
+                ]
+            )
+            for v in sig
+        }
+        view = _row_key(np.stack([cols[v] for v in sig], axis=1))
+        uniq, inv = np.unique(view, return_inverse=True)
+        # representative row per unique combo, output sorted by composite
+        # key (same invariant as execute(): sigma's searchsorted needs it)
+        order = np.argsort(inv, kind="stable")
+        first = order[np.searchsorted(inv[order], np.arange(len(uniq)))]
+        keys = {v: cols[v][first].astype(np.int32) for v in sig}
+        for m in monos:
+            vals = np.concatenate(
+                [np.asarray(base.tables[m][1], dtype=np.float64)]
+                + [
+                    s * np.asarray(p.tables[m][1], dtype=np.float64)
+                    for s, p in live
+                ]
+            )
+            out = np.zeros(len(uniq), dtype=np.float64)
+            np.add.at(out, inv, vals)
+            tables[m] = (keys, out)
+
+    return AggregateResult(tables=tables, count=float(tables[()][1][0]))
 
 
 from .monomials import build_registers  # noqa: E402  (bottom import: cycle-free)

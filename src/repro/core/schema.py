@@ -22,6 +22,36 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 
+def float_key_bits(a: np.ndarray) -> np.ndarray:
+    """Canonical int64 bit view of a float column for composite row keys.
+
+    IEEE equality is not bit equality: ``-0.0 == 0.0`` but their bit
+    patterns differ, and NaN payload bits are arbitrary. Keying raw bit
+    patterns therefore splits equal values into distinct key groups (and
+    dedups NaN payloads inconsistently). Adding ``0.0`` collapses the
+    signed zero; NaN slots are rewritten to the single canonical
+    ``np.nan`` pattern. Every composite-key site (dedup, semi-joins,
+    node-table contexts) must key floats through here so the groups agree.
+    """
+    f = a.astype(np.float64) + 0.0          # -0.0 + 0.0 -> +0.0 (copies)
+    nan = np.isnan(f)
+    if nan.any():
+        f[nan] = np.nan
+    return f.view(np.int64)
+
+
+def key_col(a: np.ndarray) -> np.ndarray:
+    """Canonical int64 key column for ANY dtype: floats via
+    ``float_key_bits``, ids widened. The single branch every
+    composite-key site shares — engine dedup/contexts, semi-joins,
+    ``make_database``'s set-semantics dedup — so equal values can never
+    land in different key groups because two sites disagreed."""
+    a = np.asarray(a)
+    if np.issubdtype(a.dtype, np.floating):
+        return float_key_bits(a)
+    return a.astype(np.int64)
+
+
 class Kind(enum.Enum):
     CONTINUOUS = "continuous"
     CATEGORICAL = "categorical"
@@ -175,13 +205,7 @@ def make_database(
         # relations are SETS (paper semantics): drop duplicate rows so the
         # factorized engine and the listing-representation oracle agree.
         names = list(arrs)
-        stacked = np.stack(
-            [
-                a.view(np.int64) if a.dtype == np.float64 else a.astype(np.int64)
-                for a in (arrs[n].astype(np.float64) if np.issubdtype(arrs[n].dtype, np.floating) else arrs[n] for n in names)
-            ],
-            axis=1,
-        )
+        stacked = np.stack([key_col(arrs[n]) for n in names], axis=1)
         _, keep = np.unique(stacked, axis=0, return_index=True)
         keep.sort()
         rels[name] = Relation(name, {k: v[keep] for k, v in arrs.items()})

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .schema import Database, Relation
+from .schema import Database, Relation, key_col
 
 
 @dataclasses.dataclass
@@ -142,11 +142,17 @@ def _row_key(arr: np.ndarray) -> np.ndarray:
     return a.view(dt).ravel()
 
 
+def _join_keys(rel: Relation, on: Sequence[str]) -> np.ndarray:
+    """Composite key over the named columns; floats keyed by canonical bit
+    pattern (so -0.0/0.0 and NaN payloads group as equal values), ids cast."""
+    return _row_key(np.stack([key_col(rel.columns[a]) for a in on], axis=1))
+
+
 def _semijoin(left: Relation, right: Relation, on: Sequence[str]) -> Relation:
     if not on:
         return left
-    lk = _row_key(left.project(on))
-    rk = np.unique(_row_key(right.project(on)))
+    lk = _join_keys(left, on)
+    rk = np.unique(_join_keys(right, on))
     pos = np.clip(np.searchsorted(rk, lk), 0, len(rk) - 1)
     keep = rk[pos] == lk if len(rk) else np.zeros(len(lk), dtype=bool)
     return left.take(np.nonzero(keep)[0])
@@ -160,7 +166,19 @@ def reduce_database(db: Database, info: OrderInfo) -> Database:
     below S's variables. For the acyclic queries we target, reducing along
     shared variables between every pair of order-adjacent relations in both
     sweeps yields the full reducer.
+
+    Pure: the input ``db`` keeps its original relations (the delta path
+    needs them — a later insert can re-activate tuples a reduction against
+    the current data would prune); the reduced relations live in the
+    returned copy.
     """
+    db = Database(
+        relations=dict(db.relations),
+        attributes=db.attributes,
+        fds=db.fds,
+        adom=db.adom,
+        dictionaries=db.dictionaries,
+    )
     rels = list(db.relations.values())
     # order relations by the depth of their highest variable (root-ward first)
     depth = {r.name: min(len(info.anc[a]) for a in r.attrs) for r in rels}

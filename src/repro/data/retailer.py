@@ -17,12 +17,13 @@ benchmark analogues.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Iterator, List, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.schema import Database, make_database
 from repro.core.variable_order import VarNode, vo
+from repro.delta import Delta
 
 CENSUS_FEATURES = ["population", "median_age", "house_units", "families"]
 LOCATION_FEATURES = ["dist_comp1", "dist_comp2"]
@@ -178,6 +179,67 @@ def features(include_sku: bool = True, include_zip: bool = True,
     if include_zip:
         f.append("zip")
     return f
+
+
+def deltas(
+    spec: Union[RetailerSpec, Database],
+    n_batches: int = 5,
+    frac: float = 0.01,
+    seed: int = 0,
+) -> Iterator[Delta]:
+    """A realistic insert/delete stream over the Inventory relation.
+
+    Each batch deletes ``frac`` of the CURRENT inventory rows and inserts
+    the same number of fresh (locn, date, sku) cells (drawn from the
+    existing active domains — stores restock, stock sells out), with
+    response values from the generator's distribution. Batches are
+    stateful: the generator mirrors the relation as batches are applied
+    IN ORDER, so deletes always name live tuples and inserts are always
+    new — the contract ``Session.apply_delta`` verifies.
+
+    Accepts the encoded ``Database`` itself (the common case: drive
+    deltas against a live session's db) or a ``RetailerSpec`` (a fresh
+    ``generate(spec)`` is used; ids match any other db generated from an
+    equal spec because encoding is deterministic).
+    """
+    db = generate(spec) if isinstance(spec, RetailerSpec) else spec
+    rng = np.random.default_rng(seed)
+    inv = db.relations["Inventory"]
+    n_date, n_sku = db.adom["date"], db.adom["sku"]
+    n_cells = db.adom["locn"] * n_date * n_sku
+
+    cols = {a: inv.columns[a].copy() for a in ("locn", "date", "sku", "units")}
+
+    def cell_ids() -> np.ndarray:
+        return (
+            cols["locn"].astype(np.int64) * n_date + cols["date"]
+        ) * n_sku + cols["sku"]
+
+    for _ in range(n_batches):
+        n_cur = len(cols["units"])
+        k = max(int(round(n_cur * frac)), 1)
+
+        del_idx = rng.choice(n_cur, size=min(k, n_cur), replace=False)
+        deletes = {a: cols[a][del_idx] for a in cols}
+
+        occupied = cell_ids()
+        chosen = np.empty(0, dtype=np.int64)
+        while len(chosen) < k:
+            cand = rng.integers(0, n_cells, size=4 * k, dtype=np.int64)
+            chosen = np.union1d(chosen, np.setdiff1d(cand, occupied))
+        chosen = rng.permutation(chosen)[:k]
+        il = (chosen // (n_date * n_sku)).astype(np.int32)
+        idt = ((chosen // n_sku) % n_date).astype(np.int32)
+        isk = (chosen % n_sku).astype(np.int32)
+        iu = np.maximum(5.0 + rng.normal(0, 1.5, k), 0.0).round(2)
+        inserts = {"locn": il, "date": idt, "sku": isk, "units": iu}
+
+        yield Delta("Inventory", inserts=inserts, deletes=deletes)
+
+        keep = np.ones(n_cur, dtype=bool)
+        keep[del_idx] = False
+        for a, new in (("locn", il), ("date", idt), ("sku", isk), ("units", iu)):
+            cols[a] = np.concatenate([cols[a][keep], new.astype(cols[a].dtype)])
 
 
 def fragment(name: str, scale: float = 1.0) -> Tuple[Database, List[str]]:

@@ -1,0 +1,26 @@
+"""repro.delta — incremental maintenance of compiled aggregate bundles
+under base-relation deltas (DESIGN.md §9).
+
+The paper's economics assume the factorized aggregate pass is paid once
+per database; live deployments see base relations change. Because the
+join is linear in each relation, the cofactor tables are *additive* under
+tuple inserts/deletes (deletes as negative multiplicities): a
+``Delta(relation, inserts, deletes)`` is pushed through the engine's
+delta path — semi-join-reduce the delta, rebuild the touched subtree's
+node tables over the delta-reduced data, re-execute the bundle's plan
+signatures there — and the resulting ``AggregateResult`` patch is merged
+additively into every covered bundle's monomial tables.
+
+``Session.apply_delta`` (repro.session) is the user-facing entry point;
+this package holds the delta representation and the per-bundle refresh.
+"""
+
+from .delta import Delta, DeltaReport, apply_to_relation
+from .maintain import refresh_bundle
+
+__all__ = [
+    "Delta",
+    "DeltaReport",
+    "apply_to_relation",
+    "refresh_bundle",
+]

@@ -1,0 +1,138 @@
+"""The delta representation: signed tuple batches over one base relation.
+
+A ``Delta`` carries columnar ``inserts`` and ``deletes`` for a single
+relation, in the database's ENCODED space (categorical/key columns hold
+dictionary ids, continuous columns raw floats) — the same space the
+engine joins in. Values must lie in the existing active domains; growing
+a dictionary mid-session would renumber ids under every cached table
+(noted as a deliberate limit in DESIGN.md §9).
+
+Set semantics (paper): inserts must be new tuples, deletes must name
+existing tuples — ``apply_to_relation`` verifies both before anything
+mutates, so a bad batch cannot leave the session half-applied.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import _as_key_col
+from repro.core.schema import Database, Kind, Relation
+from repro.core.variable_order import _row_key
+
+
+def _n_rows(cols: Optional[Dict[str, np.ndarray]]) -> int:
+    if not cols:
+        return 0
+    return len(next(iter(cols.values())))
+
+
+def _rows_view(cols: Dict[str, np.ndarray], names: Sequence[str]) -> np.ndarray:
+    """Canonical composite row keys (float columns by canonical bits)."""
+    return _row_key(
+        np.stack([_as_key_col(np.asarray(cols[a])) for a in names], axis=1)
+    )
+
+
+@dataclasses.dataclass
+class Delta:
+    """A batch of tuple inserts/deletes against one base relation."""
+
+    relation: str
+    inserts: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    deletes: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_inserts(self) -> int:
+        return _n_rows(self.inserts)
+
+    @property
+    def n_deletes(self) -> int:
+        return _n_rows(self.deletes)
+
+    def validate(self, db: Database) -> None:
+        """Schema + active-domain checks against the target database."""
+        if self.relation not in db.relations:
+            raise ValueError(f"unknown relation {self.relation!r}")
+        rel = db.relations[self.relation]
+        for label, cols in (("inserts", self.inserts), ("deletes", self.deletes)):
+            if not cols:
+                continue
+            if set(cols) != set(rel.attrs):
+                raise ValueError(
+                    f"{label} columns {sorted(cols)} != "
+                    f"{self.relation} attrs {sorted(rel.attrs)}"
+                )
+            lengths = {len(np.asarray(v)) for v in cols.values()}
+            if len(lengths) > 1:
+                raise ValueError(f"ragged {label} for {self.relation}: {lengths}")
+            for a in rel.attrs:
+                if db.kind(a) is Kind.CONTINUOUS:
+                    continue
+                ids = np.asarray(cols[a])
+                if len(ids) and (
+                    ids.min() < 0 or ids.max() >= db.adom.get(a, 0)
+                ):
+                    raise ValueError(
+                        f"{label}.{a} ids outside active domain "
+                        f"[0, {db.adom.get(a, 0)}) — dictionary growth is "
+                        "not supported in-session (DESIGN.md §9)"
+                    )
+
+
+@dataclasses.dataclass
+class DeltaReport:
+    """What one ``Session.apply_delta`` call did."""
+
+    relation: str
+    n_inserts: int
+    n_deletes: int
+    bundles_refreshed: int          # bundles whose tables were patched
+    bundles_unchanged: int          # bundles the delta join didn't touch
+    seconds: float
+
+
+def apply_to_relation(db: Database, delta: Delta) -> Relation:
+    """The post-delta relation ``(R - deletes) + inserts``, set semantics.
+
+    Verifies every delete names an existing tuple and every insert is new
+    (against the post-delete state, so delete-then-reinsert batches are
+    legal). Returns a NEW Relation; the caller decides when to install it.
+    """
+    rel = db.relations[delta.relation]
+    names = list(rel.attrs)
+    cur = _rows_view(rel.columns, names)
+
+    keep = np.ones(rel.num_rows, dtype=bool)
+    if delta.n_deletes:
+        dk = _rows_view(delta.deletes, names)
+        if len(np.unique(dk)) != len(dk):
+            raise ValueError(f"duplicate rows in deletes for {delta.relation}")
+        missing = ~np.isin(dk, cur)
+        if missing.any():
+            raise ValueError(
+                f"{int(missing.sum())} delete rows not present in "
+                f"{delta.relation} (set semantics)"
+            )
+        keep &= ~np.isin(cur, dk)
+
+    cols = {a: rel.columns[a][keep] for a in names}
+    if delta.n_inserts:
+        ins = {
+            a: np.asarray(delta.inserts[a]).astype(rel.columns[a].dtype)
+            for a in names
+        }
+        ik = _rows_view(ins, names)
+        if len(np.unique(ik)) != len(ik):
+            raise ValueError(f"duplicate rows in inserts for {delta.relation}")
+        dup = np.isin(ik, cur[keep])
+        if dup.any():
+            raise ValueError(
+                f"{int(dup.sum())} insert rows already present in "
+                f"{delta.relation} (set semantics)"
+            )
+        cols = {a: np.concatenate([cols[a], ins[a]]) for a in names}
+    return Relation(rel.name, cols)

@@ -1,0 +1,50 @@
+"""Per-bundle incremental refresh: one delta, two signed mini-passes.
+
+``refresh_bundle`` re-derives a compiled bundle's aggregate tables after a
+base-relation delta without a full aggregate pass: the insert and delete
+batches are each factorized ONCE per delta (``engine.delta_factorize`` —
+semi-join-reduce against the delta tuples, rebuild the touched node
+tables; registers-independent, so the session shares the two
+factorizations across all its bundles), then the bundle's own plan
+signatures re-execute over the delta-reduced data
+(``engine.aggregate_patch``) and the two signed patches merge additively
+into the bundle's monomial tables. Deletes enter with multiplicity -1;
+the join's linearity in each relation makes this exact, not approximate.
+
+When neither batch joins anything (both factorizations ``None``), the
+bundle's tables — and therefore its cached ``SigmaCSY``/sharded/penalty
+views — are provably still valid and are left untouched; otherwise the
+views are invalidated so a stale Sigma can never be served.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional
+
+from repro.core.engine import Factorized, aggregate_patch, merge_results
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.session.bundle import AggregateBundle
+
+
+def refresh_bundle(
+    bundle: "AggregateBundle",
+    fz_inserts: Optional[Factorized],
+    fz_deletes: Optional[Factorized],
+) -> bool:
+    """Patch one compiled bundle in place for a base-relation delta.
+
+    ``fz_inserts``/``fz_deletes`` are the signed batches' delta
+    factorizations from ``engine.delta_factorize`` (built against the
+    PRE-delta database; None = that batch's delta join is empty). Returns
+    True when the bundle's tables changed (views invalidated), False when
+    the delta join was empty and every cached view remains valid.
+    """
+    if fz_inserts is None and fz_deletes is None:
+        return False
+    regs = bundle.plan.registers
+    ins = aggregate_patch(fz_inserts, regs)
+    dele = aggregate_patch(fz_deletes, regs)
+    bundle.result = merge_results(bundle.result, [(1.0, ins), (-1.0, dele)])
+    bundle.invalidate_views()
+    return True

@@ -8,6 +8,8 @@ The legacy ``core.api.train``/``prepare`` are deprecation wrappers over
 this surface.
 """
 
+from repro.delta import Delta, DeltaReport
+
 from .bundle import AggregateBundle, BundleKey, workload_key
 from .compressed import (
     compressed_bytes_per_step,
@@ -28,6 +30,8 @@ from .specs import (
 __all__ = [
     "AggregateBundle",
     "BundleKey",
+    "Delta",
+    "DeltaReport",
     "ExecutionPolicy",
     "FactorizationMachine",
     "FitResult",

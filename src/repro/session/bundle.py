@@ -63,6 +63,7 @@ class AggregateBundle:
     aggregate_seconds: float
     fds: Tuple[FD, ...] = ()
     sigma_builds: int = 0
+    refreshes: int = 0                 # delta patches merged into .result
     _sigmas: Dict[WorkloadKey, SigmaCSY] = dataclasses.field(
         default_factory=dict, repr=False
     )
@@ -72,6 +73,19 @@ class AggregateBundle:
     _penalties: Dict[WorkloadKey, object] = dataclasses.field(
         default_factory=dict, repr=False
     )
+
+    def invalidate_views(self) -> None:
+        """Drop every cached view derived from ``result`` — called after a
+        delta patch merges into the tables. A ``SigmaCSY`` (plain or
+        sharded) or FD penalty assembled from the pre-delta tables must
+        never be served again; they rebuild lazily on next use. ``plan``
+        (index arrays over the ORIGINAL node tables) is kept only for its
+        registers and stats; the delta path never replays it on new data.
+        """
+        self._sigmas.clear()
+        self._sharded.clear()
+        self._penalties.clear()
+        self.refreshes += 1
 
     def covers(self, wl: Workload) -> bool:
         """Monomial-level subsumption: every aggregate W needs is here."""

@@ -37,6 +37,7 @@ from repro.core import fd as fdmod
 from repro.core.engine import (
     EnginePlan,
     build_plan,
+    delta_factorize,
     execute,
     factorize,
 )
@@ -46,6 +47,8 @@ from repro.core.schema import Database
 from repro.core.sigma import SigmaCSY
 from repro.core.solver import SolverResult, bgd
 from repro.core.variable_order import OrderInfo, VarNode, analyze
+
+from repro.delta import Delta, DeltaReport, apply_to_relation, refresh_bundle
 
 from .bundle import AggregateBundle, BundleKey, fd_key
 from .compressed import make_compressed_grad_fn
@@ -58,6 +61,9 @@ class SessionStats:
     bundle_hits: int = 0           # compile() requests served by subsumption
     bundle_misses: int = 0
     fits: int = 0
+    deltas_applied: int = 0        # apply_delta calls
+    bundle_refreshes: int = 0      # bundles patched in place by deltas
+    delta_noops: int = 0           # (delta, bundle) pairs with empty delta join
 
 
 @dataclasses.dataclass
@@ -151,6 +157,52 @@ class Session:
         )
         self.bundles.append(bundle)
         return bundle
+
+    # ------------------------------------------------------------------
+    def apply_delta(self, delta: Delta) -> DeltaReport:
+        """Incrementally maintain the session under a base-relation delta
+        (DESIGN.md §9): every compiled bundle's monomial tables are patched
+        additively with the delta-join aggregates (deletes as negative
+        multiplicities) instead of re-running the full factorized pass, and
+        only the affected cached Sigma views are invalidated — a bundle the
+        delta join never touched keeps serving its caches. The database is
+        updated in place (set semantics, verified before any mutation) and
+        the memoized factorization is dropped so a future cache-miss
+        ``compile`` sees the new data. ``fit``/``fit_many`` accept
+        ``warm_from`` to restart BGD from the pre-delta optimum.
+        """
+        t0 = time.perf_counter()
+        delta.validate(self.db)
+        # verifies inserts-are-new / deletes-exist BEFORE anything mutates
+        new_rel = apply_to_relation(self.db, delta)
+
+        # one delta factorization per signed batch, shared by every bundle
+        # (only the per-bundle plan/execute depends on the registers)
+        fz_ins = delta_factorize(
+            self.db, self.info, delta.relation, delta.inserts
+        )
+        fz_del = delta_factorize(
+            self.db, self.info, delta.relation, delta.deletes
+        )
+        refreshed = 0
+        for b in self.bundles:
+            if refresh_bundle(b, fz_ins, fz_del):
+                refreshed += 1
+            else:
+                self.stats.delta_noops += 1
+
+        self.db.relations[delta.relation] = new_rel
+        self._fz = None
+        self.stats.deltas_applied += 1
+        self.stats.bundle_refreshes += refreshed
+        return DeltaReport(
+            relation=delta.relation,
+            n_inserts=delta.n_inserts,
+            n_deletes=delta.n_deletes,
+            bundles_refreshed=refreshed,
+            bundles_unchanged=len(self.bundles) - refreshed,
+            seconds=time.perf_counter() - t0,
+        )
 
     # ------------------------------------------------------------------
     def materialize(
@@ -262,20 +314,32 @@ class Session:
         fds=(),
         solver: Optional[SolverConfig] = None,
         warm_start: bool = False,
+        warm_from: Optional[Sequence[FitResult]] = None,
     ) -> List[FitResult]:
         """Train every spec off ONE bundle: the joint requirement (max
         degree, squares if any spec's h has them) is compiled once and
-        every model's Sigma view is assembled from it."""
+        every model's Sigma view is assembled from it.
+
+        ``warm_start`` chains each model off the previous one's params;
+        ``warm_from`` (one prior FitResult per spec, e.g. the pre-delta
+        fits after ``apply_delta``) restarts each model from its own
+        earlier optimum instead."""
         specs = list(specs)
         if not specs:
             return []
+        if warm_from is not None and len(warm_from) != len(specs):
+            raise ValueError("warm_from must carry one FitResult per spec")
         degree = max(s.degree for s in specs)
         squares = any(s.squares and s.degree >= 2 for s in specs)
         bundle = self.compile(
             features, response, fds, degree=degree, squares=squares
         )
         out: List[FitResult] = []
-        for spec in specs:
+        for k, spec in enumerate(specs):
+            if warm_from is not None:
+                wf = warm_from[k]
+            else:
+                wf = out[-1] if (warm_start and out) else None
             out.append(
                 self.fit(
                     spec,
@@ -284,7 +348,7 @@ class Session:
                     fds,
                     solver=solver,
                     bundle=bundle,
-                    warm_from=out[-1] if (warm_start and out) else None,
+                    warm_from=wf,
                 )
             )
         return out
@@ -293,8 +357,11 @@ class Session:
     @staticmethod
     def _warm_params(model: Model, warm: FitResult):
         """Scatter a previous fit's theta into the new parameter space,
-        matching blocks by feature-map monomial (shared bundle => equal
-        block key tables, so matched blocks have equal sizes)."""
+        matching blocks by feature-map monomial. Same-bundle warm starts
+        have equal block key tables (whole-block copy); after a delta
+        refresh a block's observed key combos can grow or shrink, so
+        keyed blocks align slot-by-slot on the key tables instead — new
+        combos start at the ridge prior 0, vanished combos are dropped."""
         import jax.numpy as jnp
 
         prev = warm.params
@@ -309,10 +376,20 @@ class Session:
         theta = np.zeros(model.space.total, dtype=np.float64)
         for i, b in enumerate(model.space.blocks):
             pb = prev_by_mono.get(b.mono)
-            if i in inert or pb is None or pb.size != b.size:
+            if i in inert or pb is None:
                 continue
-            theta[b.offset : b.offset + b.size] = prev_vec[
-                pb.offset : pb.offset + pb.size
+            if b.keys is None or pb.keys is None:
+                if pb.size == b.size:
+                    theta[b.offset : b.offset + b.size] = prev_vec[
+                        pb.offset : pb.offset + pb.size
+                    ]
+                continue
+            # keyed block: align on the (sorted) composite key tables
+            pos = np.searchsorted(b.keys, pb.keys)
+            pos = np.clip(pos, 0, b.size - 1)
+            hit = b.keys[pos] == pb.keys
+            theta[b.offset + pos[hit]] = prev_vec[
+                pb.offset + np.nonzero(hit)[0]
             ]
         if model.name == "fama":
             init = model.init_params()

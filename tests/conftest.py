@@ -9,3 +9,33 @@ jax.config.update("jax_enable_x64", True)
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow",
+        action="store_true",
+        default=False,
+        help="run tests marked @pytest.mark.slow (the heavy end-to-end "
+        "drills; CI's full job passes this, the fast tier-1 job does not)",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy end-to-end case — skipped by the default tier-1 run; "
+        "select with --runslow or -m slow",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    # An explicit -m expression (e.g. -m slow / -m "not slow") takes over;
+    # otherwise the default run skips slow tests so `pytest -x -q` stays
+    # well under two minutes.
+    if config.getoption("--runslow") or config.getoption("-m"):
+        return
+    skip = pytest.mark.skip(reason="slow: needs --runslow (or -m slow)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

@@ -12,6 +12,8 @@ from repro.configs import get_config, list_archs
 from repro.models.config import Family
 from repro.models.model import LM, build_runs
 
+pytestmark = pytest.mark.slow  # heavy e2e: full CI job only
+
 
 def _batch(cfg, key, B=2, S=16):
     batch = {

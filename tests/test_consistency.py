@@ -13,6 +13,8 @@ from repro.configs import get_config, list_archs
 from repro.models.config import Family
 from repro.models.model import LM
 
+pytestmark = pytest.mark.slow  # heavy e2e: full CI job only
+
 STEPS = 3
 
 

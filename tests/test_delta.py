@@ -1,0 +1,303 @@
+"""Incremental bundle maintenance (DESIGN.md §9): delta-join patches must
+be exact (table-level parity vs a from-scratch pass), caches must never
+serve a stale Sigma, and ``covers`` must reject every workload the bundle
+cannot subsume."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.engine import compute_aggregates
+from repro.core.schema import make_database
+from repro.core.solver import closed_form_ridge
+from repro.core.variable_order import analyze, vo
+from repro.data import retailer
+from repro.data.retailer import RetailerSpec, generate, variable_order
+from repro.delta import Delta
+from repro.session import (
+    LinearRegression,
+    PolynomialRegression,
+    Session,
+    SolverConfig,
+)
+
+LAM = 0.1
+ORDER = vo("A", vo("B", vo("C"), vo("G", vo("D"))), vo("E"))
+FEATS = ["A", "B", "C", "D"]
+
+
+def make_db(seed=1, nR=80, nS=50, nT=40):
+    rng = np.random.default_rng(seed)
+    bvals = rng.integers(0, 10, nS)
+    gmap = rng.integers(0, 3, 10)
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 8, nR), "B": rng.integers(0, 10, nR),
+                  "C": rng.normal(size=nR).round(2)},
+            "S": {"B": bvals, "G": gmap[bvals], "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 8, nT), "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B", "G"],
+        fds=[("B", ["G"])],
+    )
+
+
+def _r_delta(db, rng, n_ins=5, n_del=5, a_val=None):
+    """A valid insert/delete batch against relation R: deletes sample live
+    rows (optionally all rows of one A value), inserts are fresh tuples."""
+    rel = db.relations["R"]
+    if a_val is not None:
+        idx = np.nonzero(rel.columns["A"] == a_val)[0]
+    else:
+        idx = rng.choice(rel.num_rows, size=min(n_del, rel.num_rows),
+                         replace=False)
+    deletes = {a: rel.columns[a][idx] for a in rel.attrs}
+    inserts = {
+        "A": rng.integers(0, db.adom["A"], n_ins).astype(np.int32),
+        "B": rng.integers(0, db.adom["B"], n_ins).astype(np.int32),
+        # fresh continuous values make the tuples new almost surely
+        "C": rng.normal(size=n_ins).round(6),
+    }
+    return Delta("R", inserts=inserts, deletes=deletes)
+
+
+def _table_parity(bundle, db, order, tol=1e-8):
+    """Patched tables == from-scratch tables, allowing the patched side to
+    keep zero-mass key combos a delta emptied."""
+    info = analyze(order, db)
+    scratch, _ = compute_aggregates(db, info, bundle.workload.aggregates)
+    for m, (k1, v1) in bundle.result.tables.items():
+        k2, v2 = scratch.tables.get(m, ({}, np.zeros(0)))
+        sig = tuple(k1)
+        v1, v2 = np.asarray(v1, float), np.asarray(v2, float)
+        if not sig:
+            assert abs(v1[0] - v2[0]) < tol * max(1.0, abs(v2[0])), m
+            continue
+        def as_map(keys, vals):
+            comp = np.stack(
+                [np.asarray(keys[v]).astype(np.int64) for v in sig], axis=1
+            )
+            return {tuple(r): x for r, x in zip(comp.tolist(), vals.tolist())}
+        d1, d2 = as_map(k1, v1), as_map(k2, v2)
+        for key in set(d1) | set(d2):
+            a, b = d1.get(key, 0.0), d2.get(key, 0.0)
+            assert abs(a - b) < tol * max(1.0, abs(b)), (m, key, a, b)
+
+
+# ----------------------------------------------------------------------
+# Exactness
+# ----------------------------------------------------------------------
+
+
+def test_delta_stream_table_parity():
+    """Inserts+deletes over several batches: every patched monomial table
+    stays bit-for-bit consistent with a from-scratch aggregate pass,
+    including a batch that wipes out an entire A group."""
+    db = make_db()
+    sess = Session(db, ORDER)
+    sess.compile(FEATS, "E", degree=2)
+    rng = np.random.default_rng(7)
+    b = sess.bundles[0]
+
+    for i in range(2):
+        sess.apply_delta(_r_delta(db, rng))
+        _table_parity(b, copy.deepcopy(sess.db), ORDER)
+    # kill every R tuple of one A value: its combos go to zero mass
+    sess.apply_delta(_r_delta(db, rng, n_ins=2, a_val=3))
+    _table_parity(b, copy.deepcopy(sess.db), ORDER)
+    assert sess.stats.aggregate_passes == 1
+    assert b.refreshes == 3
+
+
+@pytest.mark.slow
+def test_retailer_delta_refresh_matches_full_recompile():
+    """Acceptance: a stream of insert+delete batches on the retailer
+    fragment — apply_delta + refit matches from-scratch compile() + fit to
+    <=1e-6 loss difference, off ONE aggregate pass."""
+    db = generate(RetailerSpec(n_locn=8, n_zip=5, n_date=10, n_sku=12, seed=3))
+    feats = retailer.features(include_sku=False, include_zip=True)
+    cfg = SolverConfig(max_iters=2000, tol=1e-12, policy="single")
+    spec = LinearRegression(lam=1e-2)
+
+    sess = Session(db, variable_order())
+    r0 = sess.fit(spec, feats, "units", solver=cfg)
+    for d in retailer.deltas(sess.db, n_batches=3, frac=0.02, seed=1):
+        rep = sess.apply_delta(d)
+        assert rep.bundles_refreshed == 1
+    warm = sess.fit(spec, feats, "units", solver=cfg, warm_from=r0)
+
+    s2 = Session(copy.deepcopy(sess.db), variable_order())
+    scratch = s2.fit(spec, feats, "units", solver=cfg)
+
+    assert sess.stats.aggregate_passes == 1       # no recompile on our side
+    assert abs(warm.loss - scratch.loss) < 1e-6
+    assert warm.sigma.count == scratch.sigma.count
+    # closed-form optima of the two Sigmas agree exactly (solver-independent)
+    t1 = closed_form_ridge(warm.sigma.dense(), np.asarray(warm.sigma.c), 1e-2)
+    t2 = closed_form_ridge(scratch.sigma.dense(), np.asarray(scratch.sigma.c), 1e-2)
+    l1 = float(warm.model.loss(warm.sigma, t1))
+    l2 = float(scratch.model.loss(scratch.sigma, t2))
+    assert abs(l1 - l2) < 1e-9
+
+
+def test_warm_start_aligns_blocks_by_key_after_delta():
+    """A delta can grow/shrink a categorical block; warm start must align
+    surviving key combos and still reach the same optimum."""
+    db = make_db()
+    sess = Session(db, ORDER)
+    feats = ["A", "B", "C"]
+    cfg = SolverConfig(max_iters=800, tol=1e-12)
+    r0 = sess.fit(LinearRegression(lam=LAM), feats, "E", solver=cfg)
+    rng = np.random.default_rng(11)
+    sess.apply_delta(_r_delta(db, rng, n_ins=8, n_del=8))
+    warm = sess.fit(LinearRegression(lam=LAM), feats, "E", solver=cfg,
+                    warm_from=r0)
+    cold = sess.fit(LinearRegression(lam=LAM), feats, "E", solver=cfg)
+    assert abs(warm.loss - cold.loss) < 1e-8
+
+
+def test_fit_many_warm_from_previous_results():
+    db = make_db()
+    sess = Session(db, ORDER)
+    feats = ["A", "C"]
+    specs = [LinearRegression(lam=LAM), PolynomialRegression(degree=2, lam=LAM)]
+    cfg = SolverConfig(max_iters=150)
+    before = sess.fit_many(specs, feats, "E", solver=cfg)
+    sess.apply_delta(_r_delta(db, np.random.default_rng(5)))
+    after = sess.fit_many(specs, feats, "E", solver=cfg, warm_from=before)
+    assert len(after) == 2
+    assert sess.stats.aggregate_passes == 1
+    with pytest.raises(ValueError, match="warm_from"):
+        sess.fit_many(specs, feats, "E", warm_from=before[:1])
+
+
+# ----------------------------------------------------------------------
+# Cache invalidation
+# ----------------------------------------------------------------------
+
+
+def test_stale_sigma_is_never_served_after_delta():
+    db = make_db()
+    sess = Session(db, ORDER)
+    cfg = SolverConfig(max_iters=50)
+    r0 = sess.fit(LinearRegression(lam=LAM), FEATS, "E", solver=cfg)
+    bundle = r0.bundle
+    assert bundle.sigma_builds == 1
+    sess.apply_delta(_r_delta(db, np.random.default_rng(2)))
+    r1 = sess.fit(LinearRegression(lam=LAM), FEATS, "E", solver=cfg)
+    assert r1.bundle is bundle                    # same bundle, patched
+    assert r1.sigma is not r0.sigma               # view rebuilt, not reused
+    assert bundle.sigma_builds == 2
+    assert not np.allclose(np.asarray(r0.sigma.c), np.asarray(r1.sigma.c))
+
+
+def test_noop_delta_keeps_caches_valid():
+    """Inserts that join nothing (dangling A value) leave every aggregate
+    unchanged — the bundle keeps serving its cached Sigma view."""
+    # 6 T rows over 8 A ids: some id is in adom (via R) but absent from T,
+    # so an R insert carrying it cannot join anything
+    db = make_db(nT=6)
+    present_t = set(db.relations["T"].columns["A"].tolist())
+    dangling = [a for a in range(db.adom["A"]) if a not in present_t]
+    assert dangling
+    sess = Session(db, ORDER)
+    r0 = sess.fit(LinearRegression(lam=LAM), ["A", "C"], "E",
+                  solver=SolverConfig(max_iters=50))
+    bundle = r0.bundle
+    d = Delta("R", inserts={
+        "A": np.array([dangling[0]], dtype=np.int32),
+        "B": np.array([0], dtype=np.int32),
+        "C": np.array([123.456]),
+    })
+    rep = sess.apply_delta(d)
+    assert rep.bundles_refreshed == 0 and rep.bundles_unchanged == 1
+    assert sess.stats.delta_noops == 1
+    r1 = sess.fit(LinearRegression(lam=LAM), ["A", "C"], "E",
+                  solver=SolverConfig(max_iters=50))
+    assert r1.sigma is r0.sigma                   # cache hit: still valid
+    assert bundle.sigma_builds == 1
+    # but the relation itself did change
+    assert sess.db.relations["R"].num_rows == 81
+
+
+# ----------------------------------------------------------------------
+# Delta validation
+# ----------------------------------------------------------------------
+
+
+def test_delta_validation_rejects_bad_batches():
+    db = make_db()
+    sess = Session(db, ORDER)
+    rel = db.relations["R"]
+    row0 = {a: rel.columns[a][:1] for a in rel.attrs}
+
+    with pytest.raises(ValueError, match="unknown relation"):
+        sess.apply_delta(Delta("Nope", inserts=row0))
+    with pytest.raises(ValueError, match="columns"):
+        sess.apply_delta(Delta("R", inserts={"A": np.array([0])}))
+    with pytest.raises(ValueError, match="active domain"):
+        sess.apply_delta(Delta("R", inserts={
+            "A": np.array([db.adom["A"]]), "B": np.array([0]),
+            "C": np.array([0.5])}))
+    with pytest.raises(ValueError, match="already present"):
+        sess.apply_delta(Delta("R", inserts=row0))
+    with pytest.raises(ValueError, match="not present"):
+        sess.apply_delta(Delta("R", deletes={
+            "A": np.array([0]), "B": np.array([0]),
+            "C": np.array([999.0])}))
+    # nothing mutated by the failed batches
+    assert sess.db.relations["R"].num_rows == 80
+
+
+def test_retailer_delta_generator_contract():
+    """deltas() batches stay valid when applied in order, and respect frac."""
+    db = generate(RetailerSpec(n_locn=6, n_zip=4, n_date=8, n_sku=10, seed=0))
+    n0 = db.relations["Inventory"].num_rows
+    sess = Session(db, variable_order())
+    for d in retailer.deltas(sess.db, n_batches=4, frac=0.05, seed=2):
+        assert d.n_inserts == d.n_deletes == max(int(round(n0 * 0.05)), 1)
+        sess.apply_delta(d)     # raises if any batch breaks set semantics
+    assert sess.db.relations["Inventory"].num_rows == n0
+
+
+# ----------------------------------------------------------------------
+# covers() negative cases
+# ----------------------------------------------------------------------
+
+
+def test_covers_rejects_response_mismatch():
+    db = make_db()
+    sess = Session(db, ORDER)
+    b = sess.compile(["A", "C"], "E", degree=2)
+    wl_d = LinearRegression().workload(db, ["A", "C"], "D")
+    assert not b.covers(wl_d)
+    b2 = sess.compile(["A", "C"], "D", degree=1)
+    assert b2 is not b
+    assert sess.stats.aggregate_passes == 2
+
+
+def test_covers_rejects_degree_downgrade_without_squares():
+    """A squares-free degree-2 bundle (FaMa's requirement) lacks the
+    x^2-bearing aggregates of PR2 — it must not claim coverage."""
+    db = make_db()
+    sess = Session(db, ORDER)
+    b_fama = sess.compile(["A", "C"], "E", degree=2, squares=False)
+    wl_pr2 = PolynomialRegression(degree=2).workload(db, ["A", "C"], "E")
+    assert not b_fama.covers(wl_pr2)
+    b_pr2 = sess.compile(["A", "C"], "E", degree=2, squares=True)
+    assert b_pr2 is not b_fama
+    # and the square-bearing bundle covers BOTH
+    wl_fama = LinearRegression().workload(db, ["A", "C"], "E")
+    assert b_pr2.covers(wl_pr2) and b_pr2.covers(wl_fama)
+
+
+def test_fd_set_mismatch_compiles_separate_bundle():
+    db = make_db()
+    sess = Session(db, ORDER)
+    feats = ["A", "B", "G", "C"]
+    plain = sess.compile(feats, "E", degree=1)
+    red = sess.compile(feats, "E", fds=db.fds, degree=1)
+    assert red is not plain
+    assert sess.stats.aggregate_passes == 2

@@ -30,6 +30,7 @@ def test_core_distributed_shim_warns_and_reexports():
     assert shim.AcdcShapes is not None
 
 
+@pytest.mark.slow
 def test_legacy_train_warns_and_matches_session(db):
     order, feats = variable_order(), features()
     with pytest.warns(DeprecationWarning, match="repro.session"):
@@ -46,6 +47,7 @@ def test_legacy_train_warns_and_matches_session(db):
     assert legacy.sigma.space.total == r.sigma.space.total
 
 
+@pytest.mark.slow
 def test_legacy_prepare_warns_and_matches_materialize(db):
     order, feats = variable_order(), features()
     with pytest.warns(DeprecationWarning, match="repro.session"):
@@ -61,6 +63,7 @@ def test_legacy_prepare_warns_and_matches_materialize(db):
     np.testing.assert_allclose(np.asarray(sig.vals), np.asarray(sig2.vals))
 
 
+@pytest.mark.slow
 def test_fd_legacy_train_matches_session(db):
     order, feats = variable_order(), features()
     with warnings.catch_warnings():

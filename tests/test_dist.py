@@ -131,6 +131,7 @@ def test_distribute_sigma_single_device_noop():
         assert distribute_sigma(sig) is sig
 
 
+@pytest.mark.slow
 def test_api_train_sharded_sigma_matches_closed_form():
     """The default multi-device path (api.train -> shard_sigma_for_bgd)
     must converge to the same optimum as the single-device solve."""

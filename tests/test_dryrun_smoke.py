@@ -7,6 +7,9 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = pytest.mark.slow  # heavy e2e: full CI job only
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -14,8 +14,11 @@ from repro.dist import HeartbeatMonitor
 from repro.launch.mesh import mesh_from_plan
 from repro.launch.train import LoopConfig, train_loop
 from repro.optim import adamw
+import pytest
 
-TOTAL = 12
+pytestmark = pytest.mark.slow  # heavy e2e: full CI job only
+
+TOTAL = 8
 
 
 def _tiny():

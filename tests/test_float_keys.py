@@ -1,0 +1,80 @@
+"""Canonical float join keys: -0.0 == 0.0 and NaN payload bits must not
+split equal values into distinct key groups (engine._as_key_col,
+variable_order._semijoin, schema.make_database dedup)."""
+
+import numpy as np
+
+from repro.core.engine import compute_aggregates, _dedup_rows
+from repro.core.monomials import mono
+from repro.core.schema import float_key_bits, make_database
+from repro.core.variable_order import analyze, vo
+
+
+def _nan_with_payload() -> np.ndarray:
+    # two NaNs with different bit patterns (quiet NaN + payload variant)
+    return np.array([0x7FF8000000000000, 0x7FF8000000000001]).view(np.float64)
+
+
+def test_float_key_bits_canonicalizes_zero_and_nan():
+    nans = _nan_with_payload()
+    col = np.array([-0.0, 0.0, 1.5, nans[0], nans[1]])
+    bits = float_key_bits(col)
+    assert bits[0] == bits[1]          # signed zero collapsed
+    assert bits[3] == bits[4]          # one canonical NaN pattern
+    assert bits[2] != bits[0]
+    # input untouched (copy semantics)
+    assert np.signbit(col[0])
+
+
+def test_make_database_dedups_signed_zero_rows():
+    # (-0.0, k) and (0.0, k) are the SAME tuple under set semantics
+    db = make_database(
+        relations={"R": {"W": np.array([-0.0, 0.0, 2.0]),
+                         "K": np.array([7, 7, 7])}},
+        continuous=["W"],
+        categorical=["K"],
+    )
+    assert db.relations["R"].num_rows == 2
+
+
+def test_make_database_dedups_nan_payload_rows():
+    nans = _nan_with_payload()
+    db = make_database(
+        relations={"R": {"W": np.concatenate([nans, [1.0]]),
+                         "K": np.array([3, 3, 3])}},
+        continuous=["W"],
+        categorical=["K"],
+    )
+    assert db.relations["R"].num_rows == 2
+
+
+def test_dedup_rows_groups_signed_zero():
+    a, = _dedup_rows([np.array([0.0, -0.0, 1.0, -0.0])])
+    assert len(a) == 2
+
+
+def test_join_on_float_column_with_signed_zero():
+    """Regression: R carries -0.0, S carries +0.0 in the shared continuous
+    join variable W. Before canonicalization the semi-join kept both but the
+    node-table context keys disagreed bitwise — a dangling-context assertion
+    (or a silently split group). Equal values must join."""
+    db = make_database(
+        relations={
+            "R": {"W": np.array([-0.0, 1.5, 3.0]),
+                  "A": np.array([0, 1, 0])},
+            "S": {"W": np.array([0.0, 1.5, 7.0]),
+                  "B": np.array([10.0, 20.0, 30.0])},
+        },
+        continuous=["W", "B"],
+        categorical=["A"],
+    )
+    info = analyze(vo("W", vo("A"), vo("B")), db)
+    res, _ = compute_aggregates(
+        db, info, [mono(("B", 1)), mono(("A", 1))]
+    )
+    # W=0.0 and W=1.5 join; W=3.0 (R) and W=7.0 (S) are dangling
+    assert res.count == 2
+    assert res.scalar(mono(("B", 1))) == 10.0 + 20.0
+    keys, vals = res.tables[mono(("A", 1))]
+    got = dict(zip(np.asarray(keys["A"]).tolist(), np.asarray(vals).tolist()))
+    assert got == {0: 1.0, 1: 1.0}

@@ -62,6 +62,7 @@ def test_pr2_bgd_matches_closed_form(db):
     assert np.abs(np.asarray(r.params) - theta_cf).max() < 1e-3
 
 
+@pytest.mark.slow
 def test_fd_reparam_reaches_same_optimum(db):
     """The paper's FD reparameterization is an exact transformation: the
     optimal loss of the reduced problem equals the full problem's."""
@@ -74,6 +75,7 @@ def test_fd_reparam_reaches_same_optimum(db):
     assert red.sigma.nnz_distinct < full.sigma.nnz_distinct
 
 
+@pytest.mark.slow
 def test_fama_trains(db):
     m, sig, wl, plan, _ = prepare(db, ORDER, ["A", "B", "C", "D"], "E",
                                   "fama", LAM, (), 4)

@@ -2,8 +2,12 @@
 
 import os
 import subprocess
+
+import pytest
 import sys
 import textwrap
+
+pytestmark = pytest.mark.slow  # subprocess + 8 fake devices: full CI job
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -50,6 +50,7 @@ def test_seg_outer_segment_spanning_blocks(rng):
 
 @pytest.mark.parametrize("s,w", [(256, 128), (512, 256), (512, 384)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_swa_attention(rng, s, w, dtype):
     B, H, D = 2, 2, 128
     q = jnp.asarray(rng.normal(size=(B, s, H, D)) * 0.3, dtype=dtype)

@@ -11,6 +11,8 @@ import pytest
 from repro.models.config import Family, ModelConfig, SSMConfig
 from repro.models.ssm import apply_mlstm, init_mlstm
 
+pytestmark = pytest.mark.slow  # heavy e2e: full CI job only
+
 BASE = ModelConfig(
     name="x", family=Family.SSM, n_layers=2, d_model=64, n_heads=4,
     n_kv=4, head_dim=16, d_ff=0, vocab=64, dtype="float32",

@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models.config import Family, ModelConfig, MoEConfig
 from repro.models.moe import MoEMeshInfo, apply_moe, apply_moe_dense, init_moe
@@ -21,6 +22,7 @@ def _cfg(**kw):
     return ModelConfig(**base)
 
 
+@pytest.mark.slow
 def test_dropping_equals_dense_with_slack():
     """With capacity >= tokens no token drops, so the capacity-dispatch MoE
     must agree with the exact dense-compute reference."""
@@ -36,6 +38,7 @@ def test_dropping_equals_dense_with_slack():
     np.testing.assert_allclose(float(aux_d), float(aux_s), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_capacity_dropping_drops():
     cfg = _cfg(moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
                              capacity_factor=0.25))
@@ -50,6 +53,7 @@ def test_capacity_dropping_drops():
     assert np.abs(np.asarray(out) - np.asarray(ref)).max() > 1e-6
 
 
+@pytest.mark.slow
 def test_shared_expert_path():
     cfg = _cfg(moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
                              capacity_factor=8.0, num_shared=1))
@@ -62,6 +66,7 @@ def test_shared_expert_path():
     assert np.isfinite(np.asarray(out)).all()
 
 
+@pytest.mark.slow
 def test_aux_loss_balances():
     """Aux loss is minimized (=1) for a perfectly uniform router."""
     cfg = _cfg()

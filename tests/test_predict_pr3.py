@@ -34,6 +34,7 @@ def db():
     )
 
 
+@pytest.mark.slow
 def test_predictions_match_one_hot(db):
     r = train(db, ORDER, ["A", "B", "C", "D"], "E", model="lr", lam=0.1)
     join = materialize_join(db)
@@ -64,6 +65,7 @@ def test_pr3_monomials_structure(db):
     assert max(degree(m) for m in wl.aggregates) == 6
 
 
+@pytest.mark.slow
 def test_pr3_matches_one_hot_oracle(db):
     r = train(db, ORDER, ["A", "C"], "E", model="pr3", lam=0.1, max_iters=4000)
     join = materialize_join(db)

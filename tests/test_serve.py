@@ -6,6 +6,8 @@ import pytest
 from repro.configs import get_config
 from repro.launch.serve import Engine, Request, serve_queue
 
+pytestmark = pytest.mark.slow  # heavy e2e: full CI job only
+
 
 @pytest.fixture(scope="module")
 def engine():
@@ -28,6 +30,7 @@ def test_cohort_generates(engine):
         assert (r.output >= 0).all() and (r.output < engine.cfg.vocab).all()
 
 
+@pytest.mark.slow
 def test_queue_drains_in_cohorts(engine):
     rng = np.random.default_rng(1)
     reqs = [
@@ -53,6 +56,7 @@ def test_eos_stops_early(engine):
     assert len(req.output) <= len(probe.output)
 
 
+@pytest.mark.slow
 def test_ragged_cohort_is_exact(engine):
     """Right-padding + cache invalidation + per-slot positions make a
     ragged cohort EXACTLY equivalent to solo serving (full-attention arch):

@@ -54,7 +54,7 @@ SPECS = [
 def fitted(db):
     """One fit_many shared by the acceptance assertions below."""
     sess = Session(db, ORDER)
-    results = sess.fit_many(SPECS, FEATS, "E", solver=SolverConfig(max_iters=400))
+    results = sess.fit_many(SPECS, FEATS, "E", solver=SolverConfig(max_iters=250))
     return sess, results
 
 
@@ -69,6 +69,7 @@ def test_fit_many_executes_exactly_one_aggregate_pass(fitted):
     assert results[0].bundle.sigma_builds == 3
 
 
+@pytest.mark.slow
 def test_fit_many_matches_legacy_train_losses(fitted, db):
     """Acceptance: each model off the shared bundle matches the one-shot
     legacy train() loss to 1e-8."""
@@ -79,7 +80,7 @@ def test_fit_many_matches_legacy_train_losses(fitted, db):
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
             legacy = train(db, ORDER, FEATS, "E", model=spec.name, lam=LAM,
-                           rank=getattr(spec, "rank", 8), max_iters=400)
+                           rank=getattr(spec, "rank", 8), max_iters=250)
         assert abs(legacy.loss - r.loss) < 1e-8, spec.name
 
 
@@ -108,6 +109,7 @@ def test_bundle_subsumption_lr_and_fama_reuse_pr2(db):
     assert sess.stats.aggregate_passes == 2
 
 
+@pytest.mark.slow
 def test_fd_bundles_are_separate_and_match_legacy(db):
     from repro.core.api import train
 
@@ -162,6 +164,7 @@ def test_warm_start_reaches_same_optimum(db):
     assert sess.stats.aggregate_passes == 1
 
 
+@pytest.mark.slow
 def test_compressed_gradient_combine_converges(db):
     """SolverConfig(grad_compression="int8") routes the BGD combine through
     dist.compressed_psum; error feedback keeps the optimum intact."""

@@ -11,6 +11,9 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = pytest.mark.slow  # heavy e2e: full CI job only
 
 
 def test_sharded_aggregate_pass_matches_engine_on_retailer():
@@ -35,7 +38,7 @@ def test_sharded_aggregate_pass_matches_engine_on_retailer():
         from repro.dist.shard import AcdcShapes, aggregate_pass
 
         FEATS = ["price", "mean_temp", "population", "dist_comp1"]
-        db = generate(RetailerSpec(n_locn=20, n_zip=12, n_date=30, n_sku=40))
+        db = generate(RetailerSpec(n_locn=12, n_zip=8, n_date=16, n_sku=24))
         join = materialize_join(db)
         J = len(join["units"])
         f = len(FEATS)
@@ -61,7 +64,7 @@ def test_sharded_aggregate_pass_matches_engine_on_retailer():
                 "key_sku": jnp.asarray(
                     padded(join["sku"], n, np.int32).reshape(n_shards, r)),
                 "pair_key": jnp.asarray(
-                    padded(join["sku"] * 12 + join["zip"], n,
+                    padded(join["sku"] * 8 + join["zip"], n,
                            np.int32).reshape(n_shards, r)),
             }, r
 
@@ -69,8 +72,8 @@ def test_sharded_aggregate_pass_matches_engine_on_retailer():
             batch, r = build_batch(n_shards)
             shapes = AcdcShapes(
                 rows_per_shard=r, n_cont=f,
-                cat_tables=(("sku", 40, f),),
-                pair_hash_slots=40 * 12, pair_cols=f,
+                cat_tables=(("sku", 24, f),),
+                pair_hash_slots=24 * 8, pair_cols=f,
             )
             mesh = compat.make_mesh((n_shards, 1), ("data", "model"))
             in_specs = {k: P(("data",), *(None,) * (v.ndim - 1))
@@ -111,7 +114,7 @@ def test_sharded_aggregate_pass_matches_engine_on_retailer():
 
         # group-by table: payload col 1 = x_1 * x_0 (roll by 1+rank, tp=1)
         keys, vals = res.tables[m_sku]
-        dense = np.zeros(40)
+        dense = np.zeros(24)
         dense[np.asarray(keys["sku"])] = np.asarray(vals)
         np.testing.assert_allclose(sharded["tbl_sku"][0][:, 1], dense,
                                    rtol=5e-4, atol=1e-3)

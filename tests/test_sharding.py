@@ -27,6 +27,7 @@ def run_sub(code: str) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_moe_ep_matches_single_device():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
@@ -55,6 +56,7 @@ def test_moe_ep_matches_single_device():
     """)
 
 
+@pytest.mark.slow
 def test_tp_dense_matches_single_device():
     run_sub("""
         import jax, jax.numpy as jnp, dataclasses
@@ -82,6 +84,7 @@ def test_tp_dense_matches_single_device():
     """)
 
 
+@pytest.mark.slow
 def test_moe_tp_layout_matches_single_device():
     """grok-style layout: expert count (4) does NOT divide the model axis
     (8) -> per-expert tensor parallelism with psum-combined f-partials."""

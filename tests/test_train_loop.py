@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.data import SyntheticTokens
@@ -23,6 +24,7 @@ def _tiny():
     )
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     cfg = _tiny()
     from repro.models.model import LM
@@ -37,6 +39,7 @@ def test_loss_decreases():
     assert hist[-1][1] < hist[0][1]
 
 
+@pytest.mark.slow
 def test_restart_resumes_from_checkpoint(tmp_path):
     cfg = _tiny()
     from repro.models.model import LM
@@ -52,6 +55,7 @@ def test_restart_resumes_from_checkpoint(tmp_path):
     assert int(out2["state"].step) == 15
 
 
+@pytest.mark.slow
 def test_microbatched_step_matches_plain():
     cfg = _tiny()
     from repro.models.model import LM
