@@ -13,7 +13,6 @@ Usage:
 import argparse
 import dataclasses
 
-import jax
 
 from repro.configs import get_config
 from repro.launch import mesh as meshlib
@@ -72,8 +71,6 @@ def climb_qwen3(mesh):
     base = get_config(arch)
     r = lower_cell(arch, cell, mesh, verbose=False)
     report("baseline (EP, cap 1.25)", r)
-    import repro.models.config as mc
-
     for cf in (1.0, 2.0):
         cfg = dataclasses.replace(
             base,

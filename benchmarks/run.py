@@ -26,6 +26,7 @@ BENCHES = [
     bench_acdc.bench_sharing,
     bench_acdc.bench_session_reuse,
     bench_acdc.bench_delta_refresh,
+    bench_acdc.bench_multi_tenant,
     bench_acdc.bench_grad_compression,
     bench_kernels.bench_sigma_fused,
     bench_kernels.bench_seg_outer,

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .monomials import Entry, Monomial, Registers
+from .monomials import Monomial, Registers
 from .schema import Database, Kind, Relation, key_col
 from .variable_order import OrderInfo, reduce_database, _row_key
 

@@ -21,14 +21,14 @@ without hand-deriving dg/dtheta.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .monomials import Monomial, Workload, build_workload, signature
-from .schema import Database, Kind
+from .monomials import Monomial, Workload, build_workload
+from .schema import Database
 from .sigma import Block, ParamSpace, SigmaCSY
 from .variable_order import _row_key
 

@@ -17,8 +17,7 @@ node that share the same *group-by signature* are computed together as one
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Dict, List, Mapping, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from .schema import Database, Kind
 from .variable_order import OrderInfo

@@ -8,7 +8,7 @@ correctness oracle for the factorized engine's property tests.
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

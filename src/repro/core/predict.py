@@ -10,12 +10,11 @@ standard convention.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional
 
 import numpy as np
 
 from .glm import Model
-from .monomials import signature
 from .oracle import materialize_join
 from .schema import Database, Kind
 from .variable_order import _row_key

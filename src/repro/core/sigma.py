@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import AggregateResult
-from .monomials import Monomial, Workload, mono_vars, signature
+from .monomials import Monomial, Workload, signature
 from .schema import Database
 from .variable_order import _row_key
 

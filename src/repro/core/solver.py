@@ -15,7 +15,7 @@ Barzilai-Borwein [6]; we implement the BB1 step as an option).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

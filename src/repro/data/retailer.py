@@ -17,7 +17,7 @@ benchmark analogues.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Sequence, Tuple, Union
+from typing import Iterator, List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -240,6 +240,82 @@ def deltas(
         keep[del_idx] = False
         for a, new in (("locn", il), ("date", idt), ("sku", isk), ("units", iu)):
             cols[a] = np.concatenate([cols[a][keep], new.astype(cols[a].dtype)])
+
+
+def requests(
+    spec: Union[RetailerSpec, Database],
+    n_requests: int = 40,
+    n_tenants: int = 4,
+    fit_fraction: float = 0.3,
+    predict_rows: int = 32,
+    subscribe: bool = False,
+    lam: float = 1e-2,
+    n_features: int = 0,
+    seed: int = 0,
+):
+    """A seeded multi-tenant fit/predict request trace over the retailer
+    database — the workload ``ModelServer`` is built to serve (used by the
+    ``acdc_serve`` CLI, ``bench_acdc.bench_multi_tenant``, and tests).
+
+    Tenants are distinct ``(spec, features)`` workloads over OVERLAPPING
+    feature sets with the shared response ``units``: tenant 0 is a
+    degree-2 polynomial regression over the full sku-free feature set
+    (zip kept — ``features(include_sku=False, include_zip=True)``),
+    and the rest are linear regressions and factorization machines
+    over random subsets of it — so under bundle subsumption (DESIGN.md
+    §8) their fits can be served off tenant 0's aggregate pass
+    (cross-tenant reuse). Each yielded request is a fit with probability
+    ``fit_fraction``, else a predict over ``predict_rows`` tuples sampled
+    from the materialized join; an unfitted tenant's first predict
+    triggers the server's implicit fit, so any prefix of the trace is
+    servable. ``subscribe=True`` marks every tenant for automatic warm
+    refits after refresh drains; ``n_features > 0`` truncates the shared
+    feature pool (smaller aggregate workloads for fast tests).
+    """
+    from repro.core.oracle import materialize_join
+    from repro.serve import FitRequest, PredictRequest
+    from repro.session import (
+        FactorizationMachine,
+        LinearRegression,
+        PolynomialRegression,
+    )
+
+    db = generate(spec) if isinstance(spec, RetailerSpec) else spec
+    rng = np.random.default_rng(seed)
+    base = features(include_sku=False, include_zip=True)
+    if n_features:
+        base = base[:n_features]
+
+    tenants = [(PolynomialRegression(degree=2, lam=lam), tuple(base))]
+    for k in range(1, n_tenants):
+        lo = min(3, len(base))
+        size = (
+            int(rng.integers(lo, len(base))) if len(base) > lo else len(base)
+        )
+        chosen = set(rng.choice(len(base), size=size, replace=False).tolist())
+        feats = tuple(f for i, f in enumerate(base) if i in chosen)
+        if k % 3 == 0:
+            spec_k = FactorizationMachine(rank=4, lam=lam)
+        else:
+            spec_k = LinearRegression(lam=lam * 10 ** (k % 2))
+        tenants.append((spec_k, feats))
+
+    join = materialize_join(db)
+    n_join = len(join["units"])
+    for _ in range(n_requests):
+        spec_k, feats = tenants[int(rng.integers(0, len(tenants)))]
+        if rng.random() < fit_fraction:
+            yield FitRequest(
+                spec=spec_k, features=feats, response="units",
+                subscribe=subscribe,
+            )
+        else:
+            idx = rng.integers(0, n_join, size=predict_rows)
+            rows = {a: join[a][idx] for a in feats}
+            yield PredictRequest(
+                spec=spec_k, features=feats, response="units", rows=rows,
+                subscribe=subscribe,
+            )
 
 
 def fragment(name: str, scale: float = 1.0) -> Tuple[Database, List[str]]:

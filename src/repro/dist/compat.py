@@ -9,7 +9,7 @@ difference once so no call site branches on the jax version.
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 

@@ -20,7 +20,6 @@ file in VMEM and updates it with systolic matmuls.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

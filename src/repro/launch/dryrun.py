@@ -21,13 +21,11 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.launch import mesh as meshlib

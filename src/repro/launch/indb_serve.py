@@ -1,0 +1,125 @@
+"""``acdc_serve`` — drive the multi-tenant in-DB model server.
+
+Replays a synthetic retailer request trace (``data.retailer.requests``)
+through a ``repro.serve.ModelServer``, interleaved with base-relation
+delta batches (``data.retailer.deltas``) entering the streaming refresh
+queue — the full DESIGN.md §10 loop on one machine:
+
+    python -m repro.launch.indb_serve --n-requests 40 --n-tenants 4 \
+        --delta-every 5 --byte-budget-kb 64 [--subscribe] [--json]
+
+Every fifth request (say) a 1% insert/delete batch is enqueued as a
+``DeltaEvent``; the server drains the queue before serving the next
+fit/predict, so staleness is visible in the acks and zero at every
+serve. The final metrics snapshot shows the multi-tenant economics:
+aggregate passes vs fits served, cross-tenant bundle hits, evictions
+under the byte budget, and refresh latency.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+
+
+def acdc_serve(argv=None) -> int:
+    import argparse
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.data import retailer
+    from repro.data.retailer import RetailerSpec, generate, variable_order
+    from repro.serve import DeltaEvent, FitReply, ModelServer, snapshot
+    from repro.session import Session, SolverConfig
+
+    p = argparse.ArgumentParser(description=acdc_serve.__doc__)
+    p.add_argument("--n-requests", type=int, default=40)
+    p.add_argument("--n-tenants", type=int, default=4)
+    p.add_argument("--fit-fraction", type=float, default=0.3)
+    p.add_argument("--predict-rows", type=int, default=32)
+    p.add_argument("--delta-every", type=int, default=5,
+                   help="enqueue one delta batch every N requests (0 = off)")
+    p.add_argument("--delta-frac", type=float, default=0.01)
+    p.add_argument("--byte-budget-kb", type=int, default=0,
+                   help="bundle-cache budget in KiB (0 = unbounded)")
+    p.add_argument("--subscribe", action="store_true",
+                   help="tenants get automatic warm refits after drains")
+    p.add_argument("--scale", type=float, default=0.5)
+    p.add_argument("--max-iters", type=int, default=300)
+    p.add_argument("--tol", type=float, default=1e-9)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", action="store_true",
+                   help="dump the full metrics snapshot as JSON")
+    args = p.parse_args(argv)
+
+    db = generate(RetailerSpec(
+        n_locn=int(20 * args.scale) or 2,
+        n_zip=int(12 * args.scale) or 2,
+        n_date=int(30 * args.scale) or 2,
+        n_sku=int(40 * args.scale) or 2,
+        seed=args.seed,
+    ))
+    sess = Session(db, variable_order())
+    server = ModelServer(
+        sess,
+        byte_budget=args.byte_budget_kb * 1024 or None,
+        default_solver=SolverConfig(max_iters=args.max_iters, tol=args.tol),
+    )
+    trace = list(retailer.requests(
+        sess.db,
+        n_requests=args.n_requests,
+        n_tenants=args.n_tenants,
+        fit_fraction=args.fit_fraction,
+        predict_rows=args.predict_rows,
+        subscribe=args.subscribe,
+        seed=args.seed,
+    ))
+    dstream = retailer.deltas(
+        sess.db, n_batches=10**9, frac=args.delta_frac, seed=args.seed + 1
+    )
+
+    for i, req in enumerate(trace):
+        if args.delta_every and i and i % args.delta_every == 0:
+            ack = server.handle(DeltaEvent(next(dstream)))
+            print(f"[serve] {i:03d} delta {ack.relation} "
+                  f"pending={ack.pending_batches}/{ack.pending_rows}rows")
+        reply = server.handle(req)
+        if isinstance(reply, FitReply):
+            how = ("compiled" if reply.compiled
+                   else "cross-hit" if reply.cross_tenant else "self-hit")
+            print(f"[serve] {i:03d} fit     {reply.tenant} {how} "
+                  f"loss={reply.loss:.4f} {reply.seconds:.3f}s")
+        else:
+            print(f"[serve] {i:03d} predict {reply.tenant} "
+                  f"n={len(reply.predictions)}"
+                  f"{' implicit-fit' if reply.implicit_fit else ''}"
+                  f"{' STALE' if reply.stale else ''} {reply.seconds:.3f}s")
+
+    snap = snapshot(server)
+    if args.json:
+        print(json.dumps(snap, indent=2))
+    else:
+        srv, ses, stale = snap["server"], snap["session"], snap["staleness"]
+        print(f"[serve] done: {srv['requests']} requests, "
+              f"{srv['fits'] + srv['implicit_fits'] + srv['refresh_refits']} "
+              f"fits ({srv['refresh_refits']} refresh refits), "
+              f"{srv['predicts']} predicts, {len(snap['tenants'])} tenants")
+        print(f"[serve] sharing: {ses['aggregate_passes']} aggregate passes, "
+              f"{srv['self_hits']} self hits, "
+              f"{srv['cross_tenant_hits']} cross-tenant hits")
+        print(f"[serve] cache: {ses['bundles']} bundles "
+              f"{ses['bundle_bytes']}B / budget={ses['byte_budget']}, "
+              f"{ses['evictions']} evictions, {ses['recompiles']} recompiles")
+        print(f"[serve] refresh: {stale['applies']} applies over "
+              f"{stale['batches_enqueued']} batches "
+              f"({stale['batches_coalesced']} coalesced away, "
+              f"{stale['rows_cancelled']} rows cancelled), "
+              f"pending={stale['pending_batches']}, "
+              f"age={stale['data_age_seconds']:.3f}s, "
+              f"last_refresh={stale['refresh_seconds_last']:.3f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(acdc_serve())

@@ -19,8 +19,7 @@ inside the scan — compute/comm overlapped by XLA's async collectives).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np

@@ -27,7 +27,7 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.launch.mesh import HARDWARE
 

@@ -17,13 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import Family, ModelConfig
+from repro.models.config import ModelConfig
 from repro.models.model import LM
 
 

@@ -12,8 +12,6 @@ axis by replicating what doesn't divide.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -22,8 +22,7 @@ position-in-expert via one-hot cumsum, drop beyond capacity.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

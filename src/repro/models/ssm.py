@@ -15,7 +15,7 @@ roofline measures — see EXPERIMENTS.md §Perf for the discussion.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

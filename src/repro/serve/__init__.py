@@ -1,0 +1,45 @@
+"""repro.serve — multi-tenant in-DB model serving (DESIGN.md §10).
+
+Distinct from the LM decode engine in ``repro.launch.serve``: this
+package serves the AC/DC learning plane. ``ModelServer`` wraps one
+``repro.session.Session`` and answers typed ``FitRequest`` /
+``PredictRequest`` / ``DeltaEvent`` messages for many tenants off the
+shared bundle cache, with cost-aware bundle eviction (``cache``), a
+streaming delta-refresh daemon with coalescing and staleness metrics
+(``refresh``), and a plain-dict metrics snapshot (``metrics``). The
+driveable entrypoint is ``repro.launch.indb_serve`` (``acdc_serve``).
+"""
+
+from .cache import cache_snapshot, choose_victim, utility
+from .metrics import snapshot
+from .refresh import RefreshDaemon, RefreshStats, coalesce
+from .server import (
+    DeltaAck,
+    DeltaEvent,
+    FitReply,
+    FitRequest,
+    ModelServer,
+    PredictReply,
+    PredictRequest,
+    ServerStats,
+    Tenant,
+)
+
+__all__ = [
+    "DeltaAck",
+    "DeltaEvent",
+    "FitReply",
+    "FitRequest",
+    "ModelServer",
+    "PredictReply",
+    "PredictRequest",
+    "RefreshDaemon",
+    "RefreshStats",
+    "ServerStats",
+    "Tenant",
+    "cache_snapshot",
+    "choose_victim",
+    "coalesce",
+    "snapshot",
+    "utility",
+]

@@ -1,0 +1,81 @@
+"""Bundle admission and eviction: the cost-aware cache policy.
+
+A compiled ``AggregateBundle`` is a cache entry whose value is the
+aggregate pass it avoids re-running and whose cost is the bytes its
+monomial tables (plus cached Sigma views) keep resident. Under a session
+byte budget the policy evicts by lowest *utility* —
+
+    utility(B) = aggregate_seconds(B) / nbytes(B)
+
+seconds of aggregate work saved per resident byte — breaking ties by
+least-recent use. A pinned bundle (user pin or mid-fit refcount,
+``AggregateBundle.pin``) is never a candidate, and neither is anything in
+``protect`` (the bundle just admitted: it must not be evicted to make
+room for itself). Eviction is transparent: the session remembers the
+evicted key and the next ``compile()`` that needs it recompiles from the
+live database (``SessionStats.recompiles``), with refit parity because
+the recompiled tables equal the evicted ones by construction
+(DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Iterable, List, Optional, Sequence
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.session.bundle import AggregateBundle
+    from repro.session.session import Session
+
+
+def utility(
+    bundle: "AggregateBundle", nbytes: Optional[int] = None
+) -> float:
+    """Aggregate seconds saved per resident byte; higher = keep longer.
+    ``nbytes`` short-circuits the byte scan when the caller already
+    measured the bundle (``Session.enforce_budget``'s size snapshot)."""
+    if nbytes is None:
+        nbytes = bundle.nbytes
+    return bundle.aggregate_seconds / max(nbytes, 1)
+
+
+def choose_victim(
+    bundles: Sequence["AggregateBundle"],
+    protect: Iterable = (),
+    sizes: Optional[dict] = None,
+) -> Optional["AggregateBundle"]:
+    """The default session eviction policy (``Session.enforce_budget``).
+    ``sizes`` is an optional ``id(bundle) -> nbytes`` snapshot so ranking
+    reuses the caller's measurement instead of rescanning every bundle."""
+    shielded = set(map(id, protect))
+    candidates = [
+        b for b in bundles if not b.pinned and id(b) not in shielded
+    ]
+    if not candidates:
+        return None
+    sizes = sizes or {}
+    return min(
+        candidates,
+        key=lambda b: (utility(b, sizes.get(id(b))), b.last_used),
+    )
+
+
+def cache_snapshot(session: "Session") -> List[dict]:
+    """Plain-dict view of the bundle cache, one entry per resident bundle
+    (ordered as admitted) — consumed by ``repro.serve.metrics``."""
+    return [
+        {
+            "features": list(b.key.features),
+            "response": b.key.response,
+            "degree": b.key.degree,
+            "squares": b.key.squares,
+            "fds": [list((d, *list(ds))) for d, ds in b.key.fds],
+            "nbytes": b.nbytes,
+            "aggregate_seconds": b.aggregate_seconds,
+            "utility": utility(b),
+            "last_used": b.last_used,
+            "pinned": b.pinned,
+            "refreshes": b.refreshes,
+            "sigma_builds": b.sigma_builds,
+        }
+        for b in session.bundles
+    ]

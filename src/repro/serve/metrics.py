@@ -1,0 +1,53 @@
+"""One plain-dict snapshot of everything the server knows about itself.
+
+``snapshot(server)`` flattens the four counter planes — server (request
+mix, reuse), session (passes/hits/evictions), bundle cache (per-bundle
+bytes/utility/pin), staleness (queue depth, data age, refresh latency) —
+into JSON-serializable builtins, so an operator can ship it to any
+metrics sink without importing repro types.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+from .cache import cache_snapshot
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .server import ModelServer
+
+
+def snapshot(server: "ModelServer") -> dict:
+    sess = server.session
+    return {
+        "server": dataclasses.asdict(server.stats),
+        "tenants": {
+            t.name: {
+                "spec": t.spec.name,
+                "features": list(t.features),
+                "response": t.response,
+                "n_fds": len(t.fds),
+                "subscribed": t.subscribed,
+                "fits": t.fits,
+                "implicit_fits": t.implicit_fits,
+                "predicts": t.predicts,
+                "refresh_refits": t.refresh_refits,
+                "compiles": t.compiles,
+                "self_hits": t.self_hits,
+                "cross_hits": t.cross_hits,
+                "loss": (
+                    float(t.last_fit.loss) if t.last_fit is not None else None
+                ),
+            }
+            for t in server.tenants.values()
+        },
+        "session": {
+            **dataclasses.asdict(sess.stats),
+            "bundles": len(sess.bundles),
+            "bundle_bytes": sess.bundle_bytes(),
+            "byte_budget": sess.byte_budget,
+        },
+        "bundles": cache_snapshot(sess),
+        "staleness": server.refresh.metrics(),
+    }

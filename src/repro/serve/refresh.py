@@ -1,0 +1,259 @@
+"""The streaming refresh daemon: queued deltas, coalesced, drained between
+requests.
+
+``RefreshDaemon`` accepts ``Delta`` batches on per-relation queues and
+applies them to its ``Session`` only at ``drain()`` — the server calls
+drain before serving a fit/predict, so requests always see a fully
+refreshed session (DESIGN.md §10). Between drains the queue depth is the
+staleness the server is choosing to carry, exported as metrics: pending
+batches/rows, data-age seconds (now minus the oldest enqueue), and
+refresh-latency stats.
+
+**Coalescing.** A run of queued batches against one relation folds into a
+single equivalent batch before ``Session.apply_delta``: per-tuple net
+multiplicity is tracked across batches (canonical composite row keys, so
+float join keys compare by canonical bits exactly as the engine joins),
+an insert followed by a delete of the same tuple cancels (and vice
+versa), and same-sign duplicates — impossible in a stream that is valid
+under set semantics — are rejected. Because each batch is valid
+sequentially, net multiplicities stay in {-1, 0, +1}, so the fold is
+exact: applying the coalesced batch equals applying the raw batches in
+order (table-level and refit parity, ``tests/test_refresh.py``). Batches
+to *different* relations commute, so per-relation folding loses nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.delta import Delta, DeltaReport
+from repro.delta.delta import _rows_view
+from repro.session import Session
+
+
+def coalesce(deltas: Sequence[Delta], db=None) -> Optional[Delta]:
+    """Fold an ordered run of same-relation deltas into one equivalent
+    batch, cancelling matching insert/delete pairs.
+
+    With ``db`` (the drain path always passes it), cancellations are
+    validated against the live relation: a cancelled pair's tuple must
+    make the SEQUENTIAL application legal too — delete-then-reinsert
+    requires the tuple present, insert-then-delete requires it absent.
+    Without the check a buggy client deleting a nonexistent tuple (then
+    inserting it) would net to an empty fold and be silently absorbed,
+    where sequential application — the semantics coalescing claims to
+    preserve — raises. Net survivors are validated by ``apply_delta``."""
+    if not deltas:
+        return None
+    relation = deltas[0].relation
+    attrs: Tuple[str, ...] = ()
+    live: Optional[set] = None
+
+    def tuple_live(key) -> bool:
+        nonlocal live
+        if live is None:
+            rel = db.relations[relation]
+            live = set(_rows_view(rel.columns, attrs).tolist())
+        return key in live
+
+    # row key -> (sign, source columns, row index within the source)
+    net: Dict[object, Tuple[int, Dict[str, np.ndarray], int]] = {}
+    for d in deltas:
+        if d.relation != relation:
+            raise ValueError(
+                f"coalesce() folds one relation at a time: "
+                f"{d.relation!r} != {relation!r}"
+            )
+        # a batch's deletes apply before its inserts (set semantics allow
+        # delete-then-reinsert inside one batch — those cancel too)
+        for sign, cols in ((-1, d.deletes), (+1, d.inserts)):
+            if not cols:
+                continue
+            if not attrs:
+                attrs = tuple(sorted(cols))
+            keys = _rows_view(cols, attrs)
+            for i, k in enumerate(keys.tolist()):
+                prev = net.get(k)
+                if prev is None:
+                    net[k] = (sign, cols, i)
+                elif prev[0] == -sign:
+                    if db is not None:
+                        if sign > 0 and not tuple_live(k):
+                            raise ValueError(
+                                f"delta run deletes a tuple not present "
+                                f"in {relation} (set semantics; the later "
+                                "re-insert does not make it legal)"
+                            )
+                        if sign < 0 and tuple_live(k):
+                            raise ValueError(
+                                f"delta run inserts a tuple already "
+                                f"present in {relation} (set semantics; "
+                                "the later delete does not make it legal)"
+                            )
+                    del net[k]          # insert/delete pair cancels exactly
+                else:
+                    raise ValueError(
+                        f"two {'+inserts' if sign > 0 else '-deletes'} of one "
+                        f"tuple in a {relation} delta run — the stream "
+                        "violates set semantics"
+                    )
+
+    def gather(sign: int) -> Dict[str, np.ndarray]:
+        picks = [(c, i) for s, c, i in net.values() if s == sign]
+        if not picks:
+            return {}
+        return {
+            a: np.array(
+                [np.asarray(c[a])[i] for c, i in picks],
+                dtype=np.asarray(picks[0][0][a]).dtype,
+            )
+            for a in attrs
+        }
+
+    return Delta(relation, inserts=gather(+1), deletes=gather(-1))
+
+
+@dataclasses.dataclass
+class RefreshStats:
+    batches_enqueued: int = 0
+    rows_enqueued: int = 0          # inserts + deletes across raw batches
+    drains: int = 0                 # drain() calls (incl. empty ones)
+    applies: int = 0                # Session.apply_delta calls issued
+    batches_coalesced: int = 0      # raw batches folded away by coalescing
+    rows_cancelled: int = 0         # rows removed by insert/delete pairs
+    refresh_seconds_total: float = 0.0
+    refresh_seconds_last: float = 0.0
+    refresh_seconds_max: float = 0.0
+    failed_drains: int = 0          # drains aborted by a poisoned run
+    discarded_batches: int = 0      # batches dropped via discard()
+
+
+class RefreshDaemon:
+    """Per-relation delta queues drained into a session between requests."""
+
+    def __init__(
+        self,
+        session: Session,
+        clock: Callable[[], float] = time.monotonic,
+        on_applied: Optional[Callable[[List[DeltaReport]], None]] = None,
+    ):
+        self.session = session
+        self.clock = clock
+        self.on_applied = on_applied
+        self.stats = RefreshStats()
+        # relation -> ordered [(delta, enqueued_at)]
+        self._queues: Dict[str, List[Tuple[Delta, float]]] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, delta: Delta) -> None:
+        """Enqueue a delta; schema/active-domain checks run eagerly so a
+        malformed batch fails at submission, not out of some later
+        innocent request's drain. (Set-semantics checks against the live
+        relation still run at apply time — the relation may move under
+        the queue.)"""
+        delta.validate(self.session.db)
+        self._queues.setdefault(delta.relation, []).append(
+            (delta, self.clock())
+        )
+        self.stats.batches_enqueued += 1
+        self.stats.rows_enqueued += delta.n_inserts + delta.n_deletes
+
+    def discard(self, relation: str) -> int:
+        """Drop a relation's queued run (operator escape hatch after a
+        failed drain); returns the number of batches discarded."""
+        dropped = len(self._queues.pop(relation, []))
+        self.stats.discarded_batches += dropped
+        return dropped
+
+    # ------------------------------------------------------------------
+    # staleness metrics
+    # ------------------------------------------------------------------
+    @property
+    def pending_batches(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    @property
+    def pending_rows(self) -> int:
+        return sum(
+            d.n_inserts + d.n_deletes
+            for q in self._queues.values()
+            for d, _ in q
+        )
+
+    def data_age_seconds(self) -> float:
+        """Seconds the oldest queued delta has been waiting (0 = fresh)."""
+        oldest = [t for q in self._queues.values() for _, t in q]
+        return self.clock() - min(oldest) if oldest else 0.0
+
+    def metrics(self) -> dict:
+        return {
+            "pending_batches": self.pending_batches,
+            "pending_rows": self.pending_rows,
+            "pending_by_relation": {
+                r: len(q) for r, q in self._queues.items() if q
+            },
+            "data_age_seconds": self.data_age_seconds(),
+            **dataclasses.asdict(self.stats),
+        }
+
+    # ------------------------------------------------------------------
+    def drain(self) -> List[DeltaReport]:
+        """Coalesce and apply everything pending; returns one report per
+        relation actually patched. Subscribed-tenant refits fire through
+        ``on_applied`` (the server wires this to warm ``fit`` calls).
+
+        A relation's queue is removed only AFTER its fold applies: if a
+        poisoned run raises (set-semantics conflict against the live
+        relation, same-sign duplicates), every queued delta for that
+        relation stays in place — nothing is silently lost, the error
+        surfaces to the caller, and an operator can ``discard`` the run.
+        Other relations' folds commute, so whatever applied before the
+        failure is consistent."""
+        self.stats.drains += 1
+        reports: List[DeltaReport] = []
+        try:
+            for relation in list(self._queues):
+                entries = self._queues[relation]
+                if not entries:
+                    del self._queues[relation]
+                    continue
+                raw = [d for d, _ in entries]
+                try:
+                    folded = coalesce(raw, db=self.session.db)
+                    applied = None
+                    if folded.n_inserts or folded.n_deletes:
+                        t0 = self.clock()
+                        applied = self.session.apply_delta(folded)
+                        dt = self.clock() - t0
+                except Exception:
+                    self.stats.failed_drains += 1
+                    raise               # queue intact — retry or discard
+                del self._queues[relation]
+                self.stats.batches_coalesced += len(raw) - 1
+                raw_rows = sum(d.n_inserts + d.n_deletes for d in raw)
+                self.stats.rows_cancelled += raw_rows - (
+                    folded.n_inserts + folded.n_deletes
+                )
+                if applied is None:
+                    continue            # the run cancelled itself entirely
+                reports.append(applied)
+                self.stats.applies += 1
+                self.stats.refresh_seconds_total += dt
+                self.stats.refresh_seconds_last = dt
+                self.stats.refresh_seconds_max = max(
+                    self.stats.refresh_seconds_max, dt
+                )
+        finally:
+            # the finale runs even when a later relation's fold raised:
+            # whatever DID apply must still enforce the byte budget
+            # (patched tables can grow; mid-fit bundles are pinned, so
+            # enforcement is safe) and trigger subscribed refits
+            if reports:
+                self.session.enforce_budget()
+                if self.on_applied is not None:
+                    self.on_applied(reports)
+        return reports

@@ -1,0 +1,351 @@
+"""``ModelServer`` — multi-tenant serving of in-DB models off one session.
+
+The deployment shape "Fast Factorized Learning" argues for (PAPERS.md):
+the models live where the data lives, and a long-lived process answers
+fit/predict requests for many workloads. One ``Session`` holds the
+database, the memoized factorization, and the bundle cache; the server
+adds on top of it
+
+  * typed request messages — ``FitRequest`` / ``PredictRequest`` /
+    ``DeltaEvent`` — with equally typed replies;
+  * a tenant registry keyed by ``(features, response, fds, spec)``: a
+    tenant is one model workload, and every request addresses its tenant
+    structurally (no out-of-band handles to lose);
+  * cross-tenant reuse accounting: when a tenant's fit is served from a
+    bundle some *other* tenant paid the aggregate pass for (bundle
+    subsumption, DESIGN.md §8), that is the multi-tenant economics
+    working — counted per tenant and server-wide;
+  * freshness: queued deltas (``DeltaEvent`` -> ``RefreshDaemon``) are
+    drained before any fit/predict is served, so a request never reads a
+    stale Sigma (the bundle-level invalidation guard of DESIGN.md §9
+    makes the drain sufficient); subscribed tenants get warm refits as
+    part of the drain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.predict import predict_join
+from repro.delta import Delta, DeltaReport
+from repro.session import (
+    FitResult,
+    ModelSpec,
+    Session,
+    SolverConfig,
+)
+from repro.session.bundle import fd_key
+
+from .refresh import RefreshDaemon
+
+# structural tenant identity: (features, response, fd key, spec)
+TenantKey = Tuple[Tuple[str, ...], str, Tuple, ModelSpec]
+
+
+# ----------------------------------------------------------------------
+# messages
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FitRequest:
+    """Train (or re-train) one tenant's model."""
+
+    spec: ModelSpec
+    features: Tuple[str, ...]
+    response: str
+    fds: Tuple = ()
+    solver: Optional[SolverConfig] = None   # None -> server default
+    warm: bool = True        # warm-start from the tenant's previous fit
+    subscribe: bool = False  # refit automatically after refresh drains
+    pin: bool = False        # pin the tenant's bundle against eviction
+
+
+@dataclasses.dataclass(eq=False)
+class PredictRequest:
+    """Score encoded tuples with a tenant's latest model. A tenant that
+    has never been fitted is fitted implicitly with the server's default
+    solver (counted in ``ServerStats.implicit_fits``)."""
+
+    spec: ModelSpec
+    features: Tuple[str, ...]
+    response: str
+    rows: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    fds: Tuple = ()
+    subscribe: bool = False  # applies when this predict implicitly fits
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaEvent:
+    """A base-relation change entering the refresh queue. Not applied
+    until the daemon drains — the queue depth is visible staleness."""
+
+    delta: Delta
+
+
+@dataclasses.dataclass
+class FitReply:
+    tenant: str
+    result: FitResult
+    compiled: bool            # this fit paid an aggregate pass
+    cross_tenant: bool        # served off a bundle another tenant compiled
+    seconds: float
+
+    @property
+    def loss(self) -> float:
+        return self.result.loss
+
+
+@dataclasses.dataclass
+class PredictReply:
+    tenant: str
+    predictions: np.ndarray
+    implicit_fit: bool
+    stale: bool               # params predate the latest applied delta
+    seconds: float
+
+
+@dataclasses.dataclass
+class DeltaAck:
+    relation: str
+    pending_batches: int
+    pending_rows: int
+
+
+# ----------------------------------------------------------------------
+# tenants
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One (features, response, fds, spec) workload and its serve state."""
+
+    name: str
+    key: TenantKey
+    spec: ModelSpec
+    features: Tuple[str, ...]
+    response: str
+    fds: Tuple
+    solver: Optional[SolverConfig] = None
+    subscribed: bool = False
+    # pruned copy of the latest FitResult (bundle/sigma/plan stripped):
+    # predicts need model+params, warm refits need model+params — holding
+    # the full result would keep an EVICTED bundle's tables resident and
+    # defeat the byte budget
+    last_fit: Optional[FitResult] = None
+    fitted_at_delta: int = -1      # session.stats.deltas_applied at fit time
+    pinned_bundle: object = None
+    fits: int = 0
+    implicit_fits: int = 0
+    predicts: int = 0
+    refresh_refits: int = 0
+    compiles: int = 0              # aggregate passes this tenant paid for
+    self_hits: int = 0             # fits served off a bundle it compiled
+    cross_hits: int = 0            # fits served off another tenant's bundle
+
+
+@dataclasses.dataclass
+class ServerStats:
+    requests: int = 0
+    fits: int = 0
+    predicts: int = 0
+    implicit_fits: int = 0
+    refresh_refits: int = 0
+    deltas_enqueued: int = 0
+    compiles: int = 0
+    self_hits: int = 0
+    cross_tenant_hits: int = 0
+    stale_predicts: int = 0
+
+
+class ModelServer:
+    """A long-lived server over one Session (DESIGN.md §10)."""
+
+    def __init__(
+        self,
+        session: Session,
+        byte_budget: Optional[int] = None,
+        default_solver: Optional[SolverConfig] = None,
+        clock=time.monotonic,
+    ):
+        self.session = session
+        if byte_budget is not None:
+            session.byte_budget = byte_budget
+        self.default_solver = default_solver or SolverConfig()
+        self.clock = clock
+        self.stats = ServerStats()
+        self.tenants: Dict[TenantKey, Tenant] = {}
+        self.refresh = RefreshDaemon(
+            session, clock=clock, on_applied=self._refit_subscribed
+        )
+        # compiled-bundle ownership, for the cross-tenant reuse stats:
+        # BundleKey -> tenant name (unique among live bundles; a recompile
+        # after eviction re-assigns ownership to whoever pays the pass)
+        self._owners: Dict[object, str] = {}
+
+    # ------------------------------------------------------------------
+    def handle(self, request):
+        """Dispatch one typed request; the single serving entry point."""
+        self.stats.requests += 1
+        if isinstance(request, DeltaEvent):
+            return self._enqueue(request)
+        # freshness guard: nothing is served over a pending queue
+        self.refresh.drain()
+        if isinstance(request, FitRequest):
+            return self._fit(request)
+        if isinstance(request, PredictRequest):
+            return self._predict(request)
+        raise TypeError(f"unknown request type {type(request).__name__}")
+
+    def serve(self, requests: Sequence) -> List:
+        """Replay a request trace (the CLI/bench entry)."""
+        return [self.handle(r) for r in requests]
+
+    # ------------------------------------------------------------------
+    def _tenant(self, req) -> Tenant:
+        key: TenantKey = (
+            tuple(req.features), req.response, fd_key(req.fds), req.spec,
+        )
+        t = self.tenants.get(key)
+        if t is None:
+            t = Tenant(
+                name=f"t{len(self.tenants)}",
+                key=key,
+                spec=req.spec,
+                features=tuple(req.features),
+                response=req.response,
+                fds=tuple(req.fds),
+            )
+            self.tenants[key] = t
+        return t
+
+    # ------------------------------------------------------------------
+    def _enqueue(self, event: DeltaEvent) -> DeltaAck:
+        self.refresh.submit(event.delta)
+        self.stats.deltas_enqueued += 1
+        return DeltaAck(
+            relation=event.delta.relation,
+            pending_batches=self.refresh.pending_batches,
+            pending_rows=self.refresh.pending_rows,
+        )
+
+    # ------------------------------------------------------------------
+    def _fit(self, req: FitRequest) -> FitReply:
+        tenant = self._tenant(req)
+        if req.solver is not None:
+            tenant.solver = req.solver
+        if req.subscribe:
+            tenant.subscribed = True
+        warm = tenant.last_fit if req.warm else None
+        reply = self._fit_tenant(tenant, warm_from=warm)
+        tenant.fits += 1
+        self.stats.fits += 1
+        if req.pin:
+            self._pin_tenant_bundle(tenant, reply.result.bundle)
+        return reply
+
+    def _fit_tenant(self, tenant: Tenant, warm_from=None) -> FitReply:
+        """The shared fit path (explicit requests and refresh refits)."""
+        sess = self.session
+        passes_before = sess.stats.aggregate_passes
+        t0 = self.clock()
+        result = sess.fit(
+            tenant.spec,
+            tenant.features,
+            tenant.response,
+            fds=tenant.fds,
+            solver=tenant.solver or self.default_solver,
+            warm_from=warm_from,
+        )
+        dt = self.clock() - t0
+        compiled = sess.stats.aggregate_passes > passes_before
+        bkey = result.bundle.key
+        if compiled:
+            self._owners[bkey] = tenant.name
+            tenant.compiles += 1
+            self.stats.compiles += 1
+            cross = False
+        else:
+            owner = self._owners.setdefault(bkey, tenant.name)
+            cross = owner != tenant.name
+            if cross:
+                tenant.cross_hits += 1
+                self.stats.cross_tenant_hits += 1
+            else:
+                tenant.self_hits += 1
+                self.stats.self_hits += 1
+        tenant.last_fit = dataclasses.replace(
+            result, bundle=None, sigma=None, plan=None
+        )
+        tenant.fitted_at_delta = sess.stats.deltas_applied
+        if tenant.pinned_bundle is not None:
+            self._pin_tenant_bundle(tenant, result.bundle)
+        return FitReply(
+            tenant=tenant.name,
+            result=result,
+            compiled=compiled,
+            cross_tenant=cross,
+            seconds=dt,
+        )
+
+    def _pin_tenant_bundle(self, tenant: Tenant, bundle) -> None:
+        if tenant.pinned_bundle is bundle:
+            return
+        if tenant.pinned_bundle is not None:
+            tenant.pinned_bundle.unpin()
+        bundle.pin()
+        tenant.pinned_bundle = bundle
+
+    # ------------------------------------------------------------------
+    def _predict(self, req: PredictRequest) -> PredictReply:
+        missing = [a for a in req.features if a not in req.rows]
+        if missing:
+            # reject BEFORE the implicit fit — an unservable request must
+            # not burn an aggregate pass or register a tenant
+            raise ValueError(
+                f"predict rows missing feature columns {missing}"
+            )
+        tenant = self._tenant(req)
+        if req.subscribe:
+            tenant.subscribed = True
+        implicit = tenant.last_fit is None
+        if implicit:
+            self._fit_tenant(tenant)
+            tenant.implicit_fits += 1
+            self.stats.implicit_fits += 1
+        stale = tenant.fitted_at_delta < self.session.stats.deltas_applied
+        if stale:
+            self.stats.stale_predicts += 1
+        t0 = self.clock()
+        preds = predict_join(
+            tenant.last_fit.model,
+            tenant.last_fit.params,
+            self.session.db,
+            join=req.rows,
+        )
+        dt = self.clock() - t0
+        tenant.predicts += 1
+        self.stats.predicts += 1
+        return PredictReply(
+            tenant=tenant.name,
+            predictions=preds,
+            implicit_fit=implicit,
+            stale=stale,
+            seconds=dt,
+        )
+
+    # ------------------------------------------------------------------
+    def _refit_subscribed(self, reports: List[DeltaReport]) -> None:
+        """Refresh-drain hook: warm refits for every subscribed tenant
+        that has a model to refresh (warm_from = its pre-delta optimum)."""
+        for tenant in self.tenants.values():
+            if not tenant.subscribed or tenant.last_fit is None:
+                continue
+            self._fit_tenant(tenant, warm_from=tenant.last_fit)
+            tenant.refresh_refits += 1
+            self.stats.refresh_refits += 1

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
 from repro.core import fd as fdmod
 from repro.core.engine import AggregateResult, EnginePlan
 from repro.core.monomials import Workload
@@ -64,6 +66,8 @@ class AggregateBundle:
     fds: Tuple[FD, ...] = ()
     sigma_builds: int = 0
     refreshes: int = 0                 # delta patches merged into .result
+    last_used: float = 0.0             # monotonic timestamp of last serve
+    pins: int = 0                      # pin refcount — see pin()/unpin()
     _sigmas: Dict[WorkloadKey, SigmaCSY] = dataclasses.field(
         default_factory=dict, repr=False
     )
@@ -73,6 +77,50 @@ class AggregateBundle:
     _penalties: Dict[WorkloadKey, object] = dataclasses.field(
         default_factory=dict, repr=False
     )
+
+    # -- admission/eviction state (repro.serve.cache, DESIGN.md §10) -----
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes: the monomial tables plus every cached view
+        assembled from them (plain and sharded Sigma COOs). Arrays are
+        deduplicated by identity — the engine installs ONE shared key
+        dict per (node, signature) group into every monomial of the
+        group, so summing per monomial would overstate by the group
+        size. The plan's index arrays are excluded — they alias the
+        session's factorized node tables, which outlive any one bundle."""
+        seen: set = set()
+        total = 0
+
+        def add(arr) -> None:
+            nonlocal total
+            if id(arr) not in seen:
+                seen.add(id(arr))
+                total += int(np.asarray(arr).nbytes)
+
+        for keys, vals in self.result.tables.values():
+            add(vals)
+            for k in keys.values():
+                add(k)
+        for cache in (self._sigmas, self._sharded):
+            for sig in cache.values():
+                for a in (sig.rows, sig.cols, sig.vals, sig.c):
+                    add(a)
+        return total
+
+    @property
+    def pinned(self) -> bool:
+        return self.pins > 0
+
+    def pin(self) -> None:
+        """Protect this bundle from eviction (refcounted): ``Session.fit``
+        pins for the duration of the solve, and a server can pin a hot
+        tenant's bundle for as long as it subscribes."""
+        self.pins += 1
+
+    def unpin(self) -> None:
+        if self.pins <= 0:
+            raise ValueError("unpin() without a matching pin()")
+        self.pins -= 1
 
     def invalidate_views(self) -> None:
         """Drop every cached view derived from ``result`` — called after a

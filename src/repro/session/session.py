@@ -64,6 +64,9 @@ class SessionStats:
     deltas_applied: int = 0        # apply_delta calls
     bundle_refreshes: int = 0      # bundles patched in place by deltas
     delta_noops: int = 0           # (delta, bundle) pairs with empty delta join
+    evictions: int = 0             # bundles dropped under byte pressure
+    bytes_evicted: int = 0
+    recompiles: int = 0            # misses whose key was previously evicted
 
 
 @dataclasses.dataclass
@@ -89,13 +92,26 @@ class FitResult:
 class Session:
     """A registered database + memoized analysis + compiled bundles."""
 
-    def __init__(self, db: Database, order: VarNode):
+    def __init__(
+        self,
+        db: Database,
+        order: VarNode,
+        byte_budget: Optional[int] = None,
+        eviction_policy=None,
+    ):
         self.db = db
         self.order = order
         self.info: OrderInfo = analyze(order, db)
         self._fz = None
         self.bundles: List[AggregateBundle] = []
         self.stats = SessionStats()
+        # bundle admission/eviction (repro.serve.cache, DESIGN.md §10):
+        # byte_budget caps sum(b.nbytes for b in bundles); eviction_policy
+        # is a callable (bundles, protect) -> victim bundle or None —
+        # default is the cost-aware utility rule in repro.serve.cache.
+        self.byte_budget = byte_budget
+        self.eviction_policy = eviction_policy
+        self._evicted_keys: set = set()
 
     # ------------------------------------------------------------------
     def _factorized(self):
@@ -127,6 +143,7 @@ class Session:
         for b in self.bundles:
             if b.key.fds == fk and b.covers(wl):
                 self.stats.bundle_hits += 1
+                b.last_used = time.monotonic()
                 return b
         self.stats.bundle_misses += 1
 
@@ -155,8 +172,74 @@ class Session:
             aggregate_seconds=agg_s,
             fds=fds,
         )
+        bundle.last_used = time.monotonic()
+        if bundle.key in self._evicted_keys:
+            # transparent recompile of a previously evicted bundle: same
+            # data -> same tables, so refit parity is structural
+            self._evicted_keys.discard(bundle.key)
+            self.stats.recompiles += 1
         self.bundles.append(bundle)
+        self.enforce_budget(protect=(bundle,))
         return bundle
+
+    # ------------------------------------------------------------------
+    def bundle_bytes(self) -> int:
+        """Resident bytes across every compiled bundle (tables + views)."""
+        return sum(b.nbytes for b in self.bundles)
+
+    def evict(
+        self, bundle: AggregateBundle, nbytes: Optional[int] = None
+    ) -> None:
+        """Drop a compiled bundle from the cache. The next compile() that
+        needs its workload recompiles transparently (counted in
+        ``stats.recompiles``); pinned or mid-fit bundles are refused.
+        ``nbytes`` lets ``enforce_budget`` reuse its size snapshot
+        instead of re-walking the bundle for the eviction stats."""
+        if bundle.pinned:
+            raise ValueError("refusing to evict a pinned (or mid-fit) bundle")
+        self.bundles.remove(bundle)
+        self.stats.evictions += 1
+        self.stats.bytes_evicted += (
+            bundle.nbytes if nbytes is None else nbytes
+        )
+        self._evicted_keys.add(bundle.key)
+
+    def enforce_budget(self, protect=()) -> List[AggregateBundle]:
+        """Evict lowest-utility bundles until under ``byte_budget`` (no-op
+        without a budget). ``protect`` shields bundles mid-admission — the
+        one just compiled must not be evicted to make room for itself.
+        Bundle sizes are measured ONCE per call and the snapshot is
+        reused for both the running total and the default policy's
+        utility ranking (nbytes walks every table and cached view)."""
+        if self.byte_budget is None:
+            return []
+        sizes = {id(b): b.nbytes for b in self.bundles}
+        total = sum(sizes.values())
+        if total <= self.byte_budget:
+            return []
+        if self.eviction_policy is not None:
+            def pick(protect):
+                return self.eviction_policy(self.bundles, protect=protect)
+        else:
+            # runtime import: repro.serve layers above repro.session
+            from repro.serve.cache import choose_victim
+
+            def pick(protect):
+                return choose_victim(
+                    self.bundles, protect=protect, sizes=sizes
+                )
+        evicted: List[AggregateBundle] = []
+        while total > self.byte_budget:
+            victim = pick(protect)
+            if victim is None:
+                break
+            size = sizes.pop(id(victim), None)
+            if size is None:
+                size = victim.nbytes
+            total -= size
+            self.evict(victim, nbytes=size)
+            evicted.append(victim)
+        return evicted
 
     # ------------------------------------------------------------------
     def apply_delta(self, delta: Delta) -> DeltaReport:
@@ -256,7 +339,19 @@ class Session:
         model, sig, wl, bundle = self.materialize(
             spec, features, response, fds, bundle
         )
+        # a mid-fit bundle must survive any budget enforcement triggered
+        # while the solver runs (e.g. a refresh drain growing the tables)
+        bundle.pin()
+        try:
+            return self._fit_pinned(
+                spec, model, sig, wl, bundle, solver, warm_from
+            )
+        finally:
+            bundle.unpin()
 
+    def _fit_pinned(
+        self, spec, model, sig, wl, bundle, solver, warm_from
+    ) -> FitResult:
         grad_fn = carry0 = None
         if solver.grad_compression is not None:
             # the compressed combine IS the sharded execution: it lays the

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced configs, one forward/train step on
 CPU, output shapes + finite values; prefill + decode step."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

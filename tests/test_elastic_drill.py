@@ -5,7 +5,6 @@ uninterrupted reference run."""
 
 import dataclasses
 
-import jax
 import numpy as np
 
 from repro.configs import get_config

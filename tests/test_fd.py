@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fd import build_fd_penalty, dense_penalty_matrix, recover_determined
+from repro.core.fd import dense_penalty_matrix, recover_determined
 from repro.core.glm import workload_for
 from repro.core.schema import make_database
 from repro.core.sigma import build_param_space

@@ -1,0 +1,270 @@
+"""ModelServer + bundle cache (DESIGN.md §10): tenant registry and
+cross-tenant reuse stats, cost-aware eviction under a byte budget with
+transparent recompile parity, pin/mid-fit protection, and the retailer
+request-trace generator end to end."""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro.session.session as session_mod
+from repro.core.schema import make_database
+from repro.core.solver import closed_form_ridge
+from repro.core.variable_order import vo
+from repro.data import retailer
+from repro.data.retailer import RetailerSpec, generate, variable_order
+from repro.serve import (
+    FitReply,
+    FitRequest,
+    ModelServer,
+    PredictReply,
+    PredictRequest,
+    choose_victim,
+    snapshot,
+    utility,
+)
+from repro.session import (
+    LinearRegression,
+    PolynomialRegression,
+    Session,
+    SolverConfig,
+)
+
+LAM = 1.0   # well-conditioned: BGD lands within 1e-6 of the optimum fast
+ORDER = vo("A", vo("B", vo("C"), vo("G", vo("D"))), vo("E"))
+CFG = SolverConfig(max_iters=4000, tol=1e-14, policy="single")
+
+
+def make_db(seed=1, nR=80, nS=50, nT=40):
+    rng = np.random.default_rng(seed)
+    bvals = rng.integers(0, 10, nS)
+    gmap = rng.integers(0, 3, 10)
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 8, nR), "B": rng.integers(0, 10, nR),
+                  "C": rng.normal(size=nR).round(2)},
+            "S": {"B": bvals, "G": gmap[bvals], "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 8, nT), "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B", "G"],
+        fds=[("B", ["G"])],
+    )
+
+
+def make_server(db=None, **kw):
+    kw.setdefault("default_solver", CFG)
+    return ModelServer(Session(db or make_db(), ORDER), **kw)
+
+
+# ----------------------------------------------------------------------
+# tenants + cross-tenant reuse
+# ----------------------------------------------------------------------
+
+
+def test_tenant_registry_and_cross_tenant_reuse():
+    server = make_server()
+    pr2 = FitRequest(spec=PolynomialRegression(degree=2, lam=LAM),
+                     features=("A", "B", "C", "D"), response="E")
+    lr = FitRequest(spec=LinearRegression(lam=LAM),
+                    features=("A", "C"), response="E")
+
+    r1 = server.handle(pr2)
+    assert r1.compiled and not r1.cross_tenant
+    # lr ⊆ pr2: the second tenant's fit rides the first tenant's pass
+    r2 = server.handle(lr)
+    assert not r2.compiled and r2.cross_tenant
+    # same tenant again: still a hit, but not a cross one (owner unchanged)
+    r3 = server.handle(pr2)
+    assert not r3.compiled and not r3.cross_tenant
+
+    assert len(server.tenants) == 2
+    assert server.session.stats.aggregate_passes == 1
+    assert server.stats.cross_tenant_hits == 1
+    assert server.stats.self_hits == 1
+    t_pr2, t_lr = server.tenants.values()
+    assert t_pr2.compiles == 1 and t_pr2.self_hits == 1
+    assert t_lr.cross_hits == 1 and t_lr.compiles == 0
+
+
+def test_predict_implicitly_fits_unknown_tenant():
+    server = make_server()
+    rows = {"A": np.arange(3), "C": np.array([0.5, -0.5, 0.0])}
+    reply = server.handle(PredictRequest(
+        spec=LinearRegression(lam=LAM), features=("A", "C"), response="E",
+        rows=rows,
+    ))
+    assert isinstance(reply, PredictReply)
+    assert reply.implicit_fit and reply.predictions.shape == (3,)
+    assert server.stats.implicit_fits == 1
+    # second predict reuses the fitted model
+    reply2 = server.handle(PredictRequest(
+        spec=LinearRegression(lam=LAM), features=("A", "C"), response="E",
+        rows=rows,
+    ))
+    assert not reply2.implicit_fit
+    np.testing.assert_allclose(reply2.predictions, reply.predictions)
+
+
+def test_predict_rejects_missing_feature_columns():
+    server = make_server()
+    with pytest.raises(ValueError, match="missing feature columns"):
+        server.handle(PredictRequest(
+            spec=LinearRegression(lam=LAM), features=("A", "C"),
+            response="E", rows={"A": np.arange(3)},
+        ))
+    # rejected BEFORE the implicit fit: no pass burned, no tenant created
+    assert server.session.stats.aggregate_passes == 0
+    assert server.stats.implicit_fits == 0 and not server.tenants
+
+
+def test_tenant_retained_fit_is_pruned():
+    """The tenant's stored fit must not keep (possibly evicted) bundle
+    tables or Sigma views resident; the reply carries the full result."""
+    server = make_server()
+    r = server.handle(FitRequest(spec=LinearRegression(lam=LAM),
+                                 features=("A", "C"), response="E"))
+    assert r.result.bundle is not None and r.result.sigma is not None
+    tenant = next(iter(server.tenants.values()))
+    assert tenant.last_fit.bundle is None
+    assert tenant.last_fit.sigma is None and tenant.last_fit.plan is None
+    # and the pruned copy still warm-starts the next fit
+    r2 = server.handle(FitRequest(spec=LinearRegression(lam=LAM),
+                                  features=("A", "C"), response="E"))
+    assert abs(r2.loss - r.loss) < 1e-9
+
+
+# ----------------------------------------------------------------------
+# admission/eviction
+# ----------------------------------------------------------------------
+
+
+def test_nbytes_counts_tables_and_cached_views():
+    sess = Session(make_db(), ORDER)
+    b = sess.compile(["A", "C"], "E", degree=2)
+    base = b.nbytes
+    assert base > 0
+    wl = LinearRegression(lam=LAM).workload(sess.db, ["A", "C"], "E")
+    b.sigma_for(sess.db, wl)
+    assert b.nbytes > base            # cached Sigma view is accounted
+    b.invalidate_views()
+    assert b.nbytes == base
+
+
+def test_eviction_under_byte_pressure_with_recompile_parity():
+    """Acceptance: evict under byte pressure, re-request the tenant,
+    assert the recompile is visible in stats and the refitted params
+    match the pre-eviction fit to <=1e-6."""
+    server = make_server()
+    sess = server.session
+    fa = FitRequest(spec=LinearRegression(lam=LAM),
+                    features=("A", "B", "C", "D"), response="E")
+    ra = server.handle(fa)
+    theta_a = np.asarray(ra.result.params)
+    sigma_a = ra.result.sigma
+
+    # budget fits one bundle, not two: the next tenant's compile (a
+    # different response, so no subsumption) must evict tenant A's bundle
+    sess.byte_budget = int(sess.bundle_bytes() * 1.05)
+    rb = server.handle(FitRequest(spec=LinearRegression(lam=LAM),
+                                  features=("A", "B", "C"), response="D"))
+    assert rb.compiled
+    assert sess.stats.evictions >= 1
+    assert all(b.key.response == "D" for b in sess.bundles)
+
+    ra2 = server.handle(fa)
+    assert ra2.compiled                      # transparent recompile...
+    assert sess.stats.recompiles == 1        # ...and the stats say so
+    assert np.max(np.abs(np.asarray(ra2.result.params) - theta_a)) <= 1e-6
+    # the recompiled tables are bit-identical: closed-form optima agree
+    t1 = closed_form_ridge(sigma_a.dense(), np.asarray(sigma_a.c), LAM)
+    t2 = closed_form_ridge(ra2.result.sigma.dense(),
+                           np.asarray(ra2.result.sigma.c), LAM)
+    np.testing.assert_allclose(t1, t2, atol=1e-12)
+
+
+def test_pinned_bundle_is_never_the_victim():
+    server = make_server()
+    sess = server.session
+    ra = server.handle(FitRequest(spec=LinearRegression(lam=LAM),
+                                  features=("A", "B", "C", "D"), response="E",
+                                  pin=True))
+    pinned = ra.result.bundle
+    assert pinned.pinned
+    sess.byte_budget = int(sess.bundle_bytes() * 1.05)
+    server.handle(FitRequest(spec=LinearRegression(lam=LAM),
+                             features=("A", "B", "C"), response="D"))
+    # pressure was real (something had to give) but the pin held
+    assert pinned in sess.bundles
+    with pytest.raises(ValueError, match="pinned"):
+        sess.evict(pinned)
+
+
+def test_choose_victim_prefers_lowest_utility():
+    sess = Session(make_db(), ORDER)
+    b1 = sess.compile(["A", "B", "C", "D"], "E", degree=2)
+    b2 = sess.compile(["A", "C"], "D", degree=1)
+    assert {utility(b1), utility(b2)} == {
+        b.aggregate_seconds / max(b.nbytes, 1) for b in (b1, b2)
+    }
+    low = min((b1, b2), key=utility)
+    assert choose_victim([b1, b2]) is low
+    assert choose_victim([b1, b2], protect=(low,)) is not low
+    b1.pin(), b2.pin()
+    assert choose_victim([b1, b2]) is None
+
+
+def test_mid_fit_bundle_is_pinned(monkeypatch):
+    """The solver must run with its bundle pinned, so budget enforcement
+    triggered mid-fit (e.g. by a refresh drain) cannot evict it."""
+    sess = Session(make_db(), ORDER)
+    seen = []
+    real_bgd = session_mod.bgd
+
+    def spy_bgd(*a, **kw):
+        seen.append([b.pinned for b in sess.bundles])
+        return real_bgd(*a, **kw)
+
+    monkeypatch.setattr(session_mod, "bgd", spy_bgd)
+    sess.fit(LinearRegression(lam=LAM), ["A", "C"], "E",
+             solver=SolverConfig(max_iters=20))
+    assert seen == [[True]]
+    assert not sess.bundles[0].pinned        # unpinned after the fit
+
+
+# ----------------------------------------------------------------------
+# the retailer trace, end to end
+# ----------------------------------------------------------------------
+
+
+def test_retailer_request_trace_end_to_end():
+    db = generate(RetailerSpec(n_locn=6, n_zip=4, n_date=8, n_sku=10, seed=0))
+    server = ModelServer(
+        Session(db, variable_order()),
+        default_solver=SolverConfig(max_iters=150, policy="single"),
+    )
+    trace = list(retailer.requests(
+        server.session.db, n_requests=12, n_tenants=3, fit_fraction=0.4,
+        predict_rows=8, n_features=6, seed=5,
+    ))
+    assert any(isinstance(r, FitRequest) for r in trace)
+    assert any(isinstance(r, PredictRequest) for r in trace)
+    # deterministic under the seed
+    trace2 = list(retailer.requests(
+        server.session.db, n_requests=12, n_tenants=3, fit_fraction=0.4,
+        predict_rows=8, n_features=6, seed=5,
+    ))
+    assert [type(r).__name__ for r in trace] == [
+        type(r).__name__ for r in trace2
+    ]
+
+    replies = server.serve(trace)
+    assert len(replies) == 12
+    for r in replies:
+        assert isinstance(r, (FitReply, PredictReply))
+    total_fits = (server.stats.fits + server.stats.implicit_fits)
+    # multi-tenant economics: many fits, few passes
+    assert total_fits > server.session.stats.aggregate_passes
+    assert server.stats.cross_tenant_hits >= 1
+    json.dumps(snapshot(server))             # snapshot is plain data

@@ -1,6 +1,5 @@
 """MoE: dropping dispatch vs exact dense reference; shared experts; aux."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

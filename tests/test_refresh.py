@@ -1,0 +1,341 @@
+"""Streaming refresh daemon (DESIGN.md §10): coalescing must be exact
+(applying the folded batch == applying the raw batches in order, with
+insert/delete cancellation), staleness metrics must drain to zero, and a
+predict served mid-stream must read post-delta state, never a stale
+Sigma."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.schema import make_database
+from repro.core.variable_order import vo
+from repro.data import retailer
+from repro.data.retailer import RetailerSpec, generate, variable_order
+from repro.delta import Delta
+from repro.serve import DeltaEvent, FitRequest, ModelServer, PredictRequest
+from repro.serve.refresh import RefreshDaemon, coalesce
+from repro.session import LinearRegression, Session, SolverConfig
+
+LAM = 0.1
+ORDER = vo("A", vo("B", vo("C"), vo("G", vo("D"))), vo("E"))
+FEATS = ["A", "B", "C", "D"]
+
+
+def make_db(seed=1, nR=80, nS=50, nT=40):
+    rng = np.random.default_rng(seed)
+    bvals = rng.integers(0, 10, nS)
+    gmap = rng.integers(0, 3, 10)
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 8, nR), "B": rng.integers(0, 10, nR),
+                  "C": rng.normal(size=nR).round(2)},
+            "S": {"B": bvals, "G": gmap[bvals], "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 8, nT), "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B", "G"],
+        fds=[("B", ["G"])],
+    )
+
+
+def _row(rel, i):
+    return {a: rel.columns[a][i : i + 1] for a in rel.attrs}
+
+
+def _fresh_rows(rng, n, adom_a, adom_b):
+    return {
+        "A": rng.integers(0, adom_a, n).astype(np.int32),
+        "B": rng.integers(0, adom_b, n).astype(np.int32),
+        "C": rng.normal(size=n).round(6),
+    }
+
+
+def _tables_close(b1, b2, tol=1e-9):
+    """Two bundles' monomial tables agree as (key combo -> value) maps,
+    treating absent combos as zero mass."""
+    assert set(b1.result.tables) == set(b2.result.tables)
+    for m in b1.result.tables:
+        k1, v1 = b1.result.tables[m]
+        k2, v2 = b2.result.tables[m]
+        sig = tuple(k1)
+        assert sig == tuple(k2), m
+
+        def as_map(keys, vals):
+            if not sig:
+                return {(): float(np.asarray(vals)[0])}
+            comp = np.stack(
+                [np.asarray(keys[v]).astype(np.int64) for v in sig], axis=1
+            )
+            return {
+                tuple(r): x
+                for r, x in zip(comp.tolist(), np.asarray(vals).tolist())
+            }
+
+        d1, d2 = as_map(k1, v1), as_map(k2, v2)
+        for key in set(d1) | set(d2):
+            a, b = d1.get(key, 0.0), d2.get(key, 0.0)
+            assert abs(a - b) < tol * max(1.0, abs(b)), (m, key, a, b)
+
+
+# ----------------------------------------------------------------------
+# coalescing
+# ----------------------------------------------------------------------
+
+
+def test_coalesce_cancels_insert_delete_pairs():
+    db = make_db()
+    rel = db.relations["R"]
+    rng = np.random.default_rng(3)
+    fresh = _fresh_rows(rng, 2, db.adom["A"], db.adom["B"])
+    one = {a: fresh[a][:1] for a in fresh}
+    # batch1 inserts two fresh tuples and deletes a live row;
+    # batch2 deletes the first fresh tuple (cancels) and re-inserts the
+    # deleted live row (cancels) -> net: ONE insert, zero deletes
+    d1 = Delta("R", inserts=fresh, deletes=_row(rel, 0))
+    d2 = Delta("R", inserts=_row(rel, 0), deletes=one)
+    folded = coalesce([d1, d2])
+    assert folded.n_inserts == 1 and folded.n_deletes == 0
+    assert float(folded.inserts["C"][0]) == float(fresh["C"][1])
+
+
+def test_coalesce_rejects_same_sign_duplicates():
+    db = make_db()
+    rng = np.random.default_rng(4)
+    fresh = _fresh_rows(rng, 1, db.adom["A"], db.adom["B"])
+    with pytest.raises(ValueError, match="set semantics"):
+        coalesce([Delta("R", inserts=fresh), Delta("R", inserts=fresh)])
+    with pytest.raises(ValueError, match="one relation"):
+        coalesce([Delta("R", inserts=fresh), Delta("S", inserts=fresh)])
+
+
+def test_coalesced_batch_equals_sequential_application():
+    """Acceptance: monomial-table AND refit parity between (a) applying
+    raw batches in order and (b) applying their coalesced fold, on a
+    stream containing insert/delete cancellation pairs."""
+    db = make_db()
+    rng = np.random.default_rng(5)
+    rel = db.relations["R"]
+    fresh = _fresh_rows(rng, 3, db.adom["A"], db.adom["B"])
+    first = {a: fresh[a][:1] for a in fresh}
+    batches = [
+        Delta("R", inserts=fresh, deletes=_row(rel, 2)),
+        # cancels one pending insert, re-inserts the deleted row
+        Delta("R", inserts=_row(rel, 2), deletes=first),
+        # plain follow-up: delete another live row
+        Delta("R", deletes=_row(rel, 7)),
+    ]
+
+    cfg = SolverConfig(max_iters=1500, tol=1e-12, policy="single")
+    sess_seq = Session(copy.deepcopy(db), ORDER)
+    sess_seq.compile(FEATS, "E", degree=2)
+    for d in batches:
+        sess_seq.apply_delta(copy.deepcopy(d))
+
+    sess_fold = Session(copy.deepcopy(db), ORDER)
+    sess_fold.compile(FEATS, "E", degree=2)
+    folded = coalesce(batches)
+    assert folded.n_inserts + folded.n_deletes < sum(
+        d.n_inserts + d.n_deletes for d in batches
+    )
+    sess_fold.apply_delta(folded)
+
+    _tables_close(sess_seq.bundles[0], sess_fold.bundles[0])
+    r1 = sess_seq.fit(LinearRegression(lam=LAM), FEATS, "E", solver=cfg)
+    r2 = sess_fold.fit(LinearRegression(lam=LAM), FEATS, "E", solver=cfg)
+    assert abs(r1.loss - r2.loss) < 1e-9
+    assert r1.sigma.count == r2.sigma.count
+
+
+def test_full_cancellation_is_a_noop_drain():
+    """A run that cancels itself entirely never reaches apply_delta."""
+    db = make_db()
+    rng = np.random.default_rng(6)
+    fresh = _fresh_rows(rng, 2, db.adom["A"], db.adom["B"])
+    sess = Session(db, ORDER)
+    sess.compile(FEATS, "E", degree=2)
+    daemon = RefreshDaemon(sess)
+    daemon.submit(Delta("R", inserts=fresh))
+    daemon.submit(Delta("R", deletes=fresh))
+    assert daemon.pending_batches == 2
+    reports = daemon.drain()
+    assert reports == []
+    assert daemon.stats.applies == 0
+    assert daemon.stats.rows_cancelled == 4
+    assert sess.stats.deltas_applied == 0
+    assert sess.db.relations["R"].num_rows == 80
+
+
+def test_coalesce_with_db_rejects_invalid_cancelled_pairs():
+    """A cancellation must be legal sequentially too: deleting an absent
+    tuple (later re-inserted) or inserting a present one (later deleted)
+    nets to empty but is still a set-semantics violation — with the live
+    db in hand, coalesce raises exactly where sequential application
+    would; the drain path always passes the db."""
+    db = make_db()
+    rel = db.relations["R"]
+    ghost = {"A": np.array([0]), "B": np.array([0]), "C": np.array([999.0])}
+    run = [Delta("R", deletes=ghost), Delta("R", inserts=ghost)]
+    folded = coalesce(run)              # pure fold: nets to empty
+    assert folded.n_inserts == folded.n_deletes == 0
+    with pytest.raises(ValueError, match="not present"):
+        coalesce(run, db=db)
+    live = _row(rel, 0)
+    with pytest.raises(ValueError, match="already present"):
+        coalesce([Delta("R", inserts=live), Delta("R", deletes=live)], db=db)
+    # legal cancellations still fold: delete-then-reinsert of a live row
+    ok = coalesce([Delta("R", deletes=live), Delta("R", inserts=live)], db=db)
+    assert ok.n_inserts == ok.n_deletes == 0
+
+    sess = Session(db, ORDER)
+    sess.compile(FEATS, "E", degree=2)
+    daemon = RefreshDaemon(sess)
+    for d in run:
+        daemon.submit(d)
+    with pytest.raises(ValueError, match="not present"):
+        daemon.drain()
+    assert daemon.pending_batches == 2  # the poisoned run is kept
+    assert daemon.stats.failed_drains == 1
+
+
+def test_submit_validates_eagerly_and_failed_drain_keeps_queue():
+    """A malformed batch fails at submit; a set-semantics conflict fails
+    at drain WITHOUT losing the queued run — discard() is the explicit
+    escape hatch."""
+    db = make_db()
+    sess = Session(db, ORDER)
+    sess.compile(FEATS, "E", degree=2)
+    daemon = RefreshDaemon(sess)
+    with pytest.raises(ValueError, match="active domain"):
+        daemon.submit(Delta("R", inserts={
+            "A": np.array([db.adom["A"]]), "B": np.array([0]),
+            "C": np.array([0.5])}))
+    assert daemon.pending_batches == 0
+
+    # schema-valid but deletes a tuple that is not present: fails at apply
+    daemon.submit(Delta("R", deletes={
+        "A": np.array([0]), "B": np.array([0]), "C": np.array([999.0])}))
+    with pytest.raises(ValueError, match="not present"):
+        daemon.drain()
+    assert daemon.pending_batches == 1          # nothing silently lost
+    assert daemon.stats.failed_drains == 1
+    assert daemon.discard("R") == 1
+    assert daemon.pending_batches == 0
+    assert daemon.drain() == []                 # clean again
+
+
+# ----------------------------------------------------------------------
+# staleness metrics
+# ----------------------------------------------------------------------
+
+
+def test_staleness_metrics_drain_to_zero():
+    db = make_db()
+    rng = np.random.default_rng(7)
+    sess = Session(db, ORDER)
+    sess.compile(FEATS, "E", degree=2)
+
+    t = [100.0]
+    daemon = RefreshDaemon(sess, clock=lambda: t[0])
+    daemon.submit(Delta("R", inserts=_fresh_rows(rng, 2, 8, 10)))
+    t[0] += 3.0
+    daemon.submit(Delta("R", inserts=_fresh_rows(rng, 2, 8, 10)))
+    t[0] += 2.0
+
+    m = daemon.metrics()
+    assert m["pending_batches"] == 2 and m["pending_rows"] == 4
+    assert m["data_age_seconds"] == pytest.approx(5.0)
+
+    reports = daemon.drain()
+    assert len(reports) == 1 and reports[0].n_inserts == 4
+    m = daemon.metrics()
+    assert m["pending_batches"] == 0 and m["pending_rows"] == 0
+    assert m["data_age_seconds"] == 0.0
+    assert m["applies"] == 1 and m["batches_coalesced"] == 1
+    assert sess.stats.deltas_applied == 1
+
+
+# ----------------------------------------------------------------------
+# freshness through the server
+# ----------------------------------------------------------------------
+
+
+def test_predict_mid_stream_reads_post_delta_state():
+    """Acceptance: with deltas pending in the queue, a predict drains
+    first and a subscribed tenant's reply matches a from-scratch session
+    on the post-delta database — no stale Sigma, no stale params."""
+    db = make_db()
+    rng = np.random.default_rng(8)
+    cfg = SolverConfig(max_iters=1500, tol=1e-12, policy="single")
+    server = ModelServer(Session(db, ORDER), default_solver=cfg)
+    spec = LinearRegression(lam=LAM)
+    server.handle(FitRequest(spec=spec, features=tuple(FEATS), response="E",
+                             subscribe=True))
+
+    for _ in range(2):
+        ack = server.handle(DeltaEvent(
+            Delta("R", inserts=_fresh_rows(rng, 3, 8, 10))
+        ))
+    assert ack.pending_batches == 2
+
+    rows = {"A": np.arange(4), "B": np.arange(4), "C": np.array([0.1, -0.2, 0.3, 0.0]),
+            "D": np.array([0.5, 0.5, -0.5, 0.0])}
+    reply = server.handle(PredictRequest(spec=spec, features=tuple(FEATS),
+                                         response="E", rows=dict(rows)))
+    assert not reply.stale
+    assert server.refresh.pending_batches == 0
+    assert server.stats.refresh_refits == 1
+
+    # from-scratch reference on the (post-delta) database
+    scratch = Session(copy.deepcopy(server.session.db), ORDER)
+    ref = scratch.fit(spec, FEATS, "E", solver=cfg)
+    from repro.core.predict import predict_join
+    expect = predict_join(ref.model, ref.params, scratch.db, join=rows)
+    np.testing.assert_allclose(reply.predictions, expect, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# delta on an FD-hosting relation (ROADMAP "Delta-aware FD maps" risk)
+# ----------------------------------------------------------------------
+
+
+def test_apply_delta_on_fd_relation_refit_parity():
+    """Regression: a delta to Item (which hosts sku -> category/
+    subcategory/categoryCluster) must leave the lazily rebuilt FD penalty
+    consistent — warm refit off the patched bundle matches a from-scratch
+    session on the mutated database to <=1e-6."""
+    db = generate(RetailerSpec(n_locn=6, n_zip=4, n_date=8, n_sku=10, seed=3))
+    feats = retailer.features(include_sku=True, include_zip=False)
+    cfg = SolverConfig(max_iters=4000, tol=1e-13, policy="single")
+    spec = LinearRegression(lam=0.1)
+
+    sess = Session(db, variable_order())
+    r0 = sess.fit(spec, feats, "units", fds=db.fds, solver=cfg)
+
+    # re-price three skus and move one to another (existing) subcategory:
+    # delete the rows, insert mutated versions of the same skus
+    item = sess.db.relations["Item"]
+    idx = np.array([0, 4, 7])
+    deletes = {a: item.columns[a][idx] for a in item.attrs}
+    inserts = {a: v.copy() for a, v in deletes.items()}
+    inserts["price"] = inserts["price"] + 1.5
+    inserts["subcategory"] = np.roll(inserts["subcategory"], 1)
+    rep = sess.apply_delta(Delta("Item", inserts=inserts, deletes=deletes))
+    assert rep.bundles_refreshed == 1
+
+    warm = sess.fit(spec, feats, "units", fds=sess.db.fds, solver=cfg,
+                    warm_from=r0)
+    scratch_db = copy.deepcopy(sess.db)
+    scratch = Session(scratch_db, variable_order()).fit(
+        spec, feats, "units", fds=scratch_db.fds, solver=cfg
+    )
+    assert sess.stats.aggregate_passes == 1   # patched, never recompiled
+    assert warm.sigma.count == scratch.sigma.count
+    # the patched Sigma is exactly the from-scratch one (table parity)...
+    np.testing.assert_allclose(
+        warm.sigma.dense(), scratch.sigma.dense(), atol=1e-12
+    )
+    # ...and the refit through the rebuilt FD penalty agrees
+    assert warm.model.fd_penalty is not None
+    assert abs(warm.loss - scratch.loss) <= 1e-6

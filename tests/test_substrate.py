@@ -1,7 +1,6 @@
 """Substrate: optimizers, checkpointing, data determinism, dist utilities."""
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,7 @@ import pytest
 
 from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.ckpt.checkpoint import latest_step
-from repro.data import SyntheticTokens, fragment, generate, RetailerSpec
+from repro.data import SyntheticTokens, generate, RetailerSpec
 from repro.dist import (
     HeartbeatMonitor,
     compress_with_feedback,
