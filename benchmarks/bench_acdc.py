@@ -216,6 +216,56 @@ def bench_delta_refresh(emit) -> None:
     )
 
 
+def bench_executor_cache(emit) -> None:
+    """The persistent compiled-executor plane (DESIGN.md §11): the first
+    aggregate pass of a plan shape pays the XLA trace; every structurally
+    identical pass after it — a fresh session over the same schema, a
+    recompile after eviction, a refit — re-enters the cached executable.
+    Reported: cold (trace) vs warm (cached) pass latency and the plane's
+    counters, plus the same split for the solver compile cache."""
+    from repro.core.executor import global_plane
+    from repro.core.solver import solver_cache_stats
+
+    db, feats = fragment("v1", SCALE)
+    plane, scache = global_plane(), solver_cache_stats()
+    # self-contained cold numbers whatever ran before in this process
+    plane.clear()
+    cfg = SolverConfig(max_iters=300, tol=1e-9, policy="single")
+    spec = PolynomialRegression(degree=2, lam=1e-2)
+
+    t0 = time.perf_counter()
+    sess = Session(db, variable_order())
+    sess.compile(feats, "units", degree=2)
+    cold_s = time.perf_counter() - t0
+    cold_traces = sess.stats.executor_traces
+
+    t0 = time.perf_counter()
+    sess2 = Session(db, variable_order())
+    sess2.compile(feats, "units", degree=2)
+    warm_s = time.perf_counter() - t0
+    assert sess2.stats.executor_traces == 0, "same-shape plan re-traced"
+
+    t0 = time.perf_counter()
+    fit1 = sess2.fit(spec, feats, "units", solver=cfg)
+    fit1_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sess2.fit(spec, feats, "units", solver=cfg)
+    fit2_s = time.perf_counter() - t0
+    assert fit1.loss is not None
+
+    emit(
+        "executor-cache/v1-pr2", warm_s * 1e6,
+        f"cold_pass_s={cold_s:.3f};warm_pass_s={warm_s:.3f};"
+        f"pass_speedup={cold_s / max(warm_s, 1e-9):.1f}x;"
+        f"cold_traces={cold_traces};warm_traces={sess2.stats.executor_traces};"
+        f"first_fit_s={fit1_s:.3f};warm_fit_s={fit2_s:.4f};"
+        f"fit_speedup={fit1_s / max(fit2_s, 1e-9):.1f}x;"
+        f"plane_hits={plane.stats.hits};plane_misses={plane.stats.misses};"
+        f"plane_trace_s={plane.stats.trace_seconds:.3f};"
+        f"solver_hits={scache.hits};solver_trace_s={scache.trace_seconds:.3f}",
+    )
+
+
 def bench_multi_tenant(emit) -> None:
     """ROADMAP "Multi-tenant serving": replay a mixed fit/predict trace
     through one ModelServer (shared bundle cache, one Session) vs the
@@ -268,6 +318,43 @@ def bench_multi_tenant(emit) -> None:
         f"cached_rps={len(trace) / cached_s:.2f};"
         f"cold_rps={len(trace) / cold_s:.2f};"
         f"speedup={cold_s / max(cached_s, 1e-9):.1f}x",
+    )
+
+    # retrace vs steady state (ROADMAP "Solver compile cache"): the first
+    # fit of a tenant pays the executor + BGD-driver traces; every
+    # repeated fit of the SAME tenant must re-enter both compile caches
+    # with zero new traces. Reported separately so the >=5x multi-tenant
+    # bar above is not flattered (or hidden) by the retrace floor.
+    from repro.core.executor import global_plane
+    from repro.core.solver import solver_cache_stats
+
+    fresh = ModelServer(Session(db, variable_order()), default_solver=cfg)
+    fit_req = next(r for r in trace if isinstance(r, FitRequest))
+    plane, scache = global_plane(), solver_cache_stats()
+    traces0 = (plane.stats.traces, scache.traces)
+    t0 = time.perf_counter()
+    fresh.handle(fit_req)
+    first_s = time.perf_counter() - t0
+    traces_first = (plane.stats.traces - traces0[0],
+                    scache.traces - traces0[1])
+    n_warm = 5
+    t0 = time.perf_counter()
+    for _ in range(n_warm):
+        fresh.handle(fit_req)
+    warm_s = (time.perf_counter() - t0) / n_warm
+    traces_warm = (plane.stats.traces - traces0[0] - traces_first[0],
+                   scache.traces - traces0[1] - traces_first[1])
+    sess_stats = fresh.session.stats
+    emit(
+        "multi-tenant/retrace", warm_s * 1e6,
+        f"first_fit_s={first_s:.3f};warm_fit_s={warm_s:.4f};"
+        f"speedup={first_s / max(warm_s, 1e-9):.1f}x;"
+        f"executor_traces_first={traces_first[0]};"
+        f"solver_traces_first={traces_first[1]};"
+        f"executor_traces_warm={traces_warm[0]};"
+        f"solver_traces_warm={traces_warm[1]};"
+        f"solver_hits={sess_stats.solver_hits};"
+        f"trace_s={sess_stats.executor_trace_seconds + sess_stats.solver_trace_seconds:.3f}",
     )
 
     # staleness under a delta stream: queue 4 batches, serve one predict

@@ -4,10 +4,19 @@ Prints ``name,us_per_call,derived`` CSV. The AC/DC benches reproduce the
 structure of Table 1 (compression, LR/PR2/FaMa × v1..v4, FD variants,
 materialize/one-hot baseline, shared-computation factor) at laptop scale;
 the kernel benches quantify what the Pallas schedules buy.
+
+``--json PATH`` additionally emits machine-readable results — bench name
+→ {us_per_call, derived k=v pairs parsed to numbers where possible} — so
+the perf trajectory is tracked per PR (CI keeps ``BENCH_<n>.json``
+artifacts comparable across runs). ``--smoke`` runs a fast subset
+(v1-only fragments, the cache/kernel benches) sized for a CI job.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import re
 import sys
 import traceback
 
@@ -26,6 +35,7 @@ BENCHES = [
     bench_acdc.bench_sharing,
     bench_acdc.bench_session_reuse,
     bench_acdc.bench_delta_refresh,
+    bench_acdc.bench_executor_cache,
     bench_acdc.bench_multi_tenant,
     bench_acdc.bench_grad_compression,
     bench_kernels.bench_sigma_fused,
@@ -33,21 +43,71 @@ BENCHES = [
     bench_kernels.bench_swa_vs_full,
 ]
 
+# CI-sized subset: one fragment, the compile-cache and session paths that
+# gate the perf acceptance bars, and one kernel bench.
+SMOKE_BENCHES = [
+    bench_acdc.bench_compression,
+    bench_acdc.bench_session_reuse,
+    bench_acdc.bench_executor_cache,
+    bench_kernels.bench_seg_outer,
+]
 
-def main() -> None:
+
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` pairs with numeric-looking values parsed to floats
+    (trailing x/%/s units stripped), everything else kept verbatim."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        m = re.fullmatch(r"(-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)[x%s]?", v)
+        out[k] = float(m.group(1)) if m else v
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="write machine-readable results (bench -> seconds/speedup)",
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="fast CI subset: v1-only fragments, cache + kernel benches",
+    )
+    args = ap.parse_args(argv)
+
+    benches = SMOKE_BENCHES if args.smoke else BENCHES
+    if args.smoke:
+        bench_acdc.FRAGMENTS = ["v1"]
+
     print("name,us_per_call,derived")
+    records: dict = {}
 
     def emit(name: str, us: float, derived: str = "") -> None:
         print(f"{name},{us:.1f},{derived}", flush=True)
+        records[name] = {
+            "us_per_call": round(us, 1),
+            "derived": _parse_derived(derived),
+        }
 
-    failures = 0
-    for bench in BENCHES:
+    failures = []
+    for bench in benches:
         try:
             bench(emit)
         except Exception:  # noqa: BLE001
-            failures += 1
+            failures.append(bench.__name__)
             print(f"{bench.__name__},FAILED,", flush=True)
             traceback.print_exc()
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(
+                {"benches": records, "failed": failures, "smoke": args.smoke},
+                fh, indent=2, sort_keys=True,
+            )
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

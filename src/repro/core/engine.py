@@ -393,7 +393,13 @@ def _lambda_matrix(node: NodeTable, max_p: int) -> np.ndarray:
 
 def make_executor(plan: EnginePlan, dtype=jnp.float64):
     """Build (jitted_fn, lams) so the numeric pass can be re-run/timed
-    independently of planning and compilation."""
+    independently of planning and compilation.
+
+    LEGACY: this builds a throwaway jit closed over the plan's index
+    arrays — a fresh XLA trace per plan. ``execute`` now routes through
+    the persistent compiled plane in ``core.executor`` (shape-keyed
+    process-wide cache, Pallas kernel dispatch); this stays only for
+    benchmarks that time an isolated single-plan trace."""
     regs, fz = plan.registers, plan.fz
 
     lams = {
@@ -431,6 +437,29 @@ def make_executor(plan: EnginePlan, dtype=jnp.float64):
     return run, lams
 
 
+def _segment_rows_numpy(
+    vals: np.ndarray, out_id: np.ndarray, n_out: int
+) -> np.ndarray:
+    """Row-wise segment sum: sort + ``np.add.reduceat`` instead of
+    ``np.add.at`` (the buffered scatter is notoriously slow — it loops
+    per element; reduceat runs one contiguous pass per segment). The
+    delta path (``serve.refresh.RefreshDaemon`` rides it on every drain)
+    calls this for every plan signature."""
+    out = np.zeros((n_out, vals.shape[1]), dtype=np.float64)
+    if len(out_id) == 0:
+        return out
+    if np.all(out_id[1:] >= out_id[:-1]):
+        ids, ordered = out_id, vals
+    else:
+        order = np.argsort(out_id, kind="stable")
+        ids, ordered = out_id[order], vals[order]
+    starts = np.concatenate(
+        [[0], np.flatnonzero(ids[1:] != ids[:-1]) + 1]
+    )
+    out[ids[starts]] = np.add.reduceat(ordered, starts, axis=0)
+    return out
+
+
 def _run_numpy(plan: EnginePlan) -> Dict[Sig, np.ndarray]:
     """Pure-numpy mirror of the jitted executor. Same dataflow, no jit —
     the delta path runs it on delta-reduced node tables, where the data is
@@ -453,23 +482,34 @@ def _run_numpy(plan: EnginePlan) -> Dict[Sig, np.ndarray]:
                     vals = vals * cmat[gath][:, ccols][sp.src_row]
                 else:
                     vals = vals * cmat[gath][:, ccols]
-            out = np.zeros((sp.n_out, vals.shape[1]), dtype=np.float64)
-            np.add.at(out, sp.out_id, vals)
-            payloads[var][sig] = out
+            payloads[var][sig] = _segment_rows_numpy(
+                vals, sp.out_id, sp.n_out
+            )
     return payloads[regs.root]
 
 
-def execute(plan: EnginePlan, dtype=jnp.float64, backend: str = "jax") -> AggregateResult:
+def execute(
+    plan: EnginePlan,
+    dtype=jnp.float64,
+    backend: str = "jax",
+    kernels=None,
+) -> AggregateResult:
     """Run the aggregate pass. Index plans are numpy; numeric work is jax,
-    wrapped in one jit so XLA fuses the gather/product/segment chains (the
-    analogue of the paper's compiled aggregate updates). ``backend="numpy"``
-    skips jit for small (delta) passes."""
+    compiled ONCE per plan *shape* by the persistent executor plane
+    (``core.executor``): a structurally identical plan — an evicted bundle
+    recompiling, a tenant refitting, a post-delta re-execution — reuses
+    the cached executable with zero re-tracing. ``backend="numpy"`` skips
+    jit for small (delta) passes; ``kernels`` is an optional
+    ``executor.KernelPolicy`` steering the Pallas dispatch."""
     regs = plan.registers
     if backend == "numpy":
         root_payloads = _run_numpy(plan)
     else:
-        run, lams = make_executor(plan, dtype)
-        root_payloads = run(lams)
+        from .executor import global_plane
+
+        root_payloads = global_plane().execute(
+            plan, dtype=dtype, policy=kernels
+        )
 
     tables: Dict[Monomial, Tuple[Dict[str, np.ndarray], jnp.ndarray]] = {}
     root = regs.root
@@ -631,8 +671,9 @@ def merge_results(
                     for s, p in live
                 ]
             )
-            out = np.zeros(len(uniq), dtype=np.float64)
-            np.add.at(out, inv, vals)
+            out = np.bincount(
+                inv, weights=vals, minlength=len(uniq)
+            ).astype(np.float64)
             tables[m] = (keys, out)
 
     return AggregateResult(tables=tables, count=float(tables[()][1][0]))

@@ -1,0 +1,469 @@
+"""Persistent compiled-executor plane (DESIGN.md §11).
+
+``engine.make_executor`` builds a throwaway ``@jax.jit`` closure per plan:
+every ``execute`` re-traces the whole bottom-up pass even when the plan is
+structurally identical to one already compiled — recompiling an evicted
+bundle, refitting a tenant, re-executing after a delta drain all pay the
+trace again. AC/DC's economics come from *compiling the shared aggregate
+pass once and re-running it cheaply* (paper §4; LMFAO's layered engine and
+the sparse-tensor formulation of Abo Khamis et al. make the same point:
+the win is a reusable compiled program over shape-stable aggregate
+batches). This module is that compiled program, made persistent:
+
+  * **Structural signature** — a plan is keyed by its anonymized dataflow
+    shape: per (node, group-by signature) step the entry count, the
+    expansion/output sizes bucketed to the next power of two, the child
+    topology, and the chosen kernel path. Variable *names* are erased
+    (node indices in bottom-up order), so two workloads over different
+    schemas with the same shape share one executable.
+  * **Process-wide LRU** — ``ExecutorPlane`` caches the jitted runner per
+    signature. All index arrays (gathers, segment ids, entry powers) are
+    *arguments*, not closure constants, padded to their bucket, so a
+    same-signature plan hits the cache with zero re-tracing. Hit/miss/
+    trace-seconds counters surface through ``Session.stats`` and
+    ``serve.metrics.snapshot``.
+  * **Pallas kernel dispatch** — per step, a size/platform heuristic
+    (``KernelPolicy``) routes the gather→product→segment-sum chain through
+    ``kernels.seg_outer.segment_feature_sum`` (sorted segment ids), and a
+    scalar-output step whose entries factor into ≤4 degree-1 base columns
+    — the degree-2 continuous block of Sigma, whose aggregates are
+    degree-≤4 moments — through ``kernels.sigma_fused.sigma_moments``.
+    Fallback is ``jax.ops.segment_sum``; lambda tables and index buffers
+    are donated on accelerator backends so the bottom-up pass stops
+    round-tripping intermediates through HBM.
+
+Padding is safe by construction: padded expansion rows carry the segment
+id ``n_out_padded`` (out-of-range scatter indices are dropped), padded
+lambda rows are zero and only reachable from padded expansion rows, and
+the moments path multiplies every base column by a real-row mask so pad
+rows contribute nothing to the Gram.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import EnginePlan, SigPlan, _lambda_matrix
+from .schema import Kind
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n — the padding grain of the compile cache."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+# ----------------------------------------------------------------------
+# Kernel dispatch policy
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """When to route a step through the Pallas kernels.
+
+    ``mode``: ``"auto"`` enables kernels only where they are compiled
+    natively (TPU); ``"force"`` enables them everywhere (interpret mode
+    off-TPU — for parity tests and benches); ``"off"`` always uses
+    ``jax.ops.segment_sum``. ``min_rows`` gates on expansion size: below
+    it the fused launch overhead loses to XLA's fused scatter.
+    """
+
+    mode: str = "auto"              # "auto" | "force" | "off"
+    min_rows: int = 8192
+    max_base: int = 12              # moments path: base-column cap (f^4 out)
+    block_rows: int = 256
+    interpret: Optional[bool] = None  # None -> interpret iff not on TPU
+    use_seg_outer: bool = True
+    use_moments: bool = True
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        from repro.kernels.seg_outer.ops import default_interpret
+
+        return default_interpret()
+
+    def kernels_enabled(self) -> bool:
+        if self.mode == "off":
+            return False
+        if self.mode == "force":
+            return True
+        return jax.default_backend() == "tpu"
+
+    def admits(self, n_rows: int) -> bool:
+        return self.mode == "force" or n_rows >= self.min_rows
+
+
+DEFAULT_POLICY = KernelPolicy()
+
+
+# ----------------------------------------------------------------------
+# Step metadata: the static (hashable) half of one (node, sig) computation
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Step:
+    node: int                          # index into the bottom-up order
+    sig: Tuple[int, ...]               # group-by vars as node indices
+    n_entries: int
+    n_exp: int                         # padded
+    n_out: int                         # padded
+    children: Tuple[Tuple[int, Tuple[int, ...]], ...]  # (node, sub-sig)
+    path: str                          # "segment" | "seg_outer" | "moments"
+    has_self: bool = False             # moments: node value is a base column
+    child_base: Tuple[int, ...] = ()   # moments: #base columns per child
+    n_base: int = 0                    # moments: total base columns f
+
+
+def _moments_factors(
+    sp: SigPlan, kids: List[str], continuous: bool
+) -> Optional[Tuple[bool, Dict[str, np.ndarray], np.ndarray, np.ndarray]]:
+    """Factor every entry of a scalar-output step into ≤4 degree-1 base
+    columns: ``p0`` copies of the node's own value column plus one gathered
+    column per child. Returns (has_self, per-child distinct column arrays,
+    row idx, col idx) into the ``sigma_moments`` Gram, or None when some
+    entry does not factor (a child column already carries a degree-2
+    subtree aggregate that cannot be split at this node)."""
+    p0 = np.asarray(sp.p0, dtype=np.int64)
+    if p0.max(initial=0) > 0 and not continuous:
+        return None
+    if (p0 + len(kids)).max(initial=0) > 4:
+        return None
+    has_self = bool(p0.max(initial=0) > 0)
+    base_of: Dict[Tuple[str, int], int] = {}
+    child_cols: Dict[str, List[int]] = {c: [] for c in kids}
+    nxt = 1 + int(has_self)            # 0 = mask column, 1 = self (if any)
+    for c in kids:
+        ccols = sp.child_col[c][0]
+        for j in np.unique(ccols):
+            base_of[(c, int(j))] = nxt
+            child_cols[c].append(int(j))
+            nxt += 1
+    f = nxt
+    E = len(sp.entry_cols)
+    rows = np.zeros(E, dtype=np.int32)
+    cols = np.zeros(E, dtype=np.int32)
+    for k in range(E):
+        factors: List[int] = [1] * int(p0[k]) if has_self else []
+        for c in kids:
+            factors.append(base_of[(c, int(sp.child_col[c][0][k]))])
+        factors += [0] * (4 - len(factors))      # pad with the mask column
+        rows[k] = factors[0] * f + factors[1]
+        cols[k] = factors[2] * f + factors[3]
+    return has_self, {c: np.asarray(v, np.int32) for c, v in child_cols.items()}, rows, cols
+
+
+def _choose_path(
+    sp: SigPlan,
+    kids: List[str],
+    continuous: bool,
+    policy: KernelPolicy,
+) -> Tuple[str, Optional[tuple]]:
+    """Pick the execution path for one step (host-side, part of the key)."""
+    if not policy.kernels_enabled() or not policy.admits(sp.n_exp):
+        return "segment", None
+    if policy.use_moments and sp.n_out == 1 and not sp.sig:
+        fac = _moments_factors(sp, kids, continuous)
+        if fac is not None and (1 + int(fac[0]) + sum(
+            len(v) for v in fac[1].values()
+        )) <= policy.max_base:
+            return "moments", fac
+    if policy.use_seg_outer and sp.n_exp > 0:
+        out_id = np.asarray(sp.out_id)
+        if np.all(out_id[1:] >= out_id[:-1]):   # kernel needs sorted ids
+            return "seg_outer", None
+    return "segment", None
+
+
+# ----------------------------------------------------------------------
+# Plan -> (signature, lambda tables, per-step buffers)
+# ----------------------------------------------------------------------
+
+
+def _pad1(a: np.ndarray, n: int, fill) -> np.ndarray:
+    out = np.full((n,), fill, dtype=a.dtype)
+    out[: len(a)] = a
+    return out
+
+
+def plan_signature(plan: EnginePlan, dtype=jnp.float64,
+                   policy: KernelPolicy = DEFAULT_POLICY):
+    """The structural cache key alone (no buffers) — cheap enough for
+    observability hooks (``serve.cache.cache_snapshot``)."""
+    sig, _, _, _ = _prepare(plan, dtype, policy, buffers=False)
+    return sig
+
+
+def _prepare(plan: EnginePlan, dtype, policy: KernelPolicy,
+             buffers: bool = True):
+    regs, fz = plan.registers, plan.fz
+    order = plan.order
+    vidx = {v: i for i, v in enumerate(order)}
+
+    lam_shapes: List[Tuple[int, int]] = []
+    lams: List[jnp.ndarray] = []
+    for v in order:
+        node = fz.nodes[v]
+        width = (regs.max_power[v] + 1
+                 if node.kind is Kind.CONTINUOUS else 1)
+        rows_p = _bucket(node.n_rows)
+        lam_shapes.append((rows_p, width))
+        if buffers:
+            lam = _lambda_matrix(node, regs.max_power[v])
+            padded = np.zeros((rows_p, lam.shape[1]), dtype=np.float64)
+            padded[: lam.shape[0]] = lam
+            lams.append(jnp.asarray(padded, dtype=dtype))
+
+    steps: List[_Step] = []
+    bufs: List[dict] = []
+    root_meta: List[Tuple[Tuple[str, ...], int]] = []
+    fused = moments = 0
+    for var in order:
+        node = fz.nodes[var]
+        continuous = node.kind is Kind.CONTINUOUS
+        for s in sorted(plan.node_sigs[var]):
+            sp = plan.node_sigs[var][s]
+            kids = list(sp.child_col.keys())
+            path, fac = _choose_path(sp, kids, continuous, policy)
+            n_exp_p = _bucket(sp.n_exp)
+            n_out_p = _bucket(sp.n_out)
+            children = tuple(
+                (vidx[c], tuple(vidx[u] for u in sp.child_col[c][1]))
+                for c in kids
+            )
+            if path == "moments":
+                moments += 1
+                has_self, child_cols, mrows, mcols = fac
+                step = _Step(
+                    node=vidx[var], sig=tuple(vidx[u] for u in s),
+                    n_entries=len(sp.entry_cols), n_exp=n_exp_p,
+                    n_out=n_out_p, children=children, path=path,
+                    has_self=has_self,
+                    child_base=tuple(len(child_cols[c]) for c in kids),
+                    n_base=1 + int(has_self)
+                    + sum(len(v) for v in child_cols.values()),
+                )
+            else:
+                if path == "seg_outer":
+                    fused += 1
+                step = _Step(
+                    node=vidx[var], sig=tuple(vidx[u] for u in s),
+                    n_entries=len(sp.entry_cols), n_exp=n_exp_p,
+                    n_out=n_out_p, children=children, path=path,
+                )
+            steps.append(step)
+            if var == regs.root:
+                root_meta.append((s, sp.n_out))
+            if not buffers:
+                continue
+
+            src_row = _pad1(sp.src_row.astype(np.int32), n_exp_p, 0)
+            gathers = []
+            for c in kids:
+                g = sp.child_gather.get(c)
+                if g is None:        # unkeyed child: compose the ctx lookup
+                    g = fz.child_lookup[var][c][sp.src_row]
+                gathers.append(
+                    jnp.asarray(_pad1(g.astype(np.int32), n_exp_p, 0))
+                )
+            buf = {
+                "src_row": jnp.asarray(src_row),
+                "p0": jnp.asarray(sp.p0.astype(np.int32)),
+                "out_id": jnp.asarray(
+                    _pad1(sp.out_id.astype(np.int32), n_exp_p, n_out_p)
+                ),
+                "gathers": tuple(gathers),
+                "ccols": tuple(
+                    jnp.asarray(sp.child_col[c][0].astype(np.int32))
+                    for c in kids
+                ),
+            }
+            if path == "moments":
+                mask = np.zeros((n_exp_p,), dtype=np.float64)
+                mask[: sp.n_exp] = 1.0
+                buf["mask"] = jnp.asarray(mask, dtype=dtype)
+                buf["mrows"] = jnp.asarray(mrows)
+                buf["mcols"] = jnp.asarray(mcols)
+                buf["base_cols"] = tuple(
+                    jnp.asarray(child_cols[c]) for c in kids
+                )
+            bufs.append(buf)
+
+    signature = (
+        jnp.dtype(dtype).name,
+        tuple(lam_shapes),
+        tuple(steps),
+        policy.block_rows,
+        policy.resolve_interpret(),
+    )
+    return signature, lams, bufs, (root_meta, fused, moments)
+
+
+# ----------------------------------------------------------------------
+# Runner construction + the process-wide plane
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ExecutorStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    traces: int = 0                 # XLA traces actually performed
+    trace_seconds: float = 0.0
+    executions: int = 0
+    seg_outer_steps: int = 0        # dispatch accounting (per execution)
+    moments_steps: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _build_runner(signature, stats: ExecutorStats):
+    _, _, steps, block_rows, interpret = signature
+    from repro.kernels.seg_outer.ops import segment_feature_sum
+    from repro.kernels.sigma_fused.ops import sigma_moments
+
+    def run(lams, bufs):
+        stats.traces += 1          # trace-time side effect only
+        payloads: Dict[Tuple[int, Tuple[int, ...]], jnp.ndarray] = {}
+        outs = []
+        for st, buf in zip(steps, bufs):
+            lam = lams[st.node]
+            if st.path == "moments":
+                mask = buf["mask"]
+                base = [mask[:, None]]
+                if st.has_self:
+                    base.append((lam[buf["src_row"]][:, 1] * mask)[:, None])
+                for ck, g, bc in zip(
+                    st.children, buf["gathers"], buf["base_cols"]
+                ):
+                    base.append(payloads[ck][g][:, bc] * mask[:, None])
+                x = jnp.concatenate(base, axis=1)
+                gram = sigma_moments(
+                    x, block_rows=block_rows, interpret=interpret
+                )
+                out = gram[buf["mrows"], buf["mcols"]][None, :]
+                out = out.astype(lam.dtype)
+                if st.n_out > 1:
+                    out = jnp.concatenate(
+                        [out, jnp.zeros((st.n_out - 1, st.n_entries),
+                                        out.dtype)], axis=0
+                    )
+            else:
+                vals = lam[buf["src_row"]][:, buf["p0"]]
+                for ck, g, cc in zip(
+                    st.children, buf["gathers"], buf["ccols"]
+                ):
+                    vals = vals * payloads[ck][g][:, cc]
+                if st.path == "seg_outer":
+                    out = segment_feature_sum(
+                        vals, buf["out_id"], num_segments=st.n_out,
+                        block_rows=block_rows, interpret=interpret,
+                    ).astype(vals.dtype)
+                else:
+                    out = jax.ops.segment_sum(
+                        vals, buf["out_id"], num_segments=st.n_out
+                    )
+            payloads[(st.node, st.sig)] = out
+            outs.append(out)
+        root = max(st.node for st in steps)
+        return [o for st, o in zip(steps, outs) if st.node == root]
+
+    return run
+
+
+class ExecutorPlane:
+    """Process-wide LRU of compiled aggregate-pass executables."""
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = capacity
+        self.stats = ExecutorStats()
+        self._cache: "OrderedDict[tuple, object]" = OrderedDict()
+        # the signature of the most recent execute() — callers that need
+        # to remember which executable served their plan (the session
+        # stamps it on the bundle) read it here instead of re-deriving
+        # the whole signature host-side (serving is single-threaded by
+        # design, DESIGN.md §10)
+        self.last_signature: Optional[tuple] = None
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def contains(self, signature) -> bool:
+        return signature in self._cache
+
+    def clear(self) -> None:
+        self._cache.clear()
+
+    def executable_for(self, signature):
+        fn = self._cache.get(signature)
+        if fn is not None:
+            self.stats.hits += 1
+            self._cache.move_to_end(signature)
+            return fn
+        self.stats.misses += 1
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        fn = jax.jit(
+            _build_runner(signature, self.stats), donate_argnums=donate
+        )
+        self._cache[signature] = fn
+        while len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+        return fn
+
+    # ------------------------------------------------------------------
+    def execute(
+        self,
+        plan: EnginePlan,
+        dtype=jnp.float64,
+        policy: Optional[KernelPolicy] = None,
+    ) -> Dict[Tuple[str, ...], jnp.ndarray]:
+        """Run the plan's aggregate pass through the compiled plane;
+        returns the root payload per group-by signature, padding sliced
+        off."""
+        policy = policy or DEFAULT_POLICY
+        signature, lams, bufs, (root_meta, fused, moments) = _prepare(
+            plan, dtype, policy
+        )
+        self.last_signature = signature
+        fn = self.executable_for(signature)
+        traces_before = self.stats.traces
+        t0 = time.perf_counter()
+        outs = fn(lams, bufs)
+        if self.stats.traces > traces_before:
+            self.stats.trace_seconds += time.perf_counter() - t0
+        self.stats.executions += 1
+        self.stats.seg_outer_steps += fused
+        self.stats.moments_steps += moments
+        return {
+            s: out[:n_real] for (s, n_real), out in zip(root_meta, outs)
+        }
+
+
+_PLANE: Optional[ExecutorPlane] = None
+
+
+def global_plane() -> ExecutorPlane:
+    """The process-wide executor plane (one compile cache per process —
+    every Session/ModelServer in the process shares it)."""
+    global _PLANE
+    if _PLANE is None:
+        _PLANE = ExecutorPlane()
+    return _PLANE
+
+
+def executor_stats() -> dict:
+    """Snapshot of the global plane's counters (for metrics sinks)."""
+    plane = global_plane()
+    return {**plane.stats.snapshot(), "cached_executables": len(plane)}

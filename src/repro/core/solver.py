@@ -15,6 +15,8 @@ Barzilai-Borwein [6]; we implement the BB1 step as an option).
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import OrderedDict
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -42,6 +44,138 @@ class SolverResult:
     carry: object = None          # final grad_fn state
 
 
+# ----------------------------------------------------------------------
+# Solver compile cache (ROADMAP "Solver compile cache", DESIGN.md §11):
+# the whole BGD drive — init gradient + while_loop — is one jitted driver
+# keyed by the caller's structural cache key. Repeated fits of the same
+# (workload, spec, solver config) re-enter the compiled while_loop with
+# Sigma passed as an ARGUMENT instead of a fresh closure, so the ~0.4 s/fit
+# retrace floor disappears (the jit shape-cache absorbs nnz changes).
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SolverCacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    traces: int = 0
+    trace_seconds: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_CACHE_CAPACITY = 64
+_DRIVER_CACHE: "OrderedDict[object, Callable]" = OrderedDict()
+_STATS = SolverCacheStats()
+
+
+def solver_cache_stats() -> SolverCacheStats:
+    return _STATS
+
+
+def clear_solver_cache() -> None:
+    _DRIVER_CACHE.clear()
+
+
+def _make_driver(
+    loss_fn: Callable,
+    unravel: Callable,
+    max_iters: int,
+    tol: float,
+    bb_step: bool,
+    max_backtracks: int,
+    grad_fn: Optional[Callable],
+    stats: Optional[SolverCacheStats] = None,
+) -> Callable:
+    """The BGD drive as a pure function of (theta0, alpha0, carry0,
+    loss_args). The closures baked in here (loss structure, unravel,
+    hyperparameters) are exactly what the cache key must pin down."""
+
+    def f(theta, loss_args):
+        return loss_fn(unravel(theta), *loss_args)
+
+    if grad_fn is None:
+        _vg = jax.value_and_grad(f)
+
+        def vg(theta, carry, loss_args):
+            loss, grad = _vg(theta, loss_args)
+            return loss, grad, carry
+
+    else:
+        def vg(theta, carry, loss_args):
+            return grad_fn(theta, carry)
+
+    def drive(theta0, alpha0, carry0, loss_args):
+        if stats is not None:
+            stats.traces += 1        # trace-time side effect only
+
+        def line_search(theta, loss, grad, alpha):
+            gnorm2 = jnp.dot(grad, grad)
+
+            def cond(carry):
+                alpha, n = carry
+                new_loss = f(theta - alpha * grad, loss_args)
+                armijo = new_loss <= loss - 0.5 * alpha * gnorm2
+                return jnp.logical_and(~armijo, n < max_backtracks)
+
+            def body(carry):
+                alpha, n = carry
+                return alpha * 0.5, n + 1
+
+            alpha, _ = jax.lax.while_loop(cond, body, (alpha, jnp.int32(0)))
+            return alpha
+
+        def step(state: SolverState) -> SolverState:
+            loss, grad, carry = vg(state.theta, state.carry, loss_args)
+            # Barzilai-Borwein initial step for this iteration
+            dx = state.theta - state.prev_theta
+            dg = grad - state.prev_grad
+            bb = jnp.dot(dx, dx) / jnp.maximum(jnp.dot(dx, dg), 1e-30)
+            alpha = jnp.where(
+                jnp.logical_and(bb_step, jnp.isfinite(bb) & (bb > 0)),
+                jnp.minimum(bb, 1e6),
+                state.alpha * 2.0,
+            )
+            alpha = line_search(state.theta, loss, grad, alpha)
+            new_theta = state.theta - alpha * grad
+            new_loss = f(new_theta, loss_args)
+            rel = jnp.abs(state.loss - new_loss) / jnp.maximum(
+                jnp.abs(state.loss), 1e-30
+            )
+            gnorm = jnp.linalg.norm(grad) / jnp.maximum(len(grad), 1)
+            converged = jnp.logical_or(rel < tol, gnorm < tol)
+            return SolverState(
+                theta=new_theta,
+                prev_theta=state.theta,
+                prev_grad=grad,
+                loss=new_loss,
+                alpha=alpha,
+                it=state.it + 1,
+                converged=converged,
+                carry=carry,
+            )
+
+        def cond(state: SolverState):
+            return jnp.logical_and(state.it < max_iters, ~state.converged)
+
+        loss0, grad0, carry = vg(theta0, carry0, loss_args)
+        init = SolverState(
+            theta=theta0,
+            prev_theta=theta0 + 1e-8,
+            prev_grad=grad0,
+            loss=loss0,
+            alpha=alpha0,
+            it=jnp.int32(0),
+            converged=jnp.array(False),
+            carry=carry,
+        )
+        return jax.lax.while_loop(cond, step, init)
+
+    return drive
+
+
 def bgd(
     loss_fn: Callable,
     params0,
@@ -52,8 +186,10 @@ def bgd(
     max_backtracks: int = 50,
     grad_fn: Optional[Callable] = None,
     carry0=None,
+    cache_key=None,
+    loss_args=(),
 ) -> SolverResult:
-    """Minimize ``loss_fn(params)``; params may be any pytree.
+    """Minimize ``loss_fn(params, *loss_args)``; params may be any pytree.
 
     ``grad_fn(theta, carry) -> (loss, grad, new_carry)`` overrides the
     default ``jax.value_and_grad`` over flattened parameters and threads an
@@ -62,85 +198,49 @@ def bgd(
     into the BGD iteration. The Armijo line search always evaluates the
     exact ``loss_fn`` (compression perturbs the step direction, never the
     acceptance test).
+
+    ``cache_key`` enables the process-wide solver compile cache: the whole
+    jitted drive (init gradient + ``while_loop``) is cached under the key
+    and re-entered on later calls with ``loss_args`` (the Sigma arrays)
+    passed as arguments — zero re-tracing for repeated fits of one
+    workload. The key MUST pin down everything baked into the closures:
+    the loss structure (model/param-space identity) and the hyperparameters
+    — callers (``session.Session``) key on (bundle key, workload key, spec,
+    solver config, refresh epoch). Keyless calls keep the legacy
+    trace-per-call behavior (the compressed-gradient path stays keyless:
+    its ``grad_fn`` closes over the sharded Sigma itself).
     """
     theta0, unravel = ravel_pytree(params0)
     theta0 = theta0.astype(jnp.float64)
-
-    def f(theta):
-        return loss_fn(unravel(theta))
-
     carry0 = () if carry0 is None else carry0
-    if grad_fn is None:
-        _vg = jax.value_and_grad(f)
 
-        def vg(theta, carry):
-            loss, grad = _vg(theta)
-            return loss, grad, carry
-
+    if cache_key is None:
+        drive = _make_driver(
+            loss_fn, unravel, max_iters, tol, bb_step, max_backtracks,
+            grad_fn,
+        )
+        final = drive(theta0, jnp.float64(alpha0), carry0, tuple(loss_args))
     else:
-        vg = grad_fn
+        drive = _DRIVER_CACHE.get(cache_key)
+        if drive is None:
+            _STATS.misses += 1
+            drive = jax.jit(_make_driver(
+                loss_fn, unravel, max_iters, tol, bb_step, max_backtracks,
+                grad_fn, stats=_STATS,
+            ))
+            _DRIVER_CACHE[cache_key] = drive
+            while len(_DRIVER_CACHE) > _CACHE_CAPACITY:
+                _DRIVER_CACHE.popitem(last=False)
+                _STATS.evictions += 1
+        else:
+            _STATS.hits += 1
+            _DRIVER_CACHE.move_to_end(cache_key)
 
-    def line_search(theta, loss, grad, alpha):
-        gnorm2 = jnp.dot(grad, grad)
-
-        def cond(carry):
-            alpha, n = carry
-            new_loss = f(theta - alpha * grad)
-            armijo = new_loss <= loss - 0.5 * alpha * gnorm2
-            return jnp.logical_and(~armijo, n < max_backtracks)
-
-        def body(carry):
-            alpha, n = carry
-            return alpha * 0.5, n + 1
-
-        alpha, _ = jax.lax.while_loop(cond, body, (alpha, jnp.int32(0)))
-        return alpha
-
-    def step(state: SolverState) -> SolverState:
-        loss, grad, carry = vg(state.theta, state.carry)
-        # Barzilai-Borwein initial step for this iteration
-        dx = state.theta - state.prev_theta
-        dg = grad - state.prev_grad
-        bb = jnp.dot(dx, dx) / jnp.maximum(jnp.dot(dx, dg), 1e-30)
-        alpha = jnp.where(
-            jnp.logical_and(bb_step, jnp.isfinite(bb) & (bb > 0)),
-            jnp.minimum(bb, 1e6),
-            state.alpha * 2.0,
-        )
-        alpha = line_search(state.theta, loss, grad, alpha)
-        new_theta = state.theta - alpha * grad
-        new_loss = f(new_theta)
-        rel = jnp.abs(state.loss - new_loss) / jnp.maximum(
-            jnp.abs(state.loss), 1e-30
-        )
-        gnorm = jnp.linalg.norm(grad) / jnp.maximum(len(grad), 1)
-        converged = jnp.logical_or(rel < tol, gnorm < tol)
-        return SolverState(
-            theta=new_theta,
-            prev_theta=state.theta,
-            prev_grad=grad,
-            loss=new_loss,
-            alpha=alpha,
-            it=state.it + 1,
-            converged=converged,
-            carry=carry,
-        )
-
-    def cond(state: SolverState):
-        return jnp.logical_and(state.it < max_iters, ~state.converged)
-
-    loss0, grad0, carry0 = vg(theta0, carry0)
-    init = SolverState(
-        theta=theta0,
-        prev_theta=theta0 + 1e-8,
-        prev_grad=grad0,
-        loss=loss0,
-        alpha=jnp.float64(alpha0),
-        it=jnp.int32(0),
-        converged=jnp.array(False),
-        carry=carry0,
-    )
-    final = jax.lax.while_loop(cond, step, init)
+        traces_before = _STATS.traces
+        t0 = time.perf_counter()
+        final = drive(theta0, jnp.float64(alpha0), carry0, tuple(loss_args))
+        if _STATS.traces > traces_before:
+            _STATS.trace_seconds += time.perf_counter() - t0
     return SolverResult(
         params=unravel(final.theta),
         loss=float(final.loss),

@@ -27,7 +27,10 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(x_ref, seg_ref, partial_ref, ids_ref):
-    x = x_ref[...].astype(jnp.float32)            # (BN, f)
+    # accumulate in the input precision, floored at f32 (f64 inputs keep
+    # f64 partials — interpreter/CPU path; the TPU MXU path runs f32)
+    acc = jnp.promote_types(x_ref.dtype, jnp.float32)
+    x = x_ref[...].astype(acc)                    # (BN, f)
     seg = seg_ref[...]                            # (BN,)
     bn = x.shape[0]
     prev = jnp.concatenate([seg[:1] - 1, seg[:-1]])
@@ -37,10 +40,10 @@ def _kernel(x_ref, seg_ref, partial_ref, ids_ref):
     rank = jnp.where(jnp.arange(bn) == 0, 0, rank)
 
     slots = jnp.arange(bn, dtype=jnp.int32)
-    onehot = (rank[None, :] == slots[:, None]).astype(jnp.float32)  # (BN, BN)
+    onehot = (rank[None, :] == slots[:, None]).astype(acc)  # (BN, BN)
     partial_ref[0, :, :] = jax.lax.dot_general(
         onehot, x, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=acc,
     )
     # segment id owning each slot (-1 for empty slots)
     owner = jnp.max(
@@ -63,6 +66,7 @@ def seg_outer(
     n, f = x.shape
     assert n % block_rows == 0, "pad in ops.py"
     grid = (n // block_rows,)
+    acc = jnp.promote_types(x.dtype, jnp.float32)
     return pl.pallas_call(
         _kernel,
         grid=grid,
@@ -75,7 +79,7 @@ def seg_outer(
             pl.BlockSpec((1, block_rows), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n // block_rows, block_rows, f), jnp.float32),
+            jax.ShapeDtypeStruct((n // block_rows, block_rows, f), acc),
             jax.ShapeDtypeStruct((n // block_rows, block_rows), jnp.int32),
         ],
         interpret=interpret,

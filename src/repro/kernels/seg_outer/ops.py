@@ -1,8 +1,16 @@
-"""jit'd wrapper: kernel partials + cross-block combine."""
+"""jit'd wrapper: kernel partials + cross-block combine.
+
+``interpret`` defaults to *platform-derived*: compiled Pallas only on TPU,
+interpreter mode everywhere else. The old ``interpret=True`` default ran
+the interpreter unconditionally — a silent perf bug on real TPUs. Callers
+on the hot path (``core.executor``) thread the resolved flag explicitly so
+the decision is part of their compile-cache key.
+"""
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,15 +19,20 @@ from .kernel import seg_outer
 from .ref import seg_outer_ref
 
 
+def default_interpret() -> bool:
+    """Interpret everywhere but TPU — the only backend with a compiled
+    Pallas lowering for these kernels."""
+    return jax.default_backend() != "tpu"
+
+
 @partial(jax.jit, static_argnames=("num_segments", "block_rows", "interpret"))
-def segment_feature_sum(
+def _segment_feature_sum(
     x: jnp.ndarray,
     seg: jnp.ndarray,
     num_segments: int,
-    block_rows: int = 256,
-    interpret: bool = True,
+    block_rows: int,
+    interpret: bool,
 ) -> jnp.ndarray:
-    """segment_sum over SORTED segment ids via the seg_outer kernel."""
     n, f = x.shape
     pad = (-n) % block_rows
     if pad:
@@ -34,6 +47,24 @@ def segment_feature_sum(
     flat_i = jnp.where(flat_i < 0, num_segments, flat_i)  # empty slots
     out = jax.ops.segment_sum(flat_p, flat_i, num_segments=num_segments + 1)
     return out[:num_segments]
+
+
+def segment_feature_sum(
+    x: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_segments: int,
+    block_rows: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """segment_sum over SORTED segment ids via the seg_outer kernel.
+
+    ``interpret=None`` resolves from the platform (compiled on TPU,
+    interpreter elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _segment_feature_sum(
+        x, seg, num_segments, block_rows, interpret
+    )
 
 
 def segment_feature_sum_ref(x, seg, num_segments):

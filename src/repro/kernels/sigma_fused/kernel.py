@@ -28,11 +28,14 @@ def _kernel(x_ref, out_ref, *, f: int):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    x = x_ref[...].astype(jnp.float32)          # (BN, f)
+    # accumulate in the input precision, floored at f32 (f64 inputs keep
+    # f64 moments — interpreter/CPU path; the TPU MXU path runs f32)
+    acc = jnp.promote_types(x_ref.dtype, jnp.float32)
+    x = x_ref[...].astype(acc)                  # (BN, f)
     bn = x.shape[0]
     y = (x[:, :, None] * x[:, None, :]).reshape(bn, f * f)
     out_ref[...] += jax.lax.dot_general(
-        y, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        y, y, (((0,), (0,)), ((), ())), preferred_element_type=acc
     )
 
 
@@ -47,6 +50,7 @@ def sigma_fused(
     n, f = x.shape
     assert n % block_rows == 0, "pad in ops.py"
     grid = (n // block_rows,)
+    acc = jnp.promote_types(x.dtype, jnp.float32)
     return pl.pallas_call(
         functools.partial(_kernel, f=f),
         grid=grid,
@@ -54,6 +58,6 @@ def sigma_fused(
             pl.BlockSpec((block_rows, f), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((f * f, f * f), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((f * f, f * f), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((f * f, f * f), acc),
         interpret=interpret,
     )(x)

@@ -1,21 +1,29 @@
-"""jit'd public wrapper for the sigma_fused kernel."""
+"""jit'd public wrapper for the sigma_fused kernel.
+
+``interpret`` defaults to *platform-derived* (compiled Pallas on TPU,
+interpreter elsewhere) instead of the old always-interpret default —
+callers on the hot path (``core.executor``) thread the resolved flag so
+it participates in their compile-cache key.
+"""
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.seg_outer.ops import default_interpret
 
 from .kernel import sigma_fused
 from .ref import sigma_fused_ref
 
 
 @partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def sigma_moments(
-    x: jnp.ndarray, block_rows: int = 256, interpret: bool = True
+def _sigma_moments(
+    x: jnp.ndarray, block_rows: int, interpret: bool
 ) -> jnp.ndarray:
-    """Degree-≤4 moment matrix of the feature block (zero-pads rows)."""
     n, f = x.shape
     pad = (-n) % block_rows
     if pad:
@@ -23,6 +31,20 @@ def sigma_moments(
             [x, jnp.zeros((pad, f), dtype=x.dtype)], axis=0
         )
     return sigma_fused(x, block_rows=block_rows, interpret=interpret)
+
+
+def sigma_moments(
+    x: jnp.ndarray,
+    block_rows: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Degree-≤4 moment matrix of the feature block (zero-pads rows).
+
+    ``interpret=None`` resolves from the platform (compiled on TPU,
+    interpreter elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _sigma_moments(x, block_rows, interpret)
 
 
 def sigma_moments_ref(x: jnp.ndarray) -> jnp.ndarray:

@@ -61,7 +61,14 @@ def choose_victim(
 
 def cache_snapshot(session: "Session") -> List[dict]:
     """Plain-dict view of the bundle cache, one entry per resident bundle
-    (ordered as admitted) — consumed by ``repro.serve.metrics``."""
+    (ordered as admitted) — consumed by ``repro.serve.metrics``.
+    ``trace_cached`` reports whether the bundle's plan shape is resident
+    in the process-wide compiled-executor plane (DESIGN.md §11): an
+    evicted bundle with ``trace_cached=True`` recompiles its TABLES but
+    re-enters the cached executable with zero re-tracing."""
+    from repro.core.executor import global_plane
+
+    plane = global_plane()
     return [
         {
             "features": list(b.key.features),
@@ -76,6 +83,10 @@ def cache_snapshot(session: "Session") -> List[dict]:
             "pinned": b.pinned,
             "refreshes": b.refreshes,
             "sigma_builds": b.sigma_builds,
+            "trace_cached": (
+                b.executor_signature is not None
+                and plane.contains(b.executor_signature)
+            ),
         }
         for b in session.bundles
     ]

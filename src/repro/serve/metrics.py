@@ -1,16 +1,21 @@
 """One plain-dict snapshot of everything the server knows about itself.
 
-``snapshot(server)`` flattens the four counter planes — server (request
+``snapshot(server)`` flattens the six counter planes — server (request
 mix, reuse), session (passes/hits/evictions), bundle cache (per-bundle
-bytes/utility/pin), staleness (queue depth, data age, refresh latency) —
-into JSON-serializable builtins, so an operator can ship it to any
-metrics sink without importing repro types.
+bytes/utility/pin), staleness (queue depth, data age, refresh latency),
+the process-wide compiled-executor plane and the solver compile cache
+(hit/miss/trace-seconds, DESIGN.md §11) — into JSON-serializable
+builtins, so an operator can ship it to any metrics sink without
+importing repro types.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import TYPE_CHECKING
+
+from repro.core.executor import executor_stats
+from repro.core.solver import solver_cache_stats
 
 from .cache import cache_snapshot
 
@@ -50,4 +55,7 @@ def snapshot(server: "ModelServer") -> dict:
         },
         "bundles": cache_snapshot(sess),
         "staleness": server.refresh.metrics(),
+        # process-wide planes (shared across every session in the process)
+        "executor": executor_stats(),
+        "solver_cache": solver_cache_stats().snapshot(),
     }

@@ -94,6 +94,7 @@ class FitReply:
     compiled: bool            # this fit paid an aggregate pass
     cross_tenant: bool        # served off a bundle another tenant compiled
     seconds: float
+    solver_cache_hit: bool = False  # BGD drive reused, zero re-tracing
 
     @property
     def loss(self) -> float:
@@ -161,6 +162,7 @@ class ServerStats:
     self_hits: int = 0
     cross_tenant_hits: int = 0
     stale_predicts: int = 0
+    solver_cache_hits: int = 0    # fits whose BGD drive was cache-served
 
 
 class ModelServer:
@@ -253,6 +255,7 @@ class ModelServer:
         """The shared fit path (explicit requests and refresh refits)."""
         sess = self.session
         passes_before = sess.stats.aggregate_passes
+        solver_hits_before = sess.stats.solver_hits
         t0 = self.clock()
         result = sess.fit(
             tenant.spec,
@@ -264,6 +267,9 @@ class ModelServer:
         )
         dt = self.clock() - t0
         compiled = sess.stats.aggregate_passes > passes_before
+        solver_hit = sess.stats.solver_hits > solver_hits_before
+        if solver_hit:
+            self.stats.solver_cache_hits += 1
         bkey = result.bundle.key
         if compiled:
             self._owners[bkey] = tenant.name
@@ -291,6 +297,7 @@ class ModelServer:
             compiled=compiled,
             cross_tenant=cross,
             seconds=dt,
+            solver_cache_hit=solver_hit,
         )
 
     def _pin_tenant_bundle(self, tenant: Tenant, bundle) -> None:

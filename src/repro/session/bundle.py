@@ -64,6 +64,10 @@ class AggregateBundle:
     plan: EnginePlan
     aggregate_seconds: float
     fds: Tuple[FD, ...] = ()
+    # structural key of the plan in the process-wide compiled-executor
+    # plane (core.executor, DESIGN.md §11) — a recompile of this bundle
+    # after eviction re-enters the cached executable under this key
+    executor_signature: object = None
     sigma_builds: int = 0
     refreshes: int = 0                 # delta patches merged into .result
     last_used: float = 0.0             # monotonic timestamp of last serve

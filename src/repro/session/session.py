@@ -27,13 +27,17 @@ observable (and testable): fitting LR + PR2 + FaMa costs exactly one pass.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import executor
 from repro.core import fd as fdmod
+from repro.core import solver as solver_mod
 from repro.core.engine import (
     EnginePlan,
     build_plan,
@@ -50,7 +54,7 @@ from repro.core.variable_order import OrderInfo, VarNode, analyze
 
 from repro.delta import Delta, DeltaReport, apply_to_relation, refresh_bundle
 
-from .bundle import AggregateBundle, BundleKey, fd_key
+from .bundle import AggregateBundle, BundleKey, fd_key, workload_key
 from .compressed import make_compressed_grad_fn
 from .specs import ExecutionPolicy, ModelSpec, SolverConfig
 
@@ -67,6 +71,17 @@ class SessionStats:
     evictions: int = 0             # bundles dropped under byte pressure
     bytes_evicted: int = 0
     recompiles: int = 0            # misses whose key was previously evicted
+    # compiled-executor plane (core.executor, DESIGN.md §11): this
+    # session's share of the process-wide compile cache traffic
+    executor_hits: int = 0         # aggregate passes served by a cached trace
+    executor_misses: int = 0       # passes that had to build an executable
+    executor_traces: int = 0       # XLA traces this session actually paid
+    executor_trace_seconds: float = 0.0
+    # solver compile cache (core.solver): per-fit BGD driver reuse
+    solver_hits: int = 0
+    solver_misses: int = 0
+    solver_traces: int = 0
+    solver_trace_seconds: float = 0.0
 
 
 @dataclasses.dataclass
@@ -89,6 +104,9 @@ class FitResult:
         return self.solver.loss
 
 
+_SESSION_SERIAL = itertools.count()
+
+
 class Session:
     """A registered database + memoized analysis + compiled bundles."""
 
@@ -98,6 +116,7 @@ class Session:
         order: VarNode,
         byte_budget: Optional[int] = None,
         eviction_policy=None,
+        kernel_policy=None,
     ):
         self.db = db
         self.order = order
@@ -105,6 +124,12 @@ class Session:
         self._fz = None
         self.bundles: List[AggregateBundle] = []
         self.stats = SessionStats()
+        # Pallas dispatch steering for the compiled executor plane
+        # (None -> executor.DEFAULT_POLICY: kernels on TPU only)
+        self.kernel_policy = kernel_policy
+        # solver-cache scope: drivers bake data-dependent closures (FD
+        # penalty, FaMa interactions), so keys are per-session by serial
+        self._serial = next(_SESSION_SERIAL)
         # bundle admission/eviction (repro.serve.cache, DESIGN.md §10):
         # byte_budget caps sum(b.nbytes for b in bundles); eviction_policy
         # is a callable (bundles, protect) -> victim bundle or None —
@@ -153,7 +178,14 @@ class Session:
         t0 = time.perf_counter()
         regs = build_registers(wl.aggregates, self.info, self.db)
         plan = build_plan(fz, regs)
-        res = execute(plan)
+        plane = executor.global_plane()
+        ex0 = plane.stats
+        before = (ex0.hits, ex0.misses, ex0.traces, ex0.trace_seconds)
+        res = execute(plan, kernels=self.kernel_policy)
+        self.stats.executor_hits += ex0.hits - before[0]
+        self.stats.executor_misses += ex0.misses - before[1]
+        self.stats.executor_traces += ex0.traces - before[2]
+        self.stats.executor_trace_seconds += ex0.trace_seconds - before[3]
         fz.num_join_rows = int(res.count)
         agg_s = time.perf_counter() - t0
         self.stats.aggregate_passes += 1
@@ -171,6 +203,7 @@ class Session:
             plan=plan,
             aggregate_seconds=agg_s,
             fds=fds,
+            executor_signature=plane.last_signature,
         )
         bundle.last_used = time.monotonic()
         if bundle.key in self._evicted_keys:
@@ -374,9 +407,62 @@ class Session:
             if warm_from is not None
             else model.init_params()
         )
+        # Solver compile cache (ROADMAP item, DESIGN.md §11): Sigma enters
+        # the jitted BGD drive as ARGUMENTS, and the drive is cached on the
+        # structural identity of everything its closures bake in — the
+        # bundle/workload (model + param space layout), the spec and
+        # solver config, THIS session (the model's FD penalty and FaMa
+        # interaction tables are data-dependent closure constants — two
+        # sessions over different databases must never share a driver),
+        # and the session's delta epoch (a delta can reshape key tables
+        # and FD maps, so post-delta fits must re-key). The compressed-
+        # gradient path stays keyless: its grad_fn closes over the
+        # sharded Sigma itself.
+        cache_key = loss_args = None
+        if grad_fn is None:
+            cache_key = (
+                "bgd",
+                self._serial,
+                bundle.key,
+                workload_key(wl),
+                spec,
+                solver,
+                self.stats.deltas_applied,
+                sig_exec.space.total,
+            )
+            loss_args = (
+                sig_exec.rows,
+                sig_exec.cols,
+                sig_exec.vals,
+                sig_exec.c,
+                jnp.asarray(sig_exec.sy, dtype=jnp.float64),
+            )
+            # the cached driver keeps loss_fn's closure alive for the
+            # cache's lifetime — strip the COO arrays from the captured
+            # template so an evicted bundle's Sigma does not stay pinned
+            # in memory behind the solver cache
+            sig_template = dataclasses.replace(
+                sig_exec, rows=None, cols=None, vals=None, c=None, sy=0.0
+            )
+
+            def loss_fn(p, rows, cols, vals, c, sy):
+                s = dataclasses.replace(
+                    sig_template, rows=rows, cols=cols, vals=vals, c=c,
+                    sy=sy,
+                )
+                return model.loss(s, p)
+
+        else:
+            def loss_fn(p):
+                return model.loss(sig_exec, p)
+
+        sstats = solver_mod.solver_cache_stats()
+        before = (
+            sstats.hits, sstats.misses, sstats.traces, sstats.trace_seconds,
+        )
         t0 = time.perf_counter()
         sol = bgd(
-            lambda p: model.loss(sig_exec, p),
+            loss_fn,
             params0,
             max_iters=solver.max_iters,
             tol=solver.tol,
@@ -384,8 +470,14 @@ class Session:
             bb_step=solver.bb_step,
             grad_fn=grad_fn,
             carry0=carry0,
+            cache_key=cache_key,
+            loss_args=loss_args or (),
         )
         conv_s = time.perf_counter() - t0
+        self.stats.solver_hits += sstats.hits - before[0]
+        self.stats.solver_misses += sstats.misses - before[1]
+        self.stats.solver_traces += sstats.traces - before[2]
+        self.stats.solver_trace_seconds += sstats.trace_seconds - before[3]
         self.stats.fits += 1
         return FitResult(
             spec=spec,

@@ -1,0 +1,312 @@
+"""The persistent compiled-executor plane + solver compile cache
+(DESIGN.md §11): same-shape plans hit the process-wide cache with
+bit-identical tables, shape changes miss, eviction+recompile re-enters
+the cached executable, repeated fits perform zero new traces, and both
+Pallas dispatch paths agree with the numpy executor to <=1e-6."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    _run_numpy,
+    _segment_rows_numpy,
+    build_plan,
+    factorize,
+)
+from repro.core.executor import (
+    ExecutorPlane,
+    KernelPolicy,
+    global_plane,
+    plan_signature,
+)
+from repro.core.monomials import build_registers, build_workload
+from repro.core.schema import make_database
+from repro.core.solver import solver_cache_stats
+from repro.core.variable_order import analyze, vo
+from repro.session import (
+    LinearRegression,
+    PolynomialRegression,
+    Session,
+    SolverConfig,
+)
+
+LAM = 0.1
+ORDER = vo("A", vo("B", vo("C"), vo("G", vo("D"))), vo("E"))
+FEATS = ["A", "B", "C", "D"]
+CFG = SolverConfig(max_iters=500, tol=1e-12, policy="single")
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(1)
+    nR, nS, nT = 80, 50, 40
+    bvals = rng.integers(0, 10, nS)
+    gmap = rng.integers(0, 3, 10)
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 8, nR), "B": rng.integers(0, 10, nR),
+                  "C": rng.normal(size=nR).round(2)},
+            "S": {"B": bvals, "G": gmap[bvals],
+                  "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 8, nT),
+                  "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B", "G"],
+        fds=[("B", ["G"])],
+    )
+
+
+def _plan(db, degree=2):
+    info = analyze(ORDER, db)
+    wl = build_workload(db, FEATS, "E", degree, squares=True)
+    regs = build_registers(wl.aggregates, info, db)
+    return build_plan(factorize(db, info), regs)
+
+
+def _tables(bundle):
+    return {
+        m: np.asarray(v) for m, (_, v) in bundle.result.tables.items()
+    }
+
+
+# ----------------------------------------------------------------------
+# compile cache: hit / miss / eviction semantics
+# ----------------------------------------------------------------------
+
+
+def test_same_shape_plan_hits_cache_bit_identical(db):
+    s1 = Session(db, ORDER)
+    b1 = s1.compile(FEATS, "E", degree=2)
+    t1 = _tables(b1)
+
+    s2 = Session(db, ORDER)
+    b2 = s2.compile(FEATS, "E", degree=2)
+    # structurally identical plan: served by the cached executable...
+    assert s2.stats.executor_traces == 0
+    assert s2.stats.executor_hits == 1
+    assert s2.stats.executor_misses == 0
+    # ...and the same executable on the same inputs is bit-identical
+    t2 = _tables(b2)
+    assert set(t1) == set(t2)
+    for m in t1:
+        assert np.array_equal(t1[m], t2[m]), m
+
+
+def test_shape_change_misses(db):
+    s = Session(db, ORDER)
+    s.compile(FEATS, "E", degree=2)
+    hits0, misses0 = s.stats.executor_hits, s.stats.executor_misses
+    # a different workload (response C, degree 1) is not subsumed by the
+    # pr2 bundle and its plan has fewer register entries -> new signature
+    s.compile(["A", "B", "D"], "C", degree=1)
+    assert s.stats.executor_misses == misses0 + 1
+    assert s.stats.executor_hits == hits0
+
+
+def test_signature_is_structural_not_nominal(db):
+    plan = _plan(db)
+    assert plan_signature(plan) == plan_signature(plan)
+    # the key is hashable and independent of plan object identity
+    plan2 = _plan(db)
+    assert plan_signature(plan2) == plan_signature(plan)
+
+
+def test_eviction_recompile_reuses_cached_executable(db):
+    """serve/cache eviction drops the TABLES; the executor plane keeps the
+    trace — the recompile must not grow the plane's trace count."""
+    plane = global_plane()
+    sess = Session(db, ORDER)
+    b = sess.compile(FEATS, "E", degree=2)
+    before = _tables(b)
+    sig = b.executor_signature
+    assert sig is not None and plane.contains(sig)
+
+    sess.byte_budget = 1            # everything over budget
+    sess.evict(b)
+    assert sess.stats.evictions == 1
+
+    traces0 = plane.stats.traces
+    sess.byte_budget = None
+    b2 = sess.compile(FEATS, "E", degree=2)
+    assert sess.stats.recompiles == 1
+    assert plane.stats.traces == traces0        # re-entered, not re-traced
+    after = _tables(b2)
+    for m in before:
+        assert np.array_equal(before[m], after[m]), m
+
+
+def test_lru_eviction_recompiles_transparently(db):
+    plane = ExecutorPlane(capacity=1)
+    p1, p2 = _plan(db, degree=2), _plan(db, degree=1)
+    r1 = plane.execute(p1)
+    plane.execute(p2)               # evicts p1's executable (capacity 1)
+    assert plane.stats.evictions == 1
+    r1b = plane.execute(p1)         # recompile, same results
+    assert plane.stats.misses == 3 and plane.stats.hits == 0
+    for s in r1:
+        np.testing.assert_array_equal(np.asarray(r1[s]), np.asarray(r1b[s]))
+
+
+# ----------------------------------------------------------------------
+# solver compile cache
+# ----------------------------------------------------------------------
+
+
+def test_repeated_fit_zero_new_traces(db):
+    """Acceptance: repeated Session.fit of an identical spec performs zero
+    new XLA traces after the first — executor AND solver."""
+    sess = Session(db, ORDER)
+    spec = PolynomialRegression(degree=2, lam=LAM)
+    r1 = sess.fit(spec, FEATS, "E", solver=CFG)
+    ex_traces = sess.stats.executor_traces
+    so_traces = sess.stats.solver_traces
+    assert so_traces == 1
+    for _ in range(2):
+        r = sess.fit(spec, FEATS, "E", solver=CFG)
+        assert r.loss == r1.loss
+    assert sess.stats.executor_traces == ex_traces
+    assert sess.stats.solver_traces == so_traces
+    assert sess.stats.solver_hits == 2
+
+
+def test_solver_cache_not_shared_across_sessions(db):
+    """Two sessions over different data must not share a BGD drive: the
+    driver's closures bake data-dependent constants (FD penalty, FaMa
+    interaction tables). Keys are session-scoped."""
+    s1 = Session(db, ORDER)
+    s1.fit(LinearRegression(lam=LAM), FEATS, "E", solver=CFG)
+    s2 = Session(db, ORDER)
+    s2.fit(LinearRegression(lam=LAM), FEATS, "E", solver=CFG)
+    assert s2.stats.solver_hits == 0
+    assert s2.stats.solver_misses == 1
+
+
+def test_fit_after_delta_rekeys_solver(db):
+    """A delta can reshape key tables/FD maps baked into the drive's
+    closures — the epoch in the key forces a fresh driver."""
+    import copy
+
+    from repro.delta import Delta
+
+    sess = Session(copy.deepcopy(db), ORDER)
+    spec = LinearRegression(lam=LAM)
+    sess.fit(spec, FEATS, "E", solver=CFG)
+    rel = sess.db.relations["T"]
+    deletes = {a: rel.columns[a][:2] for a in rel.attrs}
+    sess.apply_delta(Delta("T", deletes=deletes))
+    misses0 = sess.stats.solver_misses
+    sess.fit(spec, FEATS, "E", solver=CFG)
+    assert sess.stats.solver_misses == misses0 + 1
+
+
+def test_model_server_repeated_tenant_fits_hit_solver_cache(db):
+    from repro.serve import FitRequest, ModelServer
+
+    server = ModelServer(Session(db, ORDER), default_solver=CFG)
+    req = FitRequest(
+        spec=LinearRegression(lam=LAM), features=tuple(FEATS), response="E",
+    )
+    first = server.handle(req)
+    assert not first.solver_cache_hit
+    traces0 = solver_cache_stats().traces
+    second = server.handle(req)
+    third = server.handle(req)
+    assert second.solver_cache_hit and third.solver_cache_hit
+    assert server.stats.solver_cache_hits == 2
+    assert solver_cache_stats().traces == traces0   # zero re-tracing
+    # the snapshot surfaces both compile-cache planes
+    from repro.serve import snapshot
+
+    snap = snapshot(server)
+    assert snap["executor"]["executions"] >= 1
+    assert snap["solver_cache"]["hits"] >= 2
+    assert all("trace_cached" in b for b in snap["bundles"])
+
+
+# ----------------------------------------------------------------------
+# kernel dispatch parity (acceptance: <=1e-6 vs the numpy executor)
+# ----------------------------------------------------------------------
+
+
+def _parity(plan, policy):
+    ref = _run_numpy(plan)
+    got = ExecutorPlane().execute(plan, policy=policy)
+    assert set(got) == set(ref)
+    for s in ref:
+        np.testing.assert_allclose(
+            np.asarray(got[s]), ref[s], rtol=1e-6, atol=1e-8, err_msg=str(s)
+        )
+
+
+def test_plain_path_parity(db):
+    _parity(_plan(db), KernelPolicy(mode="off"))
+
+
+def test_seg_outer_path_parity(db):
+    pol = KernelPolicy(mode="force", min_rows=0, use_moments=False)
+    plan = _plan(db)
+    plane = ExecutorPlane()
+    ref = _run_numpy(plan)
+    got = plane.execute(plan, policy=pol)
+    assert plane.stats.seg_outer_steps > 0   # the fused path actually ran
+    for s in ref:
+        np.testing.assert_allclose(
+            np.asarray(got[s]), ref[s], rtol=1e-6, atol=1e-8
+        )
+
+
+def test_moments_path_parity(db):
+    pol = KernelPolicy(mode="force", min_rows=0, max_base=32)
+    plan = _plan(db)
+    plane = ExecutorPlane()
+    ref = _run_numpy(plan)
+    got = plane.execute(plan, policy=pol)
+    assert plane.stats.moments_steps > 0     # degree-2 block went fused
+    for s in ref:
+        np.testing.assert_allclose(
+            np.asarray(got[s]), ref[s], rtol=1e-6, atol=1e-8
+        )
+
+
+def test_kernel_policy_changes_signature(db):
+    plan = _plan(db)
+    off = plan_signature(plan, policy=KernelPolicy(mode="off"))
+    force = plan_signature(
+        plan, policy=KernelPolicy(mode="force", min_rows=0)
+    )
+    assert off != force      # dispatch decisions are part of the cache key
+
+
+def test_fit_parity_across_dispatch_paths(db):
+    base = Session(db, ORDER).fit(
+        LinearRegression(lam=LAM), FEATS, "E", solver=CFG
+    )
+    fused = Session(
+        db, ORDER,
+        kernel_policy=KernelPolicy(mode="force", min_rows=0, max_base=32),
+    ).fit(LinearRegression(lam=LAM), FEATS, "E", solver=CFG)
+    assert abs(base.loss - fused.loss) <= 1e-6
+
+
+# ----------------------------------------------------------------------
+# numpy executor scatter (delta-path hot loop)
+# ----------------------------------------------------------------------
+
+
+def test_segment_rows_numpy_matches_add_at(rng):
+    for n, g, f in [(0, 4, 3), (1, 1, 2), (1000, 37, 5), (512, 512, 1)]:
+        ids = rng.integers(0, g, n).astype(np.int64)   # unsorted
+        vals = rng.normal(size=(n, f))
+        want = np.zeros((g, f))
+        np.add.at(want, ids, vals)
+        got = _segment_rows_numpy(vals, ids, g)
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+    # sorted fast path
+    ids = np.sort(rng.integers(0, 9, 200)).astype(np.int64)
+    vals = rng.normal(size=(200, 4))
+    want = np.zeros((9, 4))
+    np.add.at(want, ids, vals)
+    np.testing.assert_allclose(
+        _segment_rows_numpy(vals, ids, 9), want, rtol=1e-12, atol=1e-12
+    )
