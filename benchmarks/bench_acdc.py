@@ -384,6 +384,133 @@ def bench_multi_tenant(emit) -> None:
     )
 
 
+QPS_SCALE = 10      # x the retailer.requests default trace (40 requests)
+QPS_THREADS = 8     # concurrent client threads in the timed replay
+
+
+def bench_qps(emit) -> None:
+    """ROADMAP "Concurrent serving plane": sustained mixed-workload QPS
+    through the ``Scheduler`` — ``QPS_SCALE`` x the ``retailer.requests``
+    default trace replayed by ``QPS_THREADS`` client threads while a
+    dedicated producer streams deltas, with per-kind p50/p99 latency.
+    The acceptance bar: p99 predict latency stays in read-plane territory
+    (predicts never block on a drain or an in-flight fit — the
+    ``predicts_during_refresh`` counter is the witness), and compatible
+    concurrent fits group-commit into shared vmapped solves."""
+    import threading
+
+    import numpy as np
+
+    from repro.data.retailer import RetailerSpec, generate
+    from repro.serve import FitRequest, ModelServer, Scheduler
+
+    db = generate(RetailerSpec(n_locn=60, n_zip=20, n_date=60, n_sku=80,
+                               seed=0))
+    cfg = SolverConfig(max_iters=50, tol=1e-9, policy="single")
+    n_requests = 40 * QPS_SCALE
+    trace_kw = dict(n_tenants=4, fit_fraction=0.15, predict_rows=64,
+                    n_features=8, seed=2)
+    trace = list(retailer.requests(db, n_requests=n_requests, **trace_kw))
+
+    # untimed warmup: one default-length replay lands every XLA compile
+    # (aggregate pass, per-tenant solver drives, predict) in the
+    # process-wide caches, so the timed run measures steady-state serving
+    ModelServer(Session(db, variable_order()), default_solver=cfg).serve(
+        list(retailer.requests(db, n_requests=40, **trace_kw))
+    )
+
+    server = ModelServer(Session(db, variable_order()), default_solver=cfg)
+    sched = Scheduler(server, flush_pending_max=4)
+
+    # untimed per-tenant warmup THROUGH the timed scheduler: the solver
+    # drive cache is session-keyed (§11), so each tenant's first solve
+    # retraces here, not inside the measured replay — the timed predicts
+    # are then pure read-plane snapshot loads
+    seen: set = set()
+    for req in trace:
+        key = (tuple(req.features), req.response, tuple(req.fds), req.spec)
+        if key in seen:
+            continue
+        seen.add(key)
+        sched.fit(FitRequest(spec=req.spec, features=tuple(req.features),
+                             response=req.response, fds=tuple(req.fds)))
+
+    lat: dict = {"fit": [], "predict": []}
+    lat_mu = threading.Lock()
+    errors: list = []
+
+    def client(shard) -> None:
+        mine: dict = {"fit": [], "predict": []}
+        for req in shard:
+            t0 = time.perf_counter()
+            try:
+                rep = sched.handle(req)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+                return
+            dt = time.perf_counter() - t0
+            # an implicit fit rode the write plane — time it as a fit,
+            # or the read-plane percentiles report write latency
+            implicit = getattr(rep, "implicit_fit", False)
+            kind = (
+                "fit" if isinstance(req, FitRequest) or implicit
+                else "predict"
+            )
+            mine[kind].append(dt)
+        with lat_mu:
+            lat["fit"] += mine["fit"]
+            lat["predict"] += mine["predict"]
+
+    n_deltas = 8
+
+    def producer() -> None:
+        # the generator is stateful (mirrors the relation batch by
+        # batch), so ONE thread submits in generation order
+        for d in retailer.deltas(server.session.db, n_batches=n_deltas,
+                                 frac=0.005, seed=3):
+            from repro.serve import DeltaEvent
+
+            sched.delta(DeltaEvent(d))
+            time.sleep(0.01)
+
+    threads = [
+        threading.Thread(target=client, args=(trace[i::QPS_THREADS],))
+        for i in range(QPS_THREADS)
+    ]
+    threads.append(threading.Thread(target=producer))
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sched.flush()                   # apply any trailing queued deltas
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+
+    def pct(kind: str, q: float) -> float:
+        xs = lat[kind]
+        return float(np.percentile(xs, q)) * 1e3 if xs else 0.0
+
+    st = sched.stats
+    emit(
+        "qps/mixed", wall / n_requests * 1e6,
+        f"requests={n_requests};scale={QPS_SCALE}x;threads={QPS_THREADS};"
+        f"qps={n_requests / wall:.1f};"
+        f"fit_p50_ms={pct('fit', 50):.1f};fit_p99_ms={pct('fit', 99):.1f};"
+        f"predict_p50_ms={pct('predict', 50):.2f};"
+        f"predict_p99_ms={pct('predict', 99):.2f};"
+        f"deltas={n_deltas};commits={st.commits};"
+        f"group_commits={st.group_commits};batched_fits={st.batched_fits};"
+        f"max_batch={st.max_batch};"
+        f"lockfree_predicts={st.lockfree_predicts};"
+        f"predicts_during_refresh={st.predicts_during_refresh};"
+        f"stale_predicts={st.stale_predicts};flushes={st.flushes};"
+        f"publishes={st.publishes};"
+        f"deltas_applied={server.session.stats.deltas_applied}",
+    )
+
+
 def bench_grad_compression(emit) -> None:
     """ROADMAP "Quantized all-reduce benchmark": the int8 error-feedback
     gradient combine (dist.compressed_psum under SolverConfig) vs the f32

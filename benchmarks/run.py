@@ -37,6 +37,7 @@ BENCHES = [
     bench_acdc.bench_delta_refresh,
     bench_acdc.bench_executor_cache,
     bench_acdc.bench_multi_tenant,
+    bench_acdc.bench_qps,
     bench_acdc.bench_grad_compression,
     bench_kernels.bench_sigma_fused,
     bench_kernels.bench_seg_outer,
@@ -76,11 +77,19 @@ def main(argv=None) -> None:
         "--smoke", action="store_true",
         help="fast CI subset: v1-only fragments, cache + kernel benches",
     )
+    ap.add_argument(
+        "--bench", metavar="SUBSTR", default=None,
+        help="run only benches whose name contains SUBSTR (e.g. 'qps')",
+    )
     args = ap.parse_args(argv)
 
     benches = SMOKE_BENCHES if args.smoke else BENCHES
     if args.smoke:
         bench_acdc.FRAGMENTS = ["v1"]
+    if args.bench:
+        benches = [b for b in BENCHES if args.bench in b.__name__]
+        if not benches:
+            sys.exit(f"no bench matches --bench {args.bench!r}")
 
     print("name,us_per_call,derived")
     records: dict = {}

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -248,6 +248,84 @@ def bgd(
         converged=bool(final.converged),
         carry=final.carry,
     )
+
+
+def bgd_batched(
+    loss_fn: Callable,
+    params0_seq: Sequence,
+    batched_args: Sequence = (),
+    loss_args: Sequence = (),
+    max_iters: int = 1000,
+    tol: float = 1e-9,
+    alpha0: float = 1.0,
+    bb_step: bool = True,
+    max_backtracks: int = 50,
+    cache_key=None,
+) -> List[SolverResult]:
+    """One vmapped BGD drive over N same-structured problems — the batched
+    twin of ``bgd`` behind the serve scheduler's fit batching.
+
+    Every problem shares the loss STRUCTURE (``loss_fn``, the unravel, the
+    hyperparameters — exactly what one compiled driver bakes in) but gets
+    its own initial parameters (warm starts) and its own slice of each
+    ``batched_args`` array (leading axis = batch; e.g. per-model ridge
+    lambdas). ``loss_args`` are shared across the batch (the Sigma COO).
+    ``loss_fn(p, *batched_elem, *loss_args)`` is evaluated per element.
+
+    Semantics match N sequential ``bgd`` calls: ``lax.while_loop`` under
+    ``vmap`` predicates the carry update per element, so a converged
+    problem's state freezes while the others keep iterating — results
+    differ from sequential solves only by batched-op reduction order
+    (pinned ≤1e-6 in ``tests/test_scheduler.py``). ``cache_key`` caches
+    the jitted vmapped driver exactly like ``bgd`` (one entry per key;
+    the jit shape cache absorbs batch-size changes, counted as traces).
+    """
+    flats = [ravel_pytree(p) for p in params0_seq]
+    theta0s = jnp.stack([f[0].astype(jnp.float64) for f in flats])
+    unravel = flats[0][1]
+    alpha0s = jnp.full((len(flats),), alpha0, dtype=jnp.float64)
+    bargs = tuple(jnp.asarray(a) for a in batched_args)
+
+    def batched_drive(theta0s, alpha0s, bargs, shared):
+        one = _make_driver(
+            loss_fn, unravel, max_iters, tol, bb_step, max_backtracks,
+            grad_fn=None, stats=_STATS if cache_key is not None else None,
+        )
+
+        def run(theta0, alpha0, be):
+            return one(theta0, alpha0, (), tuple(be) + tuple(shared))
+
+        return jax.vmap(run, in_axes=(0, 0, 0))(theta0s, alpha0s, bargs)
+
+    if cache_key is None:
+        final = batched_drive(theta0s, alpha0s, bargs, tuple(loss_args))
+    else:
+        key = ("batched", cache_key)
+        drive = _DRIVER_CACHE.get(key)
+        if drive is None:
+            _STATS.misses += 1
+            drive = jax.jit(batched_drive)
+            _DRIVER_CACHE[key] = drive
+            while len(_DRIVER_CACHE) > _CACHE_CAPACITY:
+                _DRIVER_CACHE.popitem(last=False)
+                _STATS.evictions += 1
+        else:
+            _STATS.hits += 1
+            _DRIVER_CACHE.move_to_end(key)
+        traces_before = _STATS.traces
+        t0 = time.perf_counter()
+        final = drive(theta0s, alpha0s, bargs, tuple(loss_args))
+        if _STATS.traces > traces_before:
+            _STATS.trace_seconds += time.perf_counter() - t0
+    return [
+        SolverResult(
+            params=unravel(final.theta[i]),
+            loss=float(final.loss[i]),
+            iterations=int(final.it[i]),
+            converged=bool(final.converged[i]),
+        )
+        for i in range(len(flats))
+    ]
 
 
 def shard_sigma_for_bgd(sig, mesh=None):

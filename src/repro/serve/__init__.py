@@ -13,6 +13,12 @@ driveable entrypoint is ``repro.launch.indb_serve`` (``acdc_serve``).
 from .cache import cache_snapshot, choose_victim, utility
 from .metrics import snapshot
 from .refresh import RefreshDaemon, RefreshStats, coalesce
+from .scheduler import (
+    BundleSnapshot,
+    PublishedModel,
+    Scheduler,
+    SchedulerStats,
+)
 from .server import (
     DeltaAck,
     DeltaEvent,
@@ -26,6 +32,7 @@ from .server import (
 )
 
 __all__ = [
+    "BundleSnapshot",
     "DeltaAck",
     "DeltaEvent",
     "FitReply",
@@ -33,8 +40,11 @@ __all__ = [
     "ModelServer",
     "PredictReply",
     "PredictRequest",
+    "PublishedModel",
     "RefreshDaemon",
     "RefreshStats",
+    "Scheduler",
+    "SchedulerStats",
     "ServerStats",
     "Tenant",
     "cache_snapshot",

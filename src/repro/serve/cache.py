@@ -8,14 +8,21 @@ byte budget the policy evicts by lowest *utility* —
     utility(B) = aggregate_seconds(B) / nbytes(B)
 
 seconds of aggregate work saved per resident byte — breaking ties by
-least-recent use. A pinned bundle (user pin or mid-fit refcount,
-``AggregateBundle.pin``) is never a candidate, and neither is anything in
-``protect`` (the bundle just admitted: it must not be evicted to make
-room for itself). Eviction is transparent: the session remembers the
-evicted key and the next ``compile()`` that needs it recompiles from the
-live database (``SessionStats.recompiles``), with refit parity because
-the recompiled tables equal the evicted ones by construction
-(DESIGN.md §10).
+least-recent use. With a cache half-life configured
+(``Session.cache_half_life_s``) the numerator decays exponentially with
+idle time,
+
+    utility(B) = aggregate_seconds(B) * 0.5^(idle/half_life) / nbytes(B)
+
+so a long-idle large bundle ages out ahead of a hot small one even when
+its pass was expensive (DESIGN.md §12). A pinned bundle (user pin or
+mid-fit refcount, ``AggregateBundle.pin``) is never a candidate, and
+neither is anything in ``protect`` (the bundle just admitted: it must
+not be evicted to make room for itself). Eviction is transparent: the
+session remembers the evicted key and the next ``compile()`` that needs
+it recompiles from the live database (``SessionStats.recompiles``), with
+refit parity because the recompiled tables equal the evicted ones by
+construction (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -28,24 +35,36 @@ if TYPE_CHECKING:  # pragma: no cover
 
 
 def utility(
-    bundle: "AggregateBundle", nbytes: Optional[int] = None
+    bundle: "AggregateBundle",
+    nbytes: Optional[int] = None,
+    now: Optional[float] = None,
+    half_life: Optional[float] = None,
 ) -> float:
     """Aggregate seconds saved per resident byte; higher = keep longer.
     ``nbytes`` short-circuits the byte scan when the caller already
-    measured the bundle (``Session.enforce_budget``'s size snapshot)."""
+    measured the bundle (``Session.enforce_budget``'s size snapshot).
+    ``now``/``half_life`` enable idle-time decay: the saved seconds are
+    halved for every ``half_life`` the bundle has sat unused."""
     if nbytes is None:
         nbytes = bundle.nbytes
-    return bundle.aggregate_seconds / max(nbytes, 1)
+    seconds = bundle.aggregate_seconds
+    if half_life is not None and now is not None:
+        idle = max(now - bundle.last_used, 0.0)
+        seconds *= 0.5 ** (idle / half_life)
+    return seconds / max(nbytes, 1)
 
 
 def choose_victim(
     bundles: Sequence["AggregateBundle"],
     protect: Iterable = (),
     sizes: Optional[dict] = None,
+    now: Optional[float] = None,
+    half_life: Optional[float] = None,
 ) -> Optional["AggregateBundle"]:
     """The default session eviction policy (``Session.enforce_budget``).
     ``sizes`` is an optional ``id(bundle) -> nbytes`` snapshot so ranking
-    reuses the caller's measurement instead of rescanning every bundle."""
+    reuses the caller's measurement instead of rescanning every bundle;
+    ``now``/``half_life`` switch the ranking to decayed utility."""
     shielded = set(map(id, protect))
     candidates = [
         b for b in bundles if not b.pinned and id(b) not in shielded
@@ -55,7 +74,10 @@ def choose_victim(
     sizes = sizes or {}
     return min(
         candidates,
-        key=lambda b: (utility(b, sizes.get(id(b))), b.last_used),
+        key=lambda b: (
+            utility(b, sizes.get(id(b)), now=now, half_life=half_life),
+            b.last_used,
+        ),
     )
 
 
@@ -65,10 +87,15 @@ def cache_snapshot(session: "Session") -> List[dict]:
     ``trace_cached`` reports whether the bundle's plan shape is resident
     in the process-wide compiled-executor plane (DESIGN.md §11): an
     evicted bundle with ``trace_cached=True`` recompiles its TABLES but
-    re-enters the cached executable with zero re-tracing."""
+    re-enters the cached executable with zero re-tracing. With a cache
+    half-life configured, ``utility_decayed`` is the score eviction
+    actually ranks by (== ``utility`` otherwise) and ``idle_seconds``
+    the age it decayed over, both on the session's clock."""
     from repro.core.executor import global_plane
 
     plane = global_plane()
+    now = session.clock()
+    half_life = session.cache_half_life_s
     return [
         {
             "features": list(b.key.features),
@@ -79,6 +106,8 @@ def cache_snapshot(session: "Session") -> List[dict]:
             "nbytes": b.nbytes,
             "aggregate_seconds": b.aggregate_seconds,
             "utility": utility(b),
+            "utility_decayed": utility(b, now=now, half_life=half_life),
+            "idle_seconds": max(now - b.last_used, 0.0),
             "last_used": b.last_used,
             "pinned": b.pinned,
             "refreshes": b.refreshes,

@@ -25,8 +25,27 @@ if TYPE_CHECKING:  # pragma: no cover
 
 def snapshot(server: "ModelServer") -> dict:
     sess = server.session
+    st = server.stats
+    fits_total = st.fits + st.implicit_fits + st.refresh_refits
     return {
         "server": dataclasses.asdict(server.stats),
+        # latency/QPS plane: totals and per-op means on the server clock.
+        # fits_total counts EVERY solve — explicit, implicit, refresh
+        # refits — and fit_seconds accumulates over exactly the same set
+        # (ServerStats.fit_seconds), so throughput = total/seconds is
+        # consistent whichever path the solve took
+        "latency": {
+            "fits_total": fits_total,
+            "fit_seconds": st.fit_seconds,
+            "fit_seconds_mean": (
+                st.fit_seconds / fits_total if fits_total else 0.0
+            ),
+            "predicts_total": st.predicts,
+            "predict_seconds": st.predict_seconds,
+            "predict_seconds_mean": (
+                st.predict_seconds / st.predicts if st.predicts else 0.0
+            ),
+        },
         "tenants": {
             t.name: {
                 "spec": t.spec.name,
@@ -41,6 +60,7 @@ def snapshot(server: "ModelServer") -> dict:
                 "compiles": t.compiles,
                 "self_hits": t.self_hits,
                 "cross_hits": t.cross_hits,
+                "fit_seconds": t.fit_seconds,
                 "loss": (
                     float(t.last_fit.loss) if t.last_fit is not None else None
                 ),

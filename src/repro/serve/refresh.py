@@ -25,6 +25,7 @@ to *different* relations commute, so per-relation folding loses nothing.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -145,8 +146,12 @@ class RefreshDaemon:
         self.clock = clock
         self.on_applied = on_applied
         self.stats = RefreshStats()
-        # relation -> ordered [(delta, enqueued_at)]
+        # relation -> ordered [(delta, enqueued_at)]; _mu guards the queue
+        # map and the stats counters so producers may submit concurrently
+        # with an in-flight drain (the scheduler serializes drains
+        # themselves under its write lock, DESIGN.md §12)
         self._queues: Dict[str, List[Tuple[Delta, float]]] = {}
+        self._mu = threading.Lock()
 
     # ------------------------------------------------------------------
     def submit(self, delta: Delta) -> None:
@@ -154,19 +159,22 @@ class RefreshDaemon:
         malformed batch fails at submission, not out of some later
         innocent request's drain. (Set-semantics checks against the live
         relation still run at apply time — the relation may move under
-        the queue.)"""
+        the queue.) Thread-safe: a submit racing a drain lands behind
+        the prefix the drain consumes and survives to the next one."""
         delta.validate(self.session.db)
-        self._queues.setdefault(delta.relation, []).append(
-            (delta, self.clock())
-        )
-        self.stats.batches_enqueued += 1
-        self.stats.rows_enqueued += delta.n_inserts + delta.n_deletes
+        with self._mu:
+            self._queues.setdefault(delta.relation, []).append(
+                (delta, self.clock())
+            )
+            self.stats.batches_enqueued += 1
+            self.stats.rows_enqueued += delta.n_inserts + delta.n_deletes
 
     def discard(self, relation: str) -> int:
         """Drop a relation's queued run (operator escape hatch after a
         failed drain); returns the number of batches discarded."""
-        dropped = len(self._queues.pop(relation, []))
-        self.stats.discarded_batches += dropped
+        with self._mu:
+            dropped = len(self._queues.pop(relation, []))
+            self.stats.discarded_batches += dropped
         return dropped
 
     # ------------------------------------------------------------------
@@ -174,30 +182,45 @@ class RefreshDaemon:
     # ------------------------------------------------------------------
     @property
     def pending_batches(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        with self._mu:
+            return sum(len(q) for q in self._queues.values())
 
     @property
     def pending_rows(self) -> int:
-        return sum(
-            d.n_inserts + d.n_deletes
-            for q in self._queues.values()
-            for d, _ in q
-        )
+        with self._mu:
+            return sum(
+                d.n_inserts + d.n_deletes
+                for q in self._queues.values()
+                for d, _ in q
+            )
 
     def data_age_seconds(self) -> float:
         """Seconds the oldest queued delta has been waiting (0 = fresh)."""
-        oldest = [t for q in self._queues.values() for _, t in q]
+        with self._mu:
+            oldest = [t for q in self._queues.values() for _, t in q]
         return self.clock() - min(oldest) if oldest else 0.0
 
     def metrics(self) -> dict:
-        return {
-            "pending_batches": self.pending_batches,
-            "pending_rows": self.pending_rows,
-            "pending_by_relation": {
+        with self._mu:
+            pending_by_relation = {
                 r: len(q) for r, q in self._queues.items() if q
-            },
-            "data_age_seconds": self.data_age_seconds(),
-            **dataclasses.asdict(self.stats),
+            }
+            pending_batches = sum(pending_by_relation.values())
+            pending_rows = sum(
+                d.n_inserts + d.n_deletes
+                for q in self._queues.values()
+                for d, _ in q
+            )
+            oldest = [t for q in self._queues.values() for _, t in q]
+            stats = dataclasses.asdict(self.stats)
+        return {
+            "pending_batches": pending_batches,
+            "pending_rows": pending_rows,
+            "pending_by_relation": pending_by_relation,
+            "data_age_seconds": (
+                self.clock() - min(oldest) if oldest else 0.0
+            ),
+            **stats,
         }
 
     # ------------------------------------------------------------------
@@ -206,21 +229,27 @@ class RefreshDaemon:
         relation actually patched. Subscribed-tenant refits fire through
         ``on_applied`` (the server wires this to warm ``fit`` calls).
 
-        A relation's queue is removed only AFTER its fold applies: if a
-        poisoned run raises (set-semantics conflict against the live
-        relation, same-sign duplicates), every queued delta for that
-        relation stays in place — nothing is silently lost, the error
-        surfaces to the caller, and an operator can ``discard`` the run.
-        Other relations' folds commute, so whatever applied before the
+        A relation's queue is trimmed only AFTER its fold applies, and
+        only by the prefix this drain consumed — a concurrent ``submit``
+        landing mid-apply stays queued for the next drain instead of
+        being lost with the consumed run. If a poisoned run raises
+        (set-semantics conflict against the live relation, same-sign
+        duplicates), every queued delta for that relation stays in
+        place — nothing is silently lost, the error surfaces to the
+        caller, and an operator can ``discard`` the run. Other
+        relations' folds commute, so whatever applied before the
         failure is consistent."""
-        self.stats.drains += 1
+        with self._mu:
+            self.stats.drains += 1
+            relations = list(self._queues)
         reports: List[DeltaReport] = []
         try:
-            for relation in list(self._queues):
-                entries = self._queues[relation]
-                if not entries:
-                    del self._queues[relation]
-                    continue
+            for relation in relations:
+                with self._mu:
+                    entries = list(self._queues.get(relation, ()))
+                    if not entries:
+                        self._queues.pop(relation, None)
+                        continue
                 raw = [d for d, _ in entries]
                 try:
                     folded = coalesce(raw, db=self.session.db)
@@ -230,23 +259,30 @@ class RefreshDaemon:
                         applied = self.session.apply_delta(folded)
                         dt = self.clock() - t0
                 except Exception:
-                    self.stats.failed_drains += 1
+                    with self._mu:
+                        self.stats.failed_drains += 1
                     raise               # queue intact — retry or discard
-                del self._queues[relation]
-                self.stats.batches_coalesced += len(raw) - 1
-                raw_rows = sum(d.n_inserts + d.n_deletes for d in raw)
-                self.stats.rows_cancelled += raw_rows - (
-                    folded.n_inserts + folded.n_deletes
-                )
+                with self._mu:
+                    q = self._queues.get(relation)
+                    if q is not None:
+                        del q[: len(entries)]
+                        if not q:
+                            del self._queues[relation]
+                    self.stats.batches_coalesced += len(raw) - 1
+                    raw_rows = sum(d.n_inserts + d.n_deletes for d in raw)
+                    self.stats.rows_cancelled += raw_rows - (
+                        folded.n_inserts + folded.n_deletes
+                    )
                 if applied is None:
                     continue            # the run cancelled itself entirely
                 reports.append(applied)
-                self.stats.applies += 1
-                self.stats.refresh_seconds_total += dt
-                self.stats.refresh_seconds_last = dt
-                self.stats.refresh_seconds_max = max(
-                    self.stats.refresh_seconds_max, dt
-                )
+                with self._mu:
+                    self.stats.applies += 1
+                    self.stats.refresh_seconds_total += dt
+                    self.stats.refresh_seconds_last = dt
+                    self.stats.refresh_seconds_max = max(
+                        self.stats.refresh_seconds_max, dt
+                    )
         finally:
             # the finale runs even when a later relation's fold raised:
             # whatever DID apply must still enforce the byte budget

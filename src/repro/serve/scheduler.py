@@ -1,0 +1,350 @@
+"""The concurrent serving plane: lock-free snapshot predicts, group-
+committed batched fits, opportunistic refresh flushes (DESIGN.md §12).
+
+``ModelServer`` serializes everything behind its refresh drain; the
+``Scheduler`` splits the plane in two:
+
+* a **read plane** — ``predict`` loads ONE reference to an immutable
+  ``BundleSnapshot`` (version counter + every tenant's published model
+  params) and scores against it without taking any lock. A predict
+  therefore never blocks on a refresh drain or an in-flight fit, and can
+  never observe a torn state: it sees exactly the models of some fully
+  published version. ``predict_join`` with explicit rows reads only the
+  model's parameter-space blocks and the immutable schema, so a drain
+  swapping relation tables mid-predict is invisible to it.
+
+* a **write plane** — fits and refresh drains run under one write lock
+  with *group commit*: a fit request enqueues itself and whoever holds
+  the lock services EVERYTHING pending — drains the delta queues once,
+  collapses compatible fits into vmapped batched solves
+  (``ModelServer.fit_batch``), then atomically publishes a new snapshot
+  (a single reference assignment) before waking the waiters. Concurrent
+  fits thus pay one drain and (when compatible) one solver drive between
+  them, instead of a drain each.
+
+Delta events enqueue without touching the write plane (the daemon's
+queues are thread-safe); with ``flush_pending_max`` set, a submit that
+finds the queue deep past the threshold opportunistically takes the
+write lock — if free — and flushes, bounding staleness without ever
+stalling the producer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.session.bundle import fd_key
+
+from .server import (
+    DeltaAck,
+    DeltaEvent,
+    FitReply,
+    FitRequest,
+    ModelServer,
+    PredictReply,
+    PredictRequest,
+    TenantKey,
+)
+
+from repro.core.predict import predict_join
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishedModel:
+    """One tenant's model as of some snapshot version: everything a
+    predict needs, nothing that pins bundle tables."""
+
+    tenant: str
+    model: object                  # repro.core.glm.Model
+    params: object
+    fitted_at_delta: int
+    loss: float
+
+
+@dataclasses.dataclass(frozen=True)
+class BundleSnapshot:
+    """An immutable, fully-published view of the serving state. Readers
+    hold the object, never the server — its maps are frozen at publish
+    and a new version is installed by a single reference assignment."""
+
+    version: int
+    deltas_applied: int            # session delta epoch at publish
+    published: Dict[TenantKey, PublishedModel]
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    fits: int = 0                  # fit requests through the write plane
+    predicts: int = 0
+    deltas: int = 0
+    commits: int = 0               # write-lock acquisitions that serviced
+    group_commits: int = 0         # commits that serviced > 1 fit
+    batched_fits: int = 0          # fits that rode a shared vmapped solve
+    max_batch: int = 1             # largest commit batch observed
+    publishes: int = 0
+    lockfree_predicts: int = 0     # predicts served off the snapshot only
+    implicit_fits: int = 0         # predicts that routed via the write plane
+    predicts_during_refresh: int = 0   # proof predicts don't block on drains
+    flushes: int = 0               # opportunistic delta-queue flushes
+    stale_predicts: int = 0
+
+
+class _PendingFit:
+    """A queued fit: the waiter blocks on ``done``; the committing leader
+    fills ``reply`` or ``error`` BEFORE setting it."""
+
+    __slots__ = ("request", "done", "reply", "error")
+
+    def __init__(self, request: FitRequest):
+        self.request = request
+        self.done = threading.Event()
+        self.reply: Optional[FitReply] = None
+        self.error: Optional[BaseException] = None
+
+
+class Scheduler:
+    """Thread-safe facade over a ``ModelServer`` (one per server)."""
+
+    def __init__(
+        self,
+        server: ModelServer,
+        on_publish: Optional[Callable[[BundleSnapshot], None]] = None,
+        flush_pending_max: Optional[int] = None,
+    ):
+        self.server = server
+        self.on_publish = on_publish
+        self.flush_pending_max = flush_pending_max
+        self.stats = SchedulerStats()
+        # write plane: ONE lock serializes session mutation (fits, drains,
+        # publishes); _pending is the group-commit queue behind it
+        self._write = threading.RLock()
+        self._pending: List[_PendingFit] = []
+        self._pending_mu = threading.Lock()
+        # counter updates from concurrent readers (predicts/deltas) — a
+        # leaf lock, never held while taking any other
+        self._stats_mu = threading.Lock()
+        self._refreshing = False       # best-effort gauge, set under _write
+        self._snapshot = BundleSnapshot(
+            version=0,
+            deltas_applied=server.session.stats.deltas_applied,
+            published={},
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def snapshot(self) -> BundleSnapshot:
+        """The current fully-published snapshot (a plain reference read)."""
+        return self._snapshot
+
+    def handle(self, request):
+        """Typed dispatch, mirroring ``ModelServer.handle``."""
+        if isinstance(request, DeltaEvent):
+            return self.delta(request)
+        if isinstance(request, FitRequest):
+            return self.fit(request)
+        if isinstance(request, PredictRequest):
+            return self.predict(request)
+        raise TypeError(f"unknown request type {type(request).__name__}")
+
+    def serve(self, requests: Sequence) -> List:
+        return [self.handle(r) for r in requests]
+
+    # ------------------------------------------------------------------
+    # write plane
+    # ------------------------------------------------------------------
+    def fit(self, request: FitRequest) -> FitReply:
+        """Enqueue and group-commit: whichever waiter takes the write
+        lock first becomes leader and services every queued fit — drain
+        once, batch compatible solves, publish once — then wakes the
+        group. A waiter that finds its request already serviced (a
+        leader beat it to the lock) returns without ever holding it."""
+        with self._stats_mu:
+            self.stats.fits += 1
+        pending = _PendingFit(request)
+        with self._pending_mu:
+            self._pending.append(pending)
+        with self._write:
+            if not pending.done.is_set():
+                self._commit()
+        pending.done.wait()
+        if pending.error is not None:
+            raise pending.error
+        return pending.reply
+
+    def flush(self) -> BundleSnapshot:
+        """Drain pending deltas/fits and publish, returning the new
+        snapshot (the bench/CLI barrier before reading final state)."""
+        with self._write:
+            self._commit()
+            return self._snapshot
+
+    def _commit(self) -> None:
+        """One write-plane turn; caller MUST hold ``_write``. Wakes every
+        waiter it services strictly AFTER the snapshot installs, so a
+        fit's caller can immediately predict against its own result."""
+        with self._pending_mu:
+            batch, self._pending = self._pending, []
+        with self._stats_mu:
+            self.stats.commits += 1
+            if len(batch) > 1:
+                self.stats.group_commits += 1
+            self.stats.max_batch = max(self.stats.max_batch, len(batch))
+        try:
+            self._refreshing = True
+            try:
+                self.server.refresh.drain()
+            finally:
+                self._refreshing = False
+            replies = (
+                self.server.fit_batch([p.request for p in batch])
+                if batch
+                else []
+            )
+            self._publish()
+            for p, r in zip(batch, replies):
+                if isinstance(r, BaseException):
+                    p.error = r
+                else:
+                    p.reply = r
+                    if r.batched > 1:
+                        with self._stats_mu:
+                            self.stats.batched_fits += 1
+        except BaseException as e:
+            # a poisoned drain (or publish failure) fails THIS group —
+            # the delta queue keeps the bad run for discard()/retry, and
+            # waiters must never deadlock on an abandoned event
+            for p in batch:
+                if p.reply is None and p.error is None:
+                    p.error = e
+            if not batch:
+                raise
+        finally:
+            for p in batch:
+                p.done.set()
+
+    def _publish(self) -> None:
+        """Install a new immutable snapshot; caller holds ``_write``."""
+        published = {
+            key: PublishedModel(
+                tenant=t.name,
+                model=t.last_fit.model,
+                params=t.last_fit.params,
+                fitted_at_delta=t.fitted_at_delta,
+                loss=float(t.last_fit.loss),
+            )
+            for key, t in self.server.tenants.items()
+            if t.last_fit is not None
+        }
+        snap = BundleSnapshot(
+            version=self._snapshot.version + 1,
+            deltas_applied=self.server.session.stats.deltas_applied,
+            published=published,
+        )
+        self._snapshot = snap          # the atomic publish: one ref swap
+        with self._stats_mu:
+            self.stats.publishes += 1
+        if self.on_publish is not None:
+            self.on_publish(snap)
+
+    # ------------------------------------------------------------------
+    # read plane
+    # ------------------------------------------------------------------
+    def predict(self, request: PredictRequest) -> PredictReply:
+        """Score against the current snapshot without locking. An unknown
+        tenant routes ONE implicit fit through the write plane, then
+        re-reads the (now ≥ that fit's) snapshot."""
+        missing = [a for a in request.features if a not in request.rows]
+        if missing:
+            raise ValueError(
+                f"predict rows missing feature columns {missing}"
+            )
+        key: TenantKey = (
+            tuple(request.features),
+            request.response,
+            fd_key(request.fds),
+            request.spec,
+        )
+        snap = self._snapshot          # the one read that matters
+        pm = snap.published.get(key)
+        implicit = pm is None
+        if implicit:
+            self.fit(
+                FitRequest(
+                    spec=request.spec,
+                    features=tuple(request.features),
+                    response=request.response,
+                    fds=tuple(request.fds),
+                    subscribe=request.subscribe,
+                )
+            )
+            snap = self._snapshot      # the commit published our tenant
+            pm = snap.published[key]
+            with self._stats_mu:
+                self.stats.implicit_fits += 1
+        clock = self.server.clock
+        t0 = clock()
+        preds = predict_join(
+            pm.model, pm.params, self.server.session.db, join=request.rows
+        )
+        dt = clock() - t0
+        stale = pm.fitted_at_delta < snap.deltas_applied
+        with self._stats_mu:
+            self.stats.predicts += 1
+            if not implicit:
+                self.stats.lockfree_predicts += 1
+            if self._refreshing:
+                self.stats.predicts_during_refresh += 1
+            if stale:
+                self.stats.stale_predicts += 1
+        return PredictReply(
+            tenant=pm.tenant,
+            predictions=preds,
+            implicit_fit=implicit,
+            stale=stale,
+            seconds=dt,
+            snapshot_version=snap.version,
+        )
+
+    # ------------------------------------------------------------------
+    # delta plane
+    # ------------------------------------------------------------------
+    def delta(self, event: DeltaEvent) -> DeltaAck:
+        """Enqueue without blocking on the write plane (the daemon's
+        queues are thread-safe); optionally flush when the backlog
+        crosses ``flush_pending_max`` AND the write lock is free — the
+        producer never stalls behind an in-flight commit."""
+        refresh = self.server.refresh
+        refresh.submit(event.delta)
+        with self._stats_mu:
+            self.stats.deltas += 1
+        if (
+            self.flush_pending_max is not None
+            and refresh.pending_batches >= self.flush_pending_max
+            and self._write.acquire(blocking=False)
+        ):
+            try:
+                with self._stats_mu:
+                    self.stats.flushes += 1
+                self._commit()
+            finally:
+                self._write.release()
+        return DeltaAck(
+            relation=event.delta.relation,
+            pending_batches=refresh.pending_batches,
+            pending_rows=refresh.pending_rows,
+        )
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> dict:
+        """Scheduler counters + snapshot version, plain builtins."""
+        with self._stats_mu:
+            stats = dataclasses.asdict(self.stats)
+        snap = self._snapshot
+        return {
+            **stats,
+            "snapshot_version": snap.version,
+            "published_tenants": len(snap.published),
+            "snapshot_deltas_applied": snap.deltas_applied,
+        }

@@ -63,6 +63,8 @@ class FitRequest:
     warm: bool = True        # warm-start from the tenant's previous fit
     subscribe: bool = False  # refit automatically after refresh drains
     pin: bool = False        # pin the tenant's bundle against eviction
+    once: bool = False       # one-shot workload: compile on probation and
+                             # never admit a bundle over the byte budget
 
 
 @dataclasses.dataclass(eq=False)
@@ -95,6 +97,7 @@ class FitReply:
     cross_tenant: bool        # served off a bundle another tenant compiled
     seconds: float
     solver_cache_hit: bool = False  # BGD drive reused, zero re-tracing
+    batched: int = 1          # size of the vmapped solve this fit rode
 
     @property
     def loss(self) -> float:
@@ -108,6 +111,7 @@ class PredictReply:
     implicit_fit: bool
     stale: bool               # params predate the latest applied delta
     seconds: float
+    snapshot_version: int = -1  # scheduler snapshot served (-1: direct)
 
 
 @dataclasses.dataclass
@@ -148,6 +152,7 @@ class Tenant:
     compiles: int = 0              # aggregate passes this tenant paid for
     self_hits: int = 0             # fits served off a bundle it compiled
     cross_hits: int = 0            # fits served off another tenant's bundle
+    fit_seconds: float = 0.0       # EVERY solve, incl. refresh refits
 
 
 @dataclasses.dataclass
@@ -163,6 +168,12 @@ class ServerStats:
     cross_tenant_hits: int = 0
     stale_predicts: int = 0
     solver_cache_hits: int = 0    # fits whose BGD drive was cache-served
+    batched_fits: int = 0         # fits that rode a shared vmapped solve
+    admission_rejects: int = 0    # probation bundles over the byte budget
+    # wall-clock per request kind, so metrics QPS math is consistent:
+    # fit_seconds covers EVERY solve (explicit, implicit, refresh refits)
+    fit_seconds: float = 0.0
+    predict_seconds: float = 0.0
 
 
 class ModelServer:
@@ -180,6 +191,11 @@ class ModelServer:
             session.byte_budget = byte_budget
         self.default_solver = default_solver or SolverConfig()
         self.clock = clock
+        # one clock for the whole serving plane: bundle last_used stamps,
+        # TTL/decay aging and the fit/predict timers must agree, so the
+        # session adopts the server's (possibly injected, deterministic)
+        # clock (DESIGN.md §12)
+        session.clock = clock
         self.stats = ServerStats()
         self.tenants: Dict[TenantKey, Tenant] = {}
         self.refresh = RefreshDaemon(
@@ -244,14 +260,79 @@ class ModelServer:
         if req.subscribe:
             tenant.subscribed = True
         warm = tenant.last_fit if req.warm else None
-        reply = self._fit_tenant(tenant, warm_from=warm)
+        reply = self._fit_tenant(
+            tenant, warm_from=warm, admit=not self._probation(tenant, req)
+        )
         tenant.fits += 1
         self.stats.fits += 1
         if req.pin:
             self._pin_tenant_bundle(tenant, reply.result.bundle)
         return reply
 
-    def _fit_tenant(self, tenant: Tenant, warm_from=None) -> FitReply:
+    def _probation(self, tenant: Tenant, req: FitRequest) -> bool:
+        """Admission control (DESIGN.md §12): compile on probation — fit
+        off the fresh bundle but only admit it into the cache afterwards,
+        and never when it alone exceeds the byte budget — for workloads
+        with no evidence of reuse: an explicit one-shot (``once``) or a
+        first-time tenant. A repeat/subscribed/pinned tenant admits
+        normally, and without a byte budget there is nothing to protect."""
+        if self.session.byte_budget is None or req.pin:
+            return False
+        if req.once:
+            return True
+        return (
+            tenant.fits == 0
+            and tenant.implicit_fits == 0
+            and not tenant.subscribed
+        )
+
+    def _maybe_admit(self, bundle) -> None:
+        """Retro-admit a probation bundle unless it exceeds the budget."""
+        sess = self.session
+        if bundle in sess.bundles:
+            return                  # subsumption hit: already resident
+        if (
+            sess.byte_budget is not None
+            and bundle.nbytes > sess.byte_budget
+        ):
+            self.stats.admission_rejects += 1
+            return
+        sess.admit(bundle)
+
+    def _account_bundle(self, tenant: Tenant, bkey, compiled: bool) -> bool:
+        """Ownership/reuse bookkeeping shared by every fit path; returns
+        whether the fit was a cross-tenant hit."""
+        if compiled:
+            self._owners[bkey] = tenant.name
+            tenant.compiles += 1
+            self.stats.compiles += 1
+            return False
+        owner = self._owners.setdefault(bkey, tenant.name)
+        cross = owner != tenant.name
+        if cross:
+            tenant.cross_hits += 1
+            self.stats.cross_tenant_hits += 1
+        else:
+            tenant.self_hits += 1
+            self.stats.self_hits += 1
+        return cross
+
+    def _record_fit(self, tenant: Tenant, result: FitResult, dt: float):
+        """Per-fit tenant state + timing (EVERY path: explicit fits,
+        implicit fits, refresh refits, batched fits — so
+        ``serve.metrics.snapshot`` QPS math stays consistent)."""
+        tenant.last_fit = dataclasses.replace(
+            result, bundle=None, sigma=None, plan=None
+        )
+        tenant.fitted_at_delta = self.session.stats.deltas_applied
+        tenant.fit_seconds += dt
+        self.stats.fit_seconds += dt
+        if tenant.pinned_bundle is not None:
+            self._pin_tenant_bundle(tenant, result.bundle)
+
+    def _fit_tenant(
+        self, tenant: Tenant, warm_from=None, admit: bool = True
+    ) -> FitReply:
         """The shared fit path (explicit requests and refresh refits)."""
         sess = self.session
         passes_before = sess.stats.aggregate_passes
@@ -264,33 +345,17 @@ class ModelServer:
             fds=tenant.fds,
             solver=tenant.solver or self.default_solver,
             warm_from=warm_from,
+            admit=admit,
         )
         dt = self.clock() - t0
         compiled = sess.stats.aggregate_passes > passes_before
         solver_hit = sess.stats.solver_hits > solver_hits_before
         if solver_hit:
             self.stats.solver_cache_hits += 1
-        bkey = result.bundle.key
-        if compiled:
-            self._owners[bkey] = tenant.name
-            tenant.compiles += 1
-            self.stats.compiles += 1
-            cross = False
-        else:
-            owner = self._owners.setdefault(bkey, tenant.name)
-            cross = owner != tenant.name
-            if cross:
-                tenant.cross_hits += 1
-                self.stats.cross_tenant_hits += 1
-            else:
-                tenant.self_hits += 1
-                self.stats.self_hits += 1
-        tenant.last_fit = dataclasses.replace(
-            result, bundle=None, sigma=None, plan=None
-        )
-        tenant.fitted_at_delta = sess.stats.deltas_applied
-        if tenant.pinned_bundle is not None:
-            self._pin_tenant_bundle(tenant, result.bundle)
+        cross = self._account_bundle(tenant, result.bundle.key, compiled)
+        if not admit:
+            self._maybe_admit(result.bundle)
+        self._record_fit(tenant, result, dt)
         return FitReply(
             tenant=tenant.name,
             result=result,
@@ -307,6 +372,112 @@ class ModelServer:
             tenant.pinned_bundle.unpin()
         bundle.pin()
         tenant.pinned_bundle = bundle
+
+    # ------------------------------------------------------------------
+    def fit_batch(self, requests: Sequence[FitRequest]) -> List:
+        """Service N fit requests, collapsing compatible ones — same
+        (features, response, fds, spec shape, solver), different ``lam``
+        and warm starts — into ONE vmapped BGD solve
+        (``Session.fit_batched``, DESIGN.md §12). Returns one entry per
+        request IN ORDER: a ``FitReply``, or the exception that request
+        raised — so a group-committing caller (the scheduler) can
+        re-raise to the right waiter without poisoning the batch."""
+        out: List = [None] * len(requests)
+        groups: Dict[tuple, List[int]] = {}
+        for i, req in enumerate(requests):
+            try:
+                tenant = self._tenant(req)
+                if req.solver is not None:
+                    tenant.solver = req.solver
+                if req.subscribe:
+                    tenant.subscribed = True
+                gkey = (
+                    tuple(req.features),
+                    req.response,
+                    fd_key(req.fds),
+                    dataclasses.replace(req.spec, lam=0.0),
+                    tenant.solver or self.default_solver,
+                )
+            except Exception as e:          # malformed request
+                out[i] = e
+                continue
+            groups.setdefault(gkey, []).append(i)
+        for idxs in groups.values():
+            if len(idxs) == 1:
+                i = idxs[0]
+                try:
+                    out[i] = self._fit(requests[i])
+                except Exception as e:
+                    out[i] = e
+                continue
+            try:
+                self._fit_group([requests[i] for i in idxs], idxs, out)
+            except Exception as e:
+                for i in idxs:
+                    if out[i] is None:
+                        out[i] = e
+        return out
+
+    def _fit_group(self, reqs, idxs, out) -> None:
+        """One eligible group through the batched solve; falls back to
+        sequential fits when the session declines the batch."""
+        sess = self.session
+        tenants = [self._tenant(r) for r in reqs]
+        probation = all(
+            self._probation(t, r) for r, t in zip(reqs, tenants)
+        )
+        passes_before = sess.stats.aggregate_passes
+        hits_before = sess.stats.solver_hits
+        t0 = self.clock()
+        results = sess.fit_batched(
+            [r.spec for r in reqs],
+            tenants[0].features,
+            tenants[0].response,
+            fds=tenants[0].fds,
+            solver=tenants[0].solver or self.default_solver,
+            warm_from=[
+                t.last_fit if r.warm else None
+                for r, t in zip(reqs, tenants)
+            ],
+            admit=not probation,
+        )
+        if results is None:
+            # ineligible batch (compressed gradients / sharded COO)
+            for i, r in zip(idxs, reqs):
+                try:
+                    out[i] = self._fit(r)
+                except Exception as e:
+                    out[i] = e
+            return
+        share = (self.clock() - t0) / len(reqs)
+        compiled_any = sess.stats.aggregate_passes > passes_before
+        solver_hit = sess.stats.solver_hits > hits_before
+        if probation:
+            self._maybe_admit(results[0].bundle)
+        for k, (i, req, tenant, result) in enumerate(
+            zip(idxs, reqs, tenants, results)
+        ):
+            # the first member pays for (and owns) any fresh pass; the
+            # rest ride it exactly like sequential subsumption hits
+            compiled = compiled_any and k == 0
+            cross = self._account_bundle(tenant, result.bundle.key, compiled)
+            self._record_fit(tenant, result, share)
+            tenant.fits += 1
+            self.stats.fits += 1
+            self.stats.batched_fits += 1
+            if solver_hit:
+                self.stats.solver_cache_hits += 1
+            if req.pin:
+                self._pin_tenant_bundle(tenant, result.bundle)
+            out[i] = FitReply(
+                tenant=tenant.name,
+                result=result,
+                compiled=compiled,
+                cross_tenant=cross,
+                seconds=share,
+                solver_cache_hit=solver_hit,
+                batched=len(reqs),
+            )
 
     # ------------------------------------------------------------------
     def _predict(self, req: PredictRequest) -> PredictReply:
@@ -338,6 +509,7 @@ class ModelServer:
         dt = self.clock() - t0
         tenant.predicts += 1
         self.stats.predicts += 1
+        self.stats.predict_seconds += dt
         return PredictReply(
             tenant=tenant.name,
             predictions=preds,

@@ -70,7 +70,11 @@ class AggregateBundle:
     executor_signature: object = None
     sigma_builds: int = 0
     refreshes: int = 0                 # delta patches merged into .result
-    last_used: float = 0.0             # monotonic timestamp of last serve
+    # last-serve timestamp on Session.clock (injectable — servers install
+    # their own, tests a fake). Read by the aging policies (serve.cache):
+    # idle time decays the eviction utility under cache_half_life_s, and
+    # cache_ttl_s hard-expires on it even without byte pressure (§12)
+    last_used: float = 0.0
     pins: int = 0                      # pin refcount — see pin()/unpin()
     _sigmas: Dict[WorkloadKey, SigmaCSY] = dataclasses.field(
         default_factory=dict, repr=False

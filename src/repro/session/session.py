@@ -71,6 +71,7 @@ class SessionStats:
     evictions: int = 0             # bundles dropped under byte pressure
     bytes_evicted: int = 0
     recompiles: int = 0            # misses whose key was previously evicted
+    ttl_evictions: int = 0         # bundles hard-expired by cache_ttl_s
     # compiled-executor plane (core.executor, DESIGN.md §11): this
     # session's share of the process-wide compile cache traffic
     executor_hits: int = 0         # aggregate passes served by a cached trace
@@ -117,6 +118,9 @@ class Session:
         byte_budget: Optional[int] = None,
         eviction_policy=None,
         kernel_policy=None,
+        clock=time.monotonic,
+        cache_half_life_s: Optional[float] = None,
+        cache_ttl_s: Optional[float] = None,
     ):
         self.db = db
         self.order = order
@@ -130,12 +134,22 @@ class Session:
         # solver-cache scope: drivers bake data-dependent closures (FD
         # penalty, FaMa interactions), so keys are per-session by serial
         self._serial = next(_SESSION_SERIAL)
-        # bundle admission/eviction (repro.serve.cache, DESIGN.md §10):
+        # bundle admission/eviction (repro.serve.cache, DESIGN.md §10/§12):
         # byte_budget caps sum(b.nbytes for b in bundles); eviction_policy
         # is a callable (bundles, protect) -> victim bundle or None —
         # default is the cost-aware utility rule in repro.serve.cache.
+        # ``clock`` stamps bundle last_used and drives cache aging — the
+        # server injects its own so eviction tests run on deterministic
+        # time. ``cache_half_life_s`` exponentially decays a bundle's
+        # aggregate_seconds with idle time in the utility ranking (a hot
+        # small bundle outlives a long-idle large one); ``cache_ttl_s``
+        # hard-expires unpinned bundles idle past the TTL on every
+        # ``enforce_budget`` even without byte pressure.
         self.byte_budget = byte_budget
         self.eviction_policy = eviction_policy
+        self.clock = clock
+        self.cache_half_life_s = cache_half_life_s
+        self.cache_ttl_s = cache_ttl_s
         self._evicted_keys: set = set()
 
     # ------------------------------------------------------------------
@@ -158,9 +172,17 @@ class Session:
         fds=(),
         degree: int = 2,
         squares: bool = True,
+        admit: bool = True,
     ) -> AggregateBundle:
         """Return a bundle covering the requested workload, running the
-        factorized aggregate pass only when no compiled bundle subsumes it."""
+        factorized aggregate pass only when no compiled bundle subsumes it.
+
+        ``admit=False`` compiles on probation: the fresh bundle is fully
+        usable but NOT entered into the cache — the caller inspects its
+        ``nbytes`` and either calls :meth:`admit` or lets it drop, so a
+        one-shot oversized workload cannot evict the resident hot set
+        (DESIGN.md §12 admission control). A subsumption hit is returned
+        as usual regardless of ``admit``."""
         fds = tuple(fds)
         feats = self._reduced(features, fds)
         wl = build_workload(self.db, feats, response, degree, squares=squares)
@@ -168,7 +190,7 @@ class Session:
         for b in self.bundles:
             if b.key.fds == fk and b.covers(wl):
                 self.stats.bundle_hits += 1
-                b.last_used = time.monotonic()
+                b.last_used = self.clock()
                 return b
         self.stats.bundle_misses += 1
 
@@ -205,7 +227,16 @@ class Session:
             fds=fds,
             executor_signature=plane.last_signature,
         )
-        bundle.last_used = time.monotonic()
+        bundle.last_used = self.clock()
+        if admit:
+            self.admit(bundle)
+        return bundle
+
+    def admit(self, bundle: AggregateBundle) -> None:
+        """Enter a probationary bundle (``compile(admit=False)``) into the
+        cache: recompile bookkeeping, registration, budget enforcement."""
+        if bundle in self.bundles:
+            return
         if bundle.key in self._evicted_keys:
             # transparent recompile of a previously evicted bundle: same
             # data -> same tables, so refit parity is structural
@@ -213,7 +244,6 @@ class Session:
             self.stats.recompiles += 1
         self.bundles.append(bundle)
         self.enforce_budget(protect=(bundle,))
-        return bundle
 
     # ------------------------------------------------------------------
     def bundle_bytes(self) -> int:
@@ -243,13 +273,29 @@ class Session:
         one just compiled must not be evicted to make room for itself.
         Bundle sizes are measured ONCE per call and the snapshot is
         reused for both the running total and the default policy's
-        utility ranking (nbytes walks every table and cached view)."""
+        utility ranking (nbytes walks every table and cached view).
+
+        Cache aging (DESIGN.md §12): with ``cache_ttl_s`` set, unpinned
+        bundles idle past the TTL are hard-expired first — even under no
+        byte pressure; with ``cache_half_life_s`` set, the default victim
+        ranking decays each bundle's ``aggregate_seconds`` by idle time,
+        so a long-idle large bundle ages out ahead of a hot small one."""
+        evicted: List[AggregateBundle] = []
+        now = self.clock()
+        if self.cache_ttl_s is not None:
+            for b in list(self.bundles):
+                if b in protect or b.pinned:
+                    continue
+                if now - b.last_used > self.cache_ttl_s:
+                    self.evict(b)
+                    self.stats.ttl_evictions += 1
+                    evicted.append(b)
         if self.byte_budget is None:
-            return []
+            return evicted
         sizes = {id(b): b.nbytes for b in self.bundles}
         total = sum(sizes.values())
         if total <= self.byte_budget:
-            return []
+            return evicted
         if self.eviction_policy is not None:
             def pick(protect):
                 return self.eviction_policy(self.bundles, protect=protect)
@@ -259,9 +305,9 @@ class Session:
 
             def pick(protect):
                 return choose_victim(
-                    self.bundles, protect=protect, sizes=sizes
+                    self.bundles, protect=protect, sizes=sizes,
+                    now=now, half_life=self.cache_half_life_s,
                 )
-        evicted: List[AggregateBundle] = []
         while total > self.byte_budget:
             victim = pick(protect)
             if victim is None:
@@ -328,6 +374,7 @@ class Session:
         response: str,
         fds=(),
         bundle: Optional[AggregateBundle] = None,
+        admit: bool = True,
     ):
         """Aggregate stage only: ``(model, sigma, workload, bundle)`` with
         the spec's Sigma view assembled from a (possibly shared) bundle."""
@@ -337,7 +384,7 @@ class Session:
         if bundle is None:
             bundle = self.compile(
                 features, response, fds, degree=spec.degree,
-                squares=spec.squares,
+                squares=spec.squares, admit=admit,
             )
         elif bundle.key.fds != fd_key(fds):
             # a plain bundle's tables can cover an FD-reduced workload, but
@@ -367,10 +414,11 @@ class Session:
         solver: Optional[SolverConfig] = None,
         bundle: Optional[AggregateBundle] = None,
         warm_from: Optional[FitResult] = None,
+        admit: bool = True,
     ) -> FitResult:
         solver = solver or SolverConfig()
         model, sig, wl, bundle = self.materialize(
-            spec, features, response, fds, bundle
+            spec, features, response, fds, bundle, admit=admit
         )
         # a mid-fit bundle must survive any budget enforcement triggered
         # while the solver runs (e.g. a refresh drain growing the tables)
@@ -491,6 +539,141 @@ class Session:
             aggregate_seconds=bundle.aggregate_seconds,
             converge_seconds=conv_s,
         )
+
+    # ------------------------------------------------------------------
+    def fit_batched(
+        self,
+        specs: Sequence[ModelSpec],
+        features: Sequence[str],
+        response: str,
+        fds=(),
+        solver: Optional[SolverConfig] = None,
+        bundle: Optional[AggregateBundle] = None,
+        warm_from: Optional[Sequence[Optional[FitResult]]] = None,
+        admit: bool = True,
+    ) -> Optional[List[FitResult]]:
+        """Collapse N same-structure fits (same spec shape, features,
+        response, fds, solver — different ``lam`` / warm starts) into ONE
+        vmapped BGD solve through the cached executor plane (DESIGN.md
+        §12). ``lam`` enters the batched loss as a vmapped argument —
+        ``Model.loss`` is lam-separable — so specs must agree on
+        everything else (mixed structure raises). Returns ``None`` when
+        the batch is ineligible — compressed-gradient or sharded
+        execution — and the caller falls back to sequential fits.
+        Per-element semantics are exact: jax.vmap of ``lax.while_loop``
+        predicates each element's carry update on its own convergence,
+        so batched results match sequential fits to ≤1e-6."""
+        specs = list(specs)
+        if not specs:
+            return []
+        solver = solver or SolverConfig()
+        base = dataclasses.replace(specs[0], lam=0.0)
+        for s in specs[1:]:
+            if dataclasses.replace(s, lam=0.0) != base:
+                raise ValueError(
+                    "fit_batched needs same-structure specs (only lam "
+                    f"may differ): {specs[0]} vs {s}"
+                )
+        if warm_from is not None and len(warm_from) != len(specs):
+            raise ValueError("warm_from must carry one FitResult per spec")
+        if solver.grad_compression is not None:
+            return None             # compressed grad_fn closes over Sigma
+        if solver.policy == ExecutionPolicy.SHARDED_COO or (
+            solver.policy == ExecutionPolicy.AUTO and jax.device_count() > 1
+        ):
+            return None             # sharded COO layout is per-solve
+        model, sig_exec, wl, bundle = self.materialize(
+            specs[0], features, response, fds, bundle, admit=admit
+        )
+        bundle.pin()
+        try:
+            params0 = [
+                self._warm_params(model, warm_from[k])
+                if warm_from is not None and warm_from[k] is not None
+                else model.init_params()
+                for k in range(len(specs))
+            ]
+            lams = jnp.asarray([s.lam for s in specs], dtype=jnp.float64)
+            # keyed like _fit_pinned's driver but under a distinct tag:
+            # the batched drive vmaps over (theta0, alpha0, lam) and must
+            # never collide with the scalar driver for the same workload
+            cache_key = (
+                "bgd_batch",
+                self._serial,
+                bundle.key,
+                workload_key(wl),
+                base,
+                solver,
+                self.stats.deltas_applied,
+                sig_exec.space.total,
+            )
+            loss_args = (
+                sig_exec.rows,
+                sig_exec.cols,
+                sig_exec.vals,
+                sig_exec.c,
+                jnp.asarray(sig_exec.sy, dtype=jnp.float64),
+            )
+            sig_template = dataclasses.replace(
+                sig_exec, rows=None, cols=None, vals=None, c=None, sy=0.0
+            )
+
+            def loss_fn(p, lam, rows, cols, vals, c, sy):
+                s = dataclasses.replace(
+                    sig_template, rows=rows, cols=cols, vals=vals, c=c,
+                    sy=sy,
+                )
+                g = model.g(p)
+                return (
+                    0.5 * s.quad(g)
+                    - jnp.dot(g, s.c)
+                    + 0.5 * s.sy
+                    + 0.5 * lam * model.omega(p)
+                )
+
+            sstats = solver_mod.solver_cache_stats()
+            before = (
+                sstats.hits, sstats.misses, sstats.traces,
+                sstats.trace_seconds,
+            )
+            t0 = time.perf_counter()
+            sols = solver_mod.bgd_batched(
+                loss_fn,
+                params0,
+                batched_args=(lams,),
+                loss_args=loss_args,
+                max_iters=solver.max_iters,
+                tol=solver.tol,
+                alpha0=solver.alpha0,
+                bb_step=solver.bb_step,
+                cache_key=cache_key,
+            )
+            conv_s = time.perf_counter() - t0
+            self.stats.solver_hits += sstats.hits - before[0]
+            self.stats.solver_misses += sstats.misses - before[1]
+            self.stats.solver_traces += sstats.traces - before[2]
+            self.stats.solver_trace_seconds += (
+                sstats.trace_seconds - before[3]
+            )
+            self.stats.fits += len(specs)
+            share = conv_s / len(specs)
+            return [
+                FitResult(
+                    spec=spec,
+                    model=dataclasses.replace(model, lam=spec.lam),
+                    params=sol.params,
+                    sigma=sig_exec,
+                    workload=wl,
+                    plan=bundle.plan,
+                    solver=sol,
+                    bundle=bundle,
+                    aggregate_seconds=bundle.aggregate_seconds,
+                    converge_seconds=share,
+                )
+                for spec, sol in zip(specs, sols)
+            ]
+        finally:
+            bundle.unpin()
 
     # ------------------------------------------------------------------
     def fit_many(
