@@ -118,7 +118,7 @@ def bench_materialize_baseline(emit) -> None:
         t0 = time.perf_counter()
         H, y, _ = one_hot_design_matrix(db, join, wl)
         S, c, _ = sigma_c_sy_oracle(H, y)
-        theta = closed_form_ridge(S, c, 1e-2)
+        closed_form_ridge(S, c, 1e-2)
         solve_s = time.perf_counter() - t0
         emit(
             f"baseline-onehot/{name}", (mat_s + solve_s) * 1e6,

@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""acdc-lint CLI: run the repo's invariant linter over files/trees.
+
+    python scripts/acdc_lint.py src [tests benchmarks ...]
+
+Exit status 1 when any diagnostic fires. Pure stdlib — runs without
+jax, so CI lints before installing the accelerator stack. Rules and
+the suppression syntax (`# acdc: ignore[ACDC00N]`) are documented in
+``repro.check.lint.rules`` and DESIGN.md §13.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.check.lint import lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="acdc-lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument(
+        "--rule", action="append", default=None,
+        help="only report these rule ids (repeatable)",
+    )
+    args = ap.parse_args(argv)
+    diags = lint_paths(args.paths)
+    if args.rule:
+        keep = set(args.rule)
+        diags = [d for d in diags if d.rule in keep]
+    for d in diags:
+        print(d)
+    n = len(diags)
+    print(f"acdc-lint: {n} finding{'s' if n != 1 else ''} "
+          f"in {len(args.paths)} path(s)")
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

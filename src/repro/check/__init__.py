@@ -1,0 +1,97 @@
+"""``repro.check`` — the static-analysis plane (DESIGN.md §13).
+
+Two layers:
+
+  * **plan/IR verifier** (``check.plan``): abstract interpretation over
+    compiled ``EnginePlan``s — shapes, dtypes (promote-to->=f32),
+    segment-id bounds, child topology, monomial key arity, executor-
+    cache identity, solver-key epoch. Wired into ``engine.execute`` /
+    ``ExecutorPlane.execute`` behind the ``check=`` knob below.
+  * **acdc-lint** (``check.lint``): an AST linter encoding the repo's
+    own bug classes as rules ACDC001–ACDC005 (see each rule's
+    docstring). Pure stdlib — ``scripts/acdc_lint.py`` runs without jax.
+
+The ``check=`` knob
+-------------------
+``"off"``    no verification (library default; env ``ACDC_CHECK``
+             overrides).
+``"cheap"``  structural checks (O(plan metadata)) on an executor-cache
+             MISS only — a hit means a structurally identical plan
+             already verified. This is the tier-1 test default
+             (tests/conftest.py), so plan verification rides the whole
+             suite's coverage at ~zero cost.
+``"strict"`` full verification (adds O(n_exp) index-bound scans) on
+             EVERY execute, plus solver-cache-key verification before
+             each fit.
+
+This module keeps its imports lazy: the mode knob and the lint layer
+must be importable without jax (CI's static-analysis job lints before
+installing the accelerator stack).
+"""
+
+from __future__ import annotations
+
+import os
+
+MODES = ("off", "cheap", "strict")
+
+_DEFAULT_MODE = None
+
+
+def default_mode() -> str:
+    """The process-wide check mode (env ``ACDC_CHECK`` or "off")."""
+    global _DEFAULT_MODE
+    if _DEFAULT_MODE is None:
+        mode = os.environ.get("ACDC_CHECK", "off")
+        _DEFAULT_MODE = mode if mode in MODES else "off"
+    return _DEFAULT_MODE
+
+
+def set_default_mode(mode: str) -> str:
+    """Set the process-wide check mode; returns the previous one."""
+    global _DEFAULT_MODE
+    if mode not in MODES:
+        raise ValueError(f"check mode must be one of {MODES}, got {mode!r}")
+    prev = default_mode()
+    _DEFAULT_MODE = mode
+    return prev
+
+
+def resolve_mode(check=None) -> str:
+    """Resolve a per-call ``check=`` argument against the default."""
+    if check is None:
+        return default_mode()
+    if check not in MODES:
+        raise ValueError(f"check must be one of {MODES} or None, got {check!r}")
+    return check
+
+
+_PLAN_EXPORTS = frozenset({
+    "Diagnostic", "PlanVerificationError",
+    "verify_plan", "verify_bundle", "verify_solver_key", "verify_session",
+    "check_plan", "check_bundle", "check_solver_key",
+})
+_LINT_EXPORTS = frozenset({"LintDiagnostic", "lint_source", "lint_paths"})
+_CORRUPT_EXPORTS = frozenset({"CORPUS", "run_corpus"})
+
+
+def __getattr__(name: str):
+    if name in _PLAN_EXPORTS:
+        from . import plan as _plan
+
+        return getattr(_plan, name)
+    if name in _LINT_EXPORTS:
+        from . import lint as _lint
+
+        return getattr(_lint, name)
+    if name in _CORRUPT_EXPORTS:
+        from . import corrupt as _corrupt
+
+        return getattr(_corrupt, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "MODES", "default_mode", "set_default_mode", "resolve_mode",
+    *sorted(_PLAN_EXPORTS), *sorted(_LINT_EXPORTS), *sorted(_CORRUPT_EXPORTS),
+]

@@ -1,0 +1,247 @@
+"""Seeded plan-corruption corpus for the verifier (mutation testing).
+
+Each corruption deep-copies a pristine compiled bundle's plan (or
+re-derives a poisoned cache key), applies ONE targeted mutation drawn
+from a real bug class, and returns the diagnostics the verifier emits on
+the mutant. ``tests/test_check.py`` asserts every mutant is rejected
+with its expected rule id and that the pristine bundle verifies clean;
+``acdc_check --self-test`` runs the same corpus so CI exercises the
+verifier without pytest.
+
+Corruptions are deterministic: targets are picked by the first plan step
+matching a structural predicate, never by randomness.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Callable, List
+
+from .plan import (
+    Diagnostic,
+    verify_bundle,
+    verify_plan,
+    verify_solver_key,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Corruption:
+    name: str
+    expected_rule: str
+    #: one-line description of the bug class being simulated
+    bug: str
+    apply: Callable
+
+
+def _first_sig_plan(plan, pred):
+    for var in plan.order:
+        for sp in plan.node_sigs[var].values():
+            if pred(var, sp):
+                return var, sp
+    raise AssertionError("corpus predicate matched no plan step")
+
+
+def _copy_plan(bundle):
+    return copy.deepcopy(bundle.plan)
+
+
+# --- the mutants -------------------------------------------------------
+
+
+def dtype_downgrade(session, bundle) -> List[Diagnostic]:
+    import jax.numpy as jnp
+
+    return verify_plan(bundle.plan, dtype=jnp.float16, level="full")
+
+
+def out_of_range_segment_id(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+    _, sp = _first_sig_plan(plan, lambda v, sp: sp.n_exp > 0)
+    sp.out_id[0] = sp.n_out + 7
+    return verify_plan(plan, level="full")
+
+
+def src_row_out_of_bounds(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+    var, sp = _first_sig_plan(plan, lambda v, sp: sp.n_exp > 0)
+    sp.src_row[0] = plan.fz.nodes[var].n_rows + 1
+    return verify_plan(plan, level="full")
+
+
+def swapped_child_order(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+    _, sp = _first_sig_plan(plan, lambda v, sp: len(sp.child_col) >= 2)
+    items = list(sp.child_col.items())
+    sp.child_col = dict(reversed(items))
+    return verify_plan(plan, level="full")
+
+
+def child_column_overflow(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+
+    def has_child(v, sp):
+        return bool(sp.child_col)
+
+    _, sp = _first_sig_plan(plan, has_child)
+    c, (ccols, csig) = next(iter(sp.child_col.items()))
+    child_e = len(plan.node_sigs[c][csig].entry_cols)
+    bad = ccols.copy()
+    bad[0] = child_e + 3
+    sp.child_col[c] = (bad, csig)
+    return verify_plan(plan, level="full")
+
+
+def child_gather_out_of_bounds(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+    _, sp = _first_sig_plan(
+        plan, lambda v, sp: any(len(g) for g in sp.child_gather.values())
+    )
+    c = next(c for c, g in sp.child_gather.items() if len(g))
+    csig = sp.child_col[c][1]
+    child_n = plan.node_sigs[c][csig].n_out
+    sp.child_gather[c][0] = child_n + 5
+    return verify_plan(plan, level="full")
+
+
+def ctx_count_drift(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+    _, sp = _first_sig_plan(plan, lambda v, sp: len(sp.count_per_ctx) > 0)
+    sp.count_per_ctx[0] += 1
+    return verify_plan(plan, level="full")
+
+
+def dropped_group_by_key(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+    _, sp = _first_sig_plan(plan, lambda v, sp: len(sp.sig) > 0)
+    sp.out_keys = {
+        v: a for v, a in sp.out_keys.items() if v != sp.sig[0]
+    }
+    return verify_plan(plan, level="full")
+
+
+def power_overflow(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+    var, sp = _first_sig_plan(plan, lambda v, sp: len(sp.p0) > 0)
+    sp.p0 = sp.p0.copy()
+    sp.p0[0] = plan.registers.max_power[var] + 3
+    return verify_plan(plan, level="full")
+
+
+def out_ctx_disorder(session, bundle) -> List[Diagnostic]:
+    plan = _copy_plan(bundle)
+    _, sp = _first_sig_plan(
+        plan,
+        lambda v, sp: sp.n_out >= 2 and sp.out_ctx[0] != sp.out_ctx[-1],
+    )
+    sp.out_ctx = sp.out_ctx.copy()
+    sp.out_ctx[0], sp.out_ctx[-1] = sp.out_ctx[-1], sp.out_ctx[0]
+    return verify_plan(plan, level="full")
+
+
+def executor_signature_mismatch(session, bundle) -> List[Diagnostic]:
+    mutant = dataclasses.replace(
+        bundle, executor_signature=("tampered", 0xBAD)
+    )
+    return verify_bundle(mutant, session=session, level="structural")
+
+
+def stale_epoch_solver_key(session, bundle) -> List[Diagnostic]:
+    from repro.session.bundle import workload_key
+
+    key = (
+        "bgd", session._serial, bundle.key,
+        workload_key(bundle.workload), None, None,
+        session.stats.deltas_applied + 1, 0,
+    )
+    return verify_solver_key(key, session, bundle=bundle)
+
+
+def cross_session_solver_key(session, bundle) -> List[Diagnostic]:
+    from repro.session.bundle import workload_key
+
+    key = (
+        "bgd_batch", session._serial + 1, bundle.key,
+        workload_key(bundle.workload), None, None,
+        session.stats.deltas_applied, 0,
+    )
+    return verify_solver_key(key, session, bundle=bundle)
+
+
+CORPUS = (
+    Corruption(
+        "dtype_downgrade", "P101",
+        "f16 accumulate would lose the kernels' >=f32 promote rule",
+        dtype_downgrade,
+    ),
+    Corruption(
+        "out_of_range_segment_id", "P106",
+        "padded executor drops out-of-range segment ids silently",
+        out_of_range_segment_id,
+    ),
+    Corruption(
+        "src_row_out_of_bounds", "P109",
+        "clamped lambda gather reads the wrong node row",
+        src_row_out_of_bounds,
+    ),
+    Corruption(
+        "swapped_child_order", "P102",
+        "positional entry/child pairing broken by permuted child dict",
+        swapped_child_order,
+    ),
+    Corruption(
+        "child_column_overflow", "P103",
+        "entry points past the child plan's matrix width",
+        child_column_overflow,
+    ),
+    Corruption(
+        "child_gather_out_of_bounds", "P110",
+        "expansion gathers a child output that does not exist",
+        child_gather_out_of_bounds,
+    ),
+    Corruption(
+        "ctx_count_drift", "P111",
+        "parent expansion counts disagree with actual child outputs",
+        ctx_count_drift,
+    ),
+    Corruption(
+        "dropped_group_by_key", "P107",
+        "Sigma block would join group-by tables on the wrong arity",
+        dropped_group_by_key,
+    ),
+    Corruption(
+        "power_overflow", "P104",
+        "lambda power column beyond the table width clamps silently",
+        power_overflow,
+    ),
+    Corruption(
+        "out_ctx_disorder", "P112",
+        "non-contiguous ctx ranges break parent [start,count) slices",
+        out_ctx_disorder,
+    ),
+    Corruption(
+        "executor_signature_mismatch", "B203",
+        "bundle would recompile into a different cached executable",
+        executor_signature_mismatch,
+    ),
+    Corruption(
+        "stale_epoch_solver_key", "S303",
+        "PR 5 stale-FD-penalty class: driver keyed to pre-delta epoch",
+        stale_epoch_solver_key,
+    ),
+    Corruption(
+        "cross_session_solver_key", "S302",
+        "driver with baked closures reused across sessions",
+        cross_session_solver_key,
+    ),
+)
+
+
+def run_corpus(session, bundle):
+    """Yield ``(corruption, diagnostics, ok)`` per corpus entry, where
+    ``ok`` means the expected rule id fired on the mutant."""
+    for c in CORPUS:
+        diags = c.apply(session, bundle)
+        ok = any(d.rule == c.expected_rule for d in diags)
+        yield c, diags, ok

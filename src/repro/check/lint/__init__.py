@@ -1,0 +1,22 @@
+"""acdc-lint — AST rules for this repo's invariants (pure stdlib).
+
+Rules (see each ``check_acdcNNN`` docstring in ``rules.py`` for the
+motivating bug and regression notes):
+
+  ACDC001  jit/pmap closure capture of Sigma-typed locals
+  ACDC002  shared-state mutation outside the declared ``# lock:`` +
+           static lock-acquisition-order check
+  ACDC003  raw float bit-views as join/dict keys (use float_key_bits)
+  ACDC004  Pallas kernels: literal ``interpret`` defaults, sub-f32
+           accumulators
+  ACDC005  threading.Thread without daemon=/join ownership
+"""
+
+from .rules import (  # noqa: F401
+    LintDiagnostic,
+    RULES,
+    lint_paths,
+    lint_source,
+)
+
+__all__ = ["LintDiagnostic", "RULES", "lint_paths", "lint_source"]

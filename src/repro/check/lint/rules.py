@@ -1,0 +1,716 @@
+"""acdc-lint: AST rules encoding this repo's own bug classes.
+
+Each rule is a function ``check_acdcNNN(mod, out)`` over a parsed
+module; diagnostics carry the rule id so CI output maps straight to the
+DESIGN.md §13 invariant catalogue. Pure stdlib (``ast`` + ``re``) — the
+CI static-analysis job lints before any accelerator stack is imported.
+
+Suppression: a trailing ``# acdc: ignore`` comment suppresses every
+rule on that line; ``# acdc: ignore[ACDC001]`` (comma-separable)
+suppresses named rules only. Use sparingly and say why next to it.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LintDiagnostic:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+_IGNORE_RE = re.compile(r"#\s*acdc:\s*ignore(?:\[([A-Z0-9,\s]+)\])?")
+_LOCK_RE = re.compile(r"#\s*lock:\s*(.+?)\s*$")
+_HELD_RE = re.compile(r"held\((\w+)\)")
+_EXTERNAL_RE = re.compile(r"external\((.*)\)")
+
+
+class _Module:
+    """Parsed module + the shared lookups every rule needs."""
+
+    def __init__(self, tree: ast.Module, lines: List[str], path: str):
+        self.tree = tree
+        self.lines = lines
+        self.path = path
+        self.parents: Dict[ast.AST, ast.AST] = {
+            c: p for p in ast.walk(tree) for c in ast.iter_child_nodes(p)
+        }
+
+    def enclosing_function(self, node) -> Optional[ast.FunctionDef]:
+        n = self.parents.get(node)
+        while n is not None:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return n
+            n = self.parents.get(n)
+        return None
+
+    def suppressed(self, lineno: int, rule: str) -> bool:
+        if 1 <= lineno <= len(self.lines):
+            m = _IGNORE_RE.search(self.lines[lineno - 1])
+            if m:
+                if m.group(1) is None:
+                    return True
+                return rule in {r.strip() for r in m.group(1).split(",")}
+        return False
+
+    def emit(self, out: List[LintDiagnostic], node, rule: str,
+             message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        if not self.suppressed(line, rule):
+            out.append(LintDiagnostic(
+                self.path, line, getattr(node, "col_offset", 0), rule,
+                message,
+            ))
+
+    def lock_comment(self, lineno: int, end_lineno: Optional[int] = None
+                     ) -> Optional[str]:
+        """The ``# lock: ...`` payload on any source line of a statement."""
+        for ln in range(lineno, (end_lineno or lineno) + 1):
+            if 1 <= ln <= len(self.lines):
+                m = _LOCK_RE.search(self.lines[ln - 1])
+                if m:
+                    return m.group(1)
+        return None
+
+
+def _shallow(node) -> Iterable[ast.AST]:
+    """All descendants of ``node`` WITHOUT entering nested scopes."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _self_attr(node) -> Optional[str]:
+    """If the expression is rooted at ``self.<attr>``, return ``attr``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        if isinstance(node, ast.Attribute):
+            if isinstance(node.value, ast.Name) and node.value.id == "self":
+                return node.attr
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        else:
+            node = node.func
+    return None
+
+
+def _callee_name(func) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+# ----------------------------------------------------------------------
+# ACDC001 — jit/pmap closure capture of Sigma/monomial-table locals
+# ----------------------------------------------------------------------
+
+SIGMA_PRODUCERS = {
+    "sigma_for", "sharded_sigma_for", "build_sigma", "distribute_sigma",
+    "shard_sigma_for_bgd", "shard_coo", "SigmaCSY",
+}
+
+
+def _is_jit_expr(node) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in ("jit", "pmap")
+    if isinstance(node, ast.Attribute):
+        return node.attr in ("jit", "pmap")
+    return False
+
+
+def _decorator_is_jit(dec) -> bool:
+    if _is_jit_expr(dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if _is_jit_expr(dec.func):
+            return True
+        f = _callee_name(dec.func)
+        if f == "partial":
+            return bool(dec.args) and _is_jit_expr(dec.args[0])
+    return False
+
+
+def _free_names(fn) -> Set[str]:
+    bound: Set[str] = set()
+    a = fn.args
+    for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+        bound.add(arg.arg)
+    if a.vararg:
+        bound.add(a.vararg.arg)
+    if a.kwarg:
+        bound.add(a.kwarg.arg)
+    loads: Set[str] = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name):
+            if isinstance(n.ctx, ast.Load):
+                loads.add(n.id)
+            else:
+                bound.add(n.id)
+        elif isinstance(n, ast.arg):
+            bound.add(n.arg)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)) and n is not fn:
+            bound.add(n.name)
+    return loads - bound
+
+
+def check_acdc001(mod: _Module, out: List[LintDiagnostic]) -> None:
+    """ACDC001: a function passed to ``jax.jit``/``jax.pmap`` closes over
+    a Sigma/monomial-table-typed local. Closure constants are baked into
+    the trace, so the compiled executable silently carries the DATA of
+    the Sigma it was first traced with — the exact bug class the PR 5
+    solver compile cache exists to prevent. Sigma must enter jitted code
+    as ARGUMENTS (see ``core/solver.bgd``'s ``loss_args`` and the
+    executor plane's buffer arguments).
+
+    Regression note (PR 5): ``Session._fit_pinned`` strips the COO
+    arrays off the captured template (``dataclasses.replace(sig_exec,
+    rows=None, ...)``) and threads them through ``loss_args`` precisely
+    so its cached driver never violates this rule.
+    """
+    for fn in [n for n in ast.walk(mod.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        # sigma-typed locals of THIS scope (fixpoint over aliases)
+        sigma: Set[str] = set()
+        assigns = [n for n in _shallow(fn)
+                   if isinstance(n, (ast.Assign, ast.AnnAssign))]
+        for _ in range(3):
+            changed = False
+            for st in assigns:
+                value = st.value
+                if value is None:
+                    continue
+                produces = False
+                for n in ast.walk(value):
+                    if isinstance(n, ast.Call):
+                        cn = _callee_name(n.func)
+                        if cn in SIGMA_PRODUCERS:
+                            produces = True
+                        elif cn == "replace" and n.args and isinstance(
+                            n.args[0], ast.Name
+                        ) and n.args[0].id in sigma:
+                            produces = True
+                if not produces and isinstance(value, ast.Name) \
+                        and value.id in sigma:
+                    produces = True
+                if produces:
+                    targets = (st.targets if isinstance(st, ast.Assign)
+                               else [st.target])
+                    for t in targets:
+                        for el in ast.walk(t):
+                            if isinstance(el, ast.Name) \
+                                    and el.id not in sigma:
+                                sigma.add(el.id)
+                                changed = True
+            if not changed:
+                break
+        if not sigma:
+            continue
+
+        nested = {n.name: n for n in _shallow(fn)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        jitted: List[ast.FunctionDef] = []
+        for g in nested.values():
+            if any(_decorator_is_jit(d) for d in g.decorator_list):
+                jitted.append(g)
+        for n in _shallow(fn):
+            if isinstance(n, ast.Call) and _is_jit_expr(n.func) and n.args:
+                a0 = n.args[0]
+                if isinstance(a0, ast.Name) and a0.id in nested:
+                    jitted.append(nested[a0.id])
+        for g in jitted:
+            captured = sorted(_free_names(g) & sigma)
+            for name in captured:
+                mod.emit(
+                    out, g, "ACDC001",
+                    f"jitted function {g.name!r} closes over Sigma-typed "
+                    f"local {name!r}; pass it as an argument instead — "
+                    f"closure-captured Sigma data is baked into the "
+                    f"trace and poisons any compile cache keyed on "
+                    f"structure (PR 5 cache-key rule)",
+                )
+
+
+# ----------------------------------------------------------------------
+# ACDC002 — shared-state mutation outside the declared lock
+# ----------------------------------------------------------------------
+
+MUTATORS = {
+    "append", "extend", "insert", "pop", "popitem", "clear", "update",
+    "setdefault", "add", "discard", "remove", "sort", "appendleft",
+    "popleft",
+}
+
+
+def _is_lock_ctor(value) -> bool:
+    return isinstance(value, ast.Call) and _callee_name(value.func) in (
+        "Lock", "RLock",
+    )
+
+
+def check_acdc002(mod: _Module, out: List[LintDiagnostic]) -> None:
+    """ACDC002: shared mutable state of a lock-owning class mutated
+    outside its designated lock, plus a static lock-acquisition-order
+    check.
+
+    Convention (DESIGN.md §13): in ``__init__``, a trailing comment
+    ``self.attr = ...  # lock: <name>`` declares that every mutation of
+    ``self.attr`` outside ``__init__`` must happen lexically inside
+    ``with self.<name>:`` or in a method whose ``def`` line carries
+    ``# lock: held(<name>)`` (a caller-holds contract, e.g.
+    ``Scheduler._commit``). ``# lock: external(<text>)`` documents
+    state serialized by a lock the linter cannot see (``ModelServer``
+    under the scheduler's write plane). In any class that OWNS a
+    ``threading.Lock``/``RLock`` attribute, an attribute mutated from a
+    method without a declaration is flagged as unannotated shared
+    state. Nested ``with self.<A>: ... with self.<B>:`` blocks add the
+    edge A->B to a per-class acquisition graph; a cycle is flagged.
+
+    Regression note (PR 6): ``RefreshDaemon.drain`` once trimmed its
+    queue by a re-read length outside the lock window that snapshotted
+    the entries — a concurrent ``submit`` between the two lost deltas
+    silently. The consumed-prefix trim that fixed it lives entirely
+    inside ``with self._mu`` and is annotated under this rule; the
+    scheduler's snapshot/pending/stats attributes got their
+    declarations in the same sweep (PR 7).
+    """
+    for cls in [n for n in ast.walk(mod.tree)
+                if isinstance(n, ast.ClassDef)]:
+        init = next(
+            (n for n in cls.body
+             if isinstance(n, ast.FunctionDef) and n.name == "__init__"),
+            None,
+        )
+        if init is None:
+            continue
+        lock_attrs: Set[str] = set()
+        declared: Dict[str, str] = {}       # attr -> lock name
+        external: Set[str] = set()
+        for st in _shallow(init):
+            if not isinstance(st, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = (st.targets if isinstance(st, ast.Assign)
+                       else [st.target])
+            attrs = [a for a in (_self_attr(t) for t in targets) if a]
+            if not attrs:
+                continue
+            if st.value is not None and _is_lock_ctor(st.value):
+                lock_attrs.update(attrs)
+                continue
+            payload = mod.lock_comment(
+                st.lineno, getattr(st, "end_lineno", st.lineno)
+            )
+            if payload is None:
+                continue
+            if _EXTERNAL_RE.match(payload):
+                external.update(attrs)
+                continue
+            # the lock name is the leading identifier; trailing prose
+            # ("# lock: _write (best-effort gauge)") is commentary
+            m = re.match(r"(\w+)", payload)
+            if m is None:
+                continue
+            name = m.group(1)
+            for a in attrs:
+                declared[a] = name
+        for a, name in declared.items():
+            if name not in lock_attrs:
+                mod.emit(
+                    out, init, "ACDC002",
+                    f"attribute {a!r} declared under lock {name!r}, but "
+                    f"{cls.name}.__init__ never assigns self.{name} = "
+                    f"threading.Lock()/RLock()",
+                )
+        if not lock_attrs:
+            continue
+
+        edges: Set[Tuple[str, str]] = set()
+        flagged_undeclared: Set[str] = set()
+
+        def report(attr: str, site, held: Set[str],
+                   method: ast.FunctionDef) -> None:
+            if attr in external or attr in lock_attrs:
+                return
+            if attr in declared:
+                if declared[attr] not in held:
+                    mod.emit(
+                        out, site, "ACDC002",
+                        f"{cls.name}.{method.name} mutates self.{attr} "
+                        f"outside its designated lock "
+                        f"{declared[attr]!r} (declare the method "
+                        f"'# lock: held({declared[attr]})' if the "
+                        f"caller holds it)",
+                    )
+            elif attr not in flagged_undeclared:
+                flagged_undeclared.add(attr)
+                mod.emit(
+                    out, site, "ACDC002",
+                    f"{cls.name}.{method.name} mutates unannotated "
+                    f"shared state self.{attr}; {cls.name} owns locks "
+                    f"{sorted(lock_attrs)} — declare '# lock: <name>' "
+                    f"(or external(...)) on its __init__ assignment",
+                )
+
+        def scan_exprs(nodes, held: Set[str], aliases: Dict[str, str],
+                       method: ast.FunctionDef) -> None:
+            """Flag mutating method calls within expression subtrees."""
+            for root in nodes:
+                if root is None:
+                    continue
+                for call in ast.walk(root):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    if not (isinstance(call.func, ast.Attribute)
+                            and call.func.attr in MUTATORS):
+                        continue
+                    a = _self_attr(call.func.value)
+                    if a is None:
+                        base = call.func.value
+                        while isinstance(base,
+                                         (ast.Attribute, ast.Subscript)):
+                            base = base.value
+                        if isinstance(base, ast.Name) \
+                                and base.id in aliases:
+                            a = aliases[base.id]
+                    if a:
+                        report(a, call, held, method)
+
+        def visit_stmts(stmts, held: Set[str], aliases: Dict[str, str],
+                        method: ast.FunctionDef) -> None:
+            for st in stmts:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                    continue
+                if isinstance(st, ast.With):
+                    got = set()
+                    for item in st.items:
+                        la = _self_attr(item.context_expr)
+                        if la in lock_attrs:
+                            got.add(la)
+                            for h in held:
+                                if h != la:
+                                    edges.add((h, la))
+                    visit_stmts(st.body, held | got, aliases, method)
+                    continue
+                if isinstance(st, ast.Try):
+                    for blk in (st.body, st.orelse, st.finalbody):
+                        visit_stmts(blk, held, aliases, method)
+                    for h in st.handlers:
+                        visit_stmts(h.body, held, aliases, method)
+                    continue
+                if isinstance(st, (ast.If, ast.While)):
+                    scan_exprs([st.test], held, aliases, method)
+                    visit_stmts(st.body, held, aliases, method)
+                    visit_stmts(st.orelse, held, aliases, method)
+                    continue
+                if isinstance(st, ast.For):
+                    scan_exprs([st.iter], held, aliases, method)
+                    visit_stmts(st.body, held, aliases, method)
+                    visit_stmts(st.orelse, held, aliases, method)
+                    continue
+                # simple statement: no nested statements inside
+                if isinstance(st, (ast.Assign, ast.AnnAssign,
+                                   ast.AugAssign)):
+                    targets = (
+                        st.targets if isinstance(st, ast.Assign)
+                        else [st.target]
+                    )
+                    for t in targets:
+                        for el in ast.walk(t):
+                            a = _self_attr(el)
+                            if a:
+                                report(a, st, held, method)
+                    # alias tracking: q = self._queues... binds a local
+                    # view whose mutation is the attr's mutation
+                    if isinstance(st, ast.Assign) and st.value is not None:
+                        src_attr = _self_attr(st.value)
+                        if src_attr in declared or src_attr in external:
+                            for t in st.targets:
+                                if isinstance(t, ast.Name):
+                                    aliases[t.id] = src_attr
+                if isinstance(st, ast.Delete):
+                    for t in st.targets:
+                        a = _self_attr(t)
+                        if a:
+                            report(a, st, held, method)
+                        for el in ast.walk(t):
+                            if isinstance(el, ast.Name) \
+                                    and el.id in aliases:
+                                report(aliases[el.id], st, held, method)
+                scan_exprs([st], held, aliases, method)
+
+        for meth in cls.body:
+            if not isinstance(meth, ast.FunctionDef) \
+                    or meth.name == "__init__":
+                continue
+            held: Set[str] = set()
+            payload = mod.lock_comment(meth.lineno)
+            if payload:
+                m = _HELD_RE.match(payload)
+                if m and m.group(1) in lock_attrs:
+                    held.add(m.group(1))
+            visit_stmts(meth.body, held, {}, meth)
+
+        # acquisition-order cycles over the per-class edge set
+        graph: Dict[str, Set[str]] = {}
+        for a, b in edges:
+            graph.setdefault(a, set()).add(b)
+
+        def reaches(src: str, dst: str, seen: Set[str]) -> bool:
+            if src == dst:
+                return True
+            seen.add(src)
+            return any(
+                n not in seen and reaches(n, dst, seen)
+                for n in graph.get(src, ())
+            )
+
+        for a, b in sorted(edges):
+            if reaches(b, a, set()):
+                mod.emit(
+                    out, cls, "ACDC002",
+                    f"lock acquisition order cycle in {cls.name}: "
+                    f"{a} -> {b} nests both ways — a concurrent pair "
+                    f"of these paths deadlocks",
+                )
+
+
+# ----------------------------------------------------------------------
+# ACDC003 — raw float bit-views as join/dict keys
+# ----------------------------------------------------------------------
+
+CANONICALIZERS = {"float_key_bits", "key_col", "_as_key_col"}
+
+
+def check_acdc003(mod: _Module, out: List[LintDiagnostic]) -> None:
+    """ACDC003: a float column turned into a key by a raw bit-pattern
+    view instead of ``schema.float_key_bits``. Raw ``.view(np.int64)``
+    splits ``-0.0`` from ``0.0`` and every NaN payload from every other
+    — the PR 3 bug where identical join keys landed in different
+    aggregate groups. The ONLY legitimate bit view lives inside
+    ``schema.float_key_bits`` (which collapses signed zero by adding
+    0.0 and canonicalizes NaN first); everything else must call it (or
+    ``schema.key_col``).
+
+    Regression note (PR 3): ``engine._as_key_col``/``_semijoin``/
+    ``make_database`` were all converted to the canonicalizer;
+    ``tests/test_float_keys.py`` pins the -0.0/NaN semantics.
+    """
+    for call in [n for n in ast.walk(mod.tree) if isinstance(n, ast.Call)]:
+        func = call.func
+        if isinstance(func, ast.Attribute) and func.attr == "view" \
+                and len(call.args) == 1:
+            arg = call.args[0]
+            is_i64 = (
+                (isinstance(arg, ast.Attribute) and arg.attr == "int64")
+                or (isinstance(arg, ast.Constant) and arg.value == "int64")
+            )
+            if not is_i64:
+                continue
+            fn = mod.enclosing_function(call)
+            if fn is not None and fn.name in CANONICALIZERS:
+                continue
+            mod.emit(
+                out, call, "ACDC003",
+                "raw float bit-view as key: .view(int64) keeps -0.0 != "
+                "0.0 and distinct NaN payloads distinct; use "
+                "schema.float_key_bits (canonicalizes both) instead",
+            )
+        elif _callee_name(func) in ("_row_key", "_rows_view"):
+            for n in ast.walk(call):
+                if isinstance(n, ast.Call) and isinstance(
+                    n.func, ast.Attribute
+                ) and n.func.attr == "astype":
+                    if any(
+                        isinstance(a, ast.Attribute)
+                        and a.attr in ("float64", "float32")
+                        for a in n.args
+                    ):
+                        mod.emit(
+                            out, n, "ACDC003",
+                            "float-typed column fed to a row-key builder "
+                            "without canonicalization; wrap it in "
+                            "schema.key_col / float_key_bits first",
+                        )
+
+
+# ----------------------------------------------------------------------
+# ACDC004 — Pallas kernels: sub-f32 accumulators, literal interpret
+# ----------------------------------------------------------------------
+
+
+def _param_defaults(fn) -> Dict[str, ast.AST]:
+    pos = fn.args.posonlyargs + fn.args.args
+    defaults: Dict[str, ast.AST] = {}
+    for arg, d in zip(pos[len(pos) - len(fn.args.defaults):],
+                      fn.args.defaults):
+        defaults[arg.arg] = d
+    for arg, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if d is not None:
+            defaults[arg.arg] = d
+    return defaults
+
+
+def check_acdc004(mod: _Module, out: List[LintDiagnostic]) -> None:
+    """ACDC004: Pallas kernel hygiene. (a) A function that launches
+    ``pl.pallas_call`` must not default its ``interpret`` parameter to a
+    literal bool — the right default is platform-derived (``None`` ->
+    ``jax.default_backend() != "tpu"``): a literal ``False`` breaks
+    every CPU/GPU host, a literal ``True`` silently runs the
+    interpreter on TPU (the PR 5 "always-interpret" seed bug). (b) The
+    kernel body and wrapper must not accumulate in a sub-f32 dtype
+    (``float16``/``bfloat16``): segment sums and Gram moments hold the
+    paper's f64 parity only because accumulation happens in
+    ``jnp.promote_types(input, float32)``.
+
+    Regression note (PR 7): ``kernels/{seg_outer,sigma_fused,
+    swa_attention}/kernel.py`` entry points carried ``interpret: bool =
+    False`` literals (callers always passed explicitly via ops.py, so
+    behavior was safe — but any new direct caller would compile-fail on
+    CPU); all three now default to ``None`` and resolve per platform.
+    """
+    kernels: Dict[str, ast.FunctionDef] = {
+        n.name: n for n in ast.walk(mod.tree)
+        if isinstance(n, ast.FunctionDef)
+    }
+    pallas_fns: List[ast.FunctionDef] = []
+    body_names: Set[str] = set()
+    for fn in kernels.values():
+        for n in _shallow(fn):
+            if isinstance(n, ast.Call) \
+                    and _callee_name(n.func) == "pallas_call":
+                pallas_fns.append(fn)
+                if n.args and isinstance(n.args[0], ast.Name):
+                    body_names.add(n.args[0].id)
+                break
+    scopes = pallas_fns + [
+        kernels[b] for b in body_names if b in kernels
+    ]
+    for fn in pallas_fns:
+        d = _param_defaults(fn).get("interpret")
+        if isinstance(d, ast.Constant) and isinstance(d.value, bool):
+            mod.emit(
+                out, fn, "ACDC004",
+                f"{fn.name!r} defaults interpret={d.value} as a literal; "
+                f"default to None and derive it from the platform "
+                f"(interpret iff jax.default_backend() != 'tpu') so the "
+                f"kernel neither breaks CPU hosts nor interprets on TPU",
+            )
+    for fn in scopes:
+        for n in _shallow(fn):
+            low = None
+            if isinstance(n, ast.Attribute) \
+                    and n.attr in ("float16", "bfloat16"):
+                low = n.attr
+            elif isinstance(n, ast.Constant) \
+                    and n.value in ("float16", "bfloat16"):
+                low = n.value
+            if low:
+                mod.emit(
+                    out, n, "ACDC004",
+                    f"sub-f32 dtype {low} inside the Pallas kernel path "
+                    f"of {fn.name!r}: accumulate in "
+                    f"jnp.promote_types(input, float32) or wider — a "
+                    f"{low} accumulator silently loses the f64 parity "
+                    f"the aggregate pass guarantees",
+                )
+
+
+# ----------------------------------------------------------------------
+# ACDC005 — threads without daemon=/join ownership
+# ----------------------------------------------------------------------
+
+
+def check_acdc005(mod: _Module, out: List[LintDiagnostic]) -> None:
+    """ACDC005: ``threading.Thread(...)`` constructed without an explicit
+    ``daemon=`` and without a ``.join()`` in the same function. A
+    non-daemon thread with no join owner outlives its creator and keeps
+    the interpreter alive on shutdown — in a server, that is a refresh
+    or fit worker still mutating session state while teardown runs.
+    Either mark the thread ``daemon=True`` (the process owns its
+    lifetime: ``data/tokens.py`` prefetch) or keep an explicit join
+    (the creator owns it: ``bench_acdc``'s QPS client threads).
+    """
+    for call in [n for n in ast.walk(mod.tree) if isinstance(n, ast.Call)]:
+        if _callee_name(call.func) != "Thread":
+            continue
+        if any(kw.arg == "daemon" for kw in call.keywords):
+            continue
+        fn = mod.enclosing_function(call)
+        joined = fn is not None and any(
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "join"
+            for n in ast.walk(fn)
+        )
+        if not joined:
+            mod.emit(
+                out, call, "ACDC005",
+                "Thread without daemon= or a .join() in the creating "
+                "function: no owner for its lifetime — pass "
+                "daemon=True or join it before returning",
+            )
+
+
+# ----------------------------------------------------------------------
+# Driver
+# ----------------------------------------------------------------------
+
+RULES = (
+    check_acdc001, check_acdc002, check_acdc003, check_acdc004,
+    check_acdc005,
+)
+
+
+def lint_source(src: str, path: str = "<string>") -> List[LintDiagnostic]:
+    """Run every rule over one module's source; returns diagnostics
+    sorted by line."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [LintDiagnostic(
+            path, e.lineno or 1, e.offset or 0, "ACDC000",
+            f"syntax error: {e.msg}",
+        )]
+    mod = _Module(tree, src.splitlines(), path)
+    out: List[LintDiagnostic] = []
+    for rule in RULES:
+        rule(mod, out)
+    return sorted(out, key=lambda d: (d.line, d.col, d.rule))
+
+
+def lint_paths(paths: Iterable[str]) -> List[LintDiagnostic]:
+    """Lint every ``.py`` file under the given files/directories."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(
+                    os.path.join(root, f) for f in sorted(names)
+                    if f.endswith(".py")
+                )
+        elif p.endswith(".py"):
+            files.append(p)
+    out: List[LintDiagnostic] = []
+    for f in sorted(files):
+        with open(f, "r", encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), f))
+    return out

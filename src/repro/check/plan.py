@@ -1,0 +1,521 @@
+"""Layer 1 of the static-analysis plane: the aggregate-plan/IR verifier.
+
+``core.engine.build_plan`` emits an index-array IR (``EnginePlan``:
+per-(node, group-by-signature) gather / expansion / segment-output
+arrays) that the compiled executor plane replays blindly — a corrupted
+plan does not crash, it silently mis-aggregates. This module is an
+abstract-interpretation pass over that IR: WITHOUT executing anything it
+infers per-step shapes, dtypes and segment-id ranges and checks them
+against the invariants the executor assumes. Every check carries a rule
+id (P1xx plan, B2xx bundle, S3xx solver key) so a violation maps to one
+invariant in the DESIGN.md §13 catalogue.
+
+Two levels:
+
+  * ``"structural"`` — O(plan metadata): shape/arity/topology/dtype and
+    the ctx-range prefix-sum identity. This is what ``check="cheap"``
+    runs on an executor-cache miss.
+  * ``"full"``       — adds the O(n_exp) index-bound scans (segment ids,
+    source rows, child gathers, ctx monotonicity). This is what
+    ``check="strict"`` and ``acdc_check`` run.
+
+The verifier never mutates the plan and never touches a device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import EnginePlan, SigPlan, _sub_sig
+from repro.core.monomials import signature as mono_signature
+from repro.core.schema import Kind
+
+LEVELS = ("structural", "full")
+
+#: layout of the solver compile-cache key built by ``Session._fit_pinned``
+#: / ``Session.fit_batched`` (PR 5): (tag, session serial, bundle key,
+#: workload key, spec, solver config, delta epoch, param-space total).
+SOLVER_KEY_TAGS = ("bgd", "bgd_batch")
+SOLVER_KEY_LEN = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One violated invariant: rule id + plan location + precise message."""
+
+    rule: str
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.where}: {self.message}"
+
+
+class PlanVerificationError(ValueError):
+    """Raised by the ``check_*`` wrappers when any diagnostic fires."""
+
+    def __init__(self, diagnostics):
+        self.diagnostics = list(diagnostics)
+        lines = "\n".join(str(d) for d in self.diagnostics)
+        super().__init__(f"plan verification failed:\n{lines}")
+
+
+def _lvl(level: str) -> str:
+    if level not in LEVELS:
+        raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
+    return level
+
+
+# ----------------------------------------------------------------------
+# P1xx — plan/IR invariants
+# ----------------------------------------------------------------------
+
+
+def _verify_dtype(dtype, out: List[Diagnostic]) -> None:
+    """P101: the accumulate dtype must be a float of >= 32 bits — the
+    kernels promote inputs with ``jnp.promote_types(x, f32)`` before
+    accumulating (PR 5), and a f16/bf16 segment sum would silently lose
+    the paper's f64 parity."""
+    d = np.dtype(dtype) if not isinstance(dtype, np.dtype) else dtype
+    if d.kind != "f" or d.itemsize < 4:
+        out.append(Diagnostic(
+            "P101", "dtype",
+            f"accumulate dtype {d.name} violates the promote-to->=f32 "
+            f"rule (kernels accumulate in promote_types(input, float32); "
+            f"need float32/float64, got kind={d.kind!r} "
+            f"itemsize={d.itemsize})",
+        ))
+
+
+def _verify_sig_plan(
+    plan: EnginePlan, var: str, sp: SigPlan, level: str,
+    out: List[Diagnostic],
+) -> None:
+    fz, regs = plan.fz, plan.registers
+    info = fz.info
+    node = fz.nodes[var]
+    where = f"{var}/sig={sp.sig}"
+
+    # --- P102: child topology well-formedness --------------------------
+    kids = regs.children[var]
+    extra = [c for c in sp.child_col if c not in kids]
+    if extra:
+        out.append(Diagnostic(
+            "P102", where,
+            f"child_col references {extra} which are not children of "
+            f"{var} in the join tree (children: {list(kids)})",
+        ))
+        return  # downstream checks index regs.children by these names
+    expect_order = [c for c in kids if c in sp.child_col]
+    if list(sp.child_col) != expect_order:
+        out.append(Diagnostic(
+            "P102", where,
+            f"child order {list(sp.child_col)} disagrees with the "
+            f"register order {expect_order}; entry child_idx tuples are "
+            f"positional, so a permuted order pairs each entry with the "
+            f"wrong child aggregate",
+        ))
+    topology_ok = True
+    for c, (ccols, csig) in sp.child_col.items():
+        if info.parent.get(c) != var:
+            out.append(Diagnostic(
+                "P102", where,
+                f"{c} is not a child of {var} in the variable order "
+                f"(parent[{c}]={info.parent.get(c)!r})",
+            ))
+            topology_ok = False
+            continue
+        want = _sub_sig(sp.sig, info.subtree_vars[c])
+        if tuple(csig) != want:
+            out.append(Diagnostic(
+                "P102", where,
+                f"child {c} consumed under sub-signature {tuple(csig)} "
+                f"but sig ∩ subtree({c}) = {want}",
+            ))
+            topology_ok = False
+            continue
+        if csig not in plan.node_sigs.get(c, {}):
+            out.append(Diagnostic(
+                "P102", where,
+                f"child {c} has no plan for sub-signature {tuple(csig)} "
+                f"(available: {sorted(plan.node_sigs.get(c, {}))})",
+            ))
+            topology_ok = False
+            continue
+        if csig and c not in sp.child_gather:
+            out.append(Diagnostic(
+                "P102", where,
+                f"keyed child {c} (sub-sig {tuple(csig)}) has no "
+                f"child_gather expansion array",
+            ))
+            topology_ok = False
+
+    # --- P103/P104: entry columns, child column indices, powers --------
+    ents = regs.entries[var]
+    E = len(sp.entry_cols)
+    bad_entry = [i for i in sp.entry_cols if not (0 <= i < len(ents))]
+    if bad_entry:
+        out.append(Diagnostic(
+            "P103", where,
+            f"entry_cols {bad_entry} out of range for the {var} register "
+            f"({len(ents)} entries)",
+        ))
+        return
+    if len(sp.p0) != E:
+        out.append(Diagnostic(
+            "P103", where,
+            f"p0 has {len(sp.p0)} powers for {E} entry columns",
+        ))
+    for c, (ccols, csig) in sp.child_col.items():
+        if len(ccols) != E:
+            out.append(Diagnostic(
+                "P103", where,
+                f"child {c} column map has {len(ccols)} columns for "
+                f"{E} entries",
+            ))
+        if topology_ok:
+            child_e = len(plan.node_sigs[c][csig].entry_cols)
+            bad = np.asarray(ccols)[np.asarray(ccols) >= child_e]
+            if bad.size:
+                out.append(Diagnostic(
+                    "P103", where,
+                    f"child {c} column indices {sorted(set(bad.tolist()))} "
+                    f">= child matrix width {child_e}",
+                ))
+    max_p = regs.max_power[var]
+    if len(sp.p0) == E:
+        for k, ent_i in enumerate(sp.entry_cols):
+            want_p = ents[ent_i].power0
+            got_p = int(sp.p0[k])
+            if got_p != want_p:
+                out.append(Diagnostic(
+                    "P104", where,
+                    f"column {k} (register entry {ent_i}) carries power "
+                    f"{got_p}, register says X^{want_p}",
+                ))
+            elif got_p > max_p:
+                out.append(Diagnostic(
+                    "P104", where,
+                    f"column {k} power {got_p} exceeds the node's lambda "
+                    f"width (max_power={max_p}); the gather would clamp "
+                    f"to X^{max_p} silently",
+                ))
+    if np.asarray(sp.p0).size and int(np.max(sp.p0)) > max_p:
+        out.append(Diagnostic(
+            "P104", where,
+            f"p0 max {int(np.max(sp.p0))} exceeds max_power[{var}]="
+            f"{max_p}: lambda table has only {max_p + 1} power columns",
+        ))
+
+    # --- P105: index-array shapes --------------------------------------
+    shapes = {
+        "src_row": (len(sp.src_row), sp.n_exp),
+        "out_id": (len(sp.out_id), sp.n_exp),
+        "out_ctx": (len(sp.out_ctx), sp.n_out),
+        "start_per_ctx": (len(sp.start_per_ctx), node.n_ctx),
+        "count_per_ctx": (len(sp.count_per_ctx), node.n_ctx),
+    }
+    for name, (got, want) in shapes.items():
+        if got != want:
+            out.append(Diagnostic(
+                "P105", where,
+                f"{name} has length {got}, expected {want}",
+            ))
+    for c, g in sp.child_gather.items():
+        if len(g) != sp.n_exp:
+            out.append(Diagnostic(
+                "P105", where,
+                f"child_gather[{c}] has length {len(g)}, expected "
+                f"n_exp={sp.n_exp}",
+            ))
+
+    # --- P107: group-by key arity vs signature -------------------------
+    if set(sp.out_keys) != set(sp.sig):
+        out.append(Diagnostic(
+            "P107", where,
+            f"out_keys carries columns for {sorted(sp.out_keys)} but the "
+            f"group-by signature is {sorted(sp.sig)}: a Sigma block "
+            f"assembled from this table would join on the wrong arity",
+        ))
+    for v in sp.sig:
+        if fz.nodes[v].kind is not Kind.CATEGORICAL:
+            out.append(Diagnostic(
+                "P107", where,
+                f"group-by variable {v} has kind {fz.nodes[v].kind}; "
+                f"signatures may only contain categorical variables",
+            ))
+    for v, arr in sp.out_keys.items():
+        if len(arr) != sp.n_out:
+            out.append(Diagnostic(
+                "P107", where,
+                f"out_keys[{v}] has length {len(arr)}, expected "
+                f"n_out={sp.n_out}",
+            ))
+
+    # --- P111: contiguous ctx ranges (prefix-sum identity) -------------
+    cnt = np.asarray(sp.count_per_ctx, dtype=np.int64)
+    start = np.asarray(sp.start_per_ctx, dtype=np.int64)
+    if len(cnt) == node.n_ctx and len(start) == node.n_ctx:
+        if int(cnt.sum()) != sp.n_out:
+            out.append(Diagnostic(
+                "P111", where,
+                f"count_per_ctx sums to {int(cnt.sum())}, n_out is "
+                f"{sp.n_out}: parents would expand over phantom or "
+                f"missing child outputs",
+            ))
+        want_start = np.concatenate([[0], np.cumsum(cnt)[:-1]])
+        if not np.array_equal(start, want_start):
+            bad = int(np.flatnonzero(start != want_start)[0])
+            out.append(Diagnostic(
+                "P111", where,
+                f"start_per_ctx[{bad}]={int(start[bad])} breaks the "
+                f"prefix-sum identity (expected {int(want_start[bad])})",
+            ))
+
+    if level != "full":
+        return
+
+    # --- full level: O(n_exp) index-bound scans ------------------------
+    out_id = np.asarray(sp.out_id, dtype=np.int64)
+    if out_id.size and (out_id.min() < 0 or out_id.max() >= sp.n_out):
+        out.append(Diagnostic(
+            "P106", where,
+            f"segment id range [{int(out_id.min())}, {int(out_id.max())}]"
+            f" escapes [0, n_out={sp.n_out}): the padded executor drops "
+            f"out-of-range ids, silently losing those rows' mass",
+        ))
+    src = np.asarray(sp.src_row, dtype=np.int64)
+    if src.size and (src.min() < 0 or src.max() >= node.n_rows):
+        out.append(Diagnostic(
+            "P109", where,
+            f"src_row range [{int(src.min())}, {int(src.max())}] escapes "
+            f"[0, n_rows={node.n_rows}): lambda gathers would clamp to "
+            f"the wrong node row",
+        ))
+    for c, g in sp.child_gather.items():
+        if c not in sp.child_col or not topology_ok:
+            continue
+        csig = sp.child_col[c][1]
+        child_n = plan.node_sigs[c][csig].n_out
+        ga = np.asarray(g, dtype=np.int64)
+        if ga.size and (ga.min() < 0 or ga.max() >= child_n):
+            out.append(Diagnostic(
+                "P110", where,
+                f"child_gather[{c}] range [{int(ga.min())}, "
+                f"{int(ga.max())}] escapes [0, child n_out={child_n})",
+            ))
+    ctx = np.asarray(sp.out_ctx, dtype=np.int64)
+    if ctx.size:
+        if ctx.min() < 0 or ctx.max() >= node.n_ctx:
+            out.append(Diagnostic(
+                "P112", where,
+                f"out_ctx range [{int(ctx.min())}, {int(ctx.max())}] "
+                f"escapes [0, n_ctx={node.n_ctx})",
+            ))
+        elif np.any(ctx[1:] < ctx[:-1]):
+            bad = int(np.flatnonzero(ctx[1:] < ctx[:-1])[0]) + 1
+            out.append(Diagnostic(
+                "P112", where,
+                f"out_ctx is not sorted at index {bad} "
+                f"({int(ctx[bad - 1])} -> {int(ctx[bad])}): parent "
+                f"[start, count) ranges assume contiguous ctx blocks",
+            ))
+        elif len(cnt) == node.n_ctx:
+            got = np.bincount(ctx, minlength=node.n_ctx)
+            if not np.array_equal(got, cnt):
+                bad = int(np.flatnonzero(got != cnt)[0])
+                out.append(Diagnostic(
+                    "P112", where,
+                    f"ctx {bad} has {int(got[bad])} outputs but "
+                    f"count_per_ctx says {int(cnt[bad])}",
+                ))
+
+
+def verify_plan(
+    plan: EnginePlan, dtype=np.float64, level: str = "structural"
+) -> List[Diagnostic]:
+    """Abstractly interpret one compiled plan; return every violated
+    invariant (empty list = verified). Never executes, never mutates."""
+    level = _lvl(level)
+    out: List[Diagnostic] = []
+    _verify_dtype(dtype, out)
+    regs = plan.registers
+    for var in plan.order:
+        # P108: every register entry is computed by exactly one sig plan
+        covered = sorted(
+            i for sp in plan.node_sigs[var].values() for i in sp.entry_cols
+        )
+        want = list(range(len(regs.entries[var])))
+        if covered != want:
+            out.append(Diagnostic(
+                "P108", f"{var}",
+                f"sig plans cover register entries {covered}, expected "
+                f"each of {want} exactly once",
+            ))
+        for sp in plan.node_sigs[var].values():
+            _verify_sig_plan(plan, var, sp, level, out)
+    return out
+
+
+# ----------------------------------------------------------------------
+# B2xx — bundle-level invariants (tables, FDs, executor-cache identity)
+# ----------------------------------------------------------------------
+
+
+def verify_bundle(
+    bundle, session=None, db=None, level: str = "full"
+) -> List[Diagnostic]:
+    """Verify one compiled ``AggregateBundle``: its plan (P1xx), its
+    monomial tables' key arity against the join tree (B201), the FD
+    reparameterization (B202), its stamped executor-cache identity
+    (B203) and workload coverage (B204)."""
+    level = _lvl(level)
+    db = db if db is not None else (session.db if session else None)
+    out = verify_plan(bundle.plan, dtype=np.float64, level=level)
+    where = f"bundle[{bundle.key.features}->{bundle.key.response}]"
+
+    for m, (keys, vals) in bundle.result.tables.items():
+        if db is not None:
+            want = set(mono_signature(m, db))
+            if set(keys) != want:
+                out.append(Diagnostic(
+                    "B201", where,
+                    f"monomial {m} keyed on {sorted(keys)}, its "
+                    f"signature under the join tree is {sorted(want)}",
+                ))
+        n = len(np.asarray(vals))
+        for v, karr in keys.items():
+            if len(np.asarray(karr)) != n:
+                out.append(Diagnostic(
+                    "B201", where,
+                    f"monomial {m}: key column {v} has "
+                    f"{len(np.asarray(karr))} rows for {n} values",
+                ))
+
+    feats = set(bundle.key.features)
+    for det, determined in bundle.key.fds:
+        leaked = sorted(feats & set(determined))
+        if leaked:
+            out.append(Diagnostic(
+                "B202", where,
+                f"FD {det}->{determined} was supposed to reparameterize "
+                f"{leaked} out of the feature set, but they are still "
+                f"compiled features",
+            ))
+
+    if bundle.executor_signature is not None:
+        from repro.core.executor import plan_signature
+
+        policy = session.kernel_policy if session is not None else None
+        want_sig = plan_signature(
+            bundle.plan,
+            **({"policy": policy} if policy is not None else {}),
+        )
+        if want_sig != bundle.executor_signature:
+            out.append(Diagnostic(
+                "B203", where,
+                "stamped executor_signature does not match the plan's "
+                "recomputed anonymized-shape key: a recompile of this "
+                "bundle would enter the compiled-executor cache under a "
+                "DIFFERENT executable than the one stamped here (silent "
+                "cross-plan cache pollution)",
+            ))
+
+    if not bundle.covers(bundle.workload):
+        missing = [
+            m for m in bundle.workload.aggregates
+            if m not in bundle.result.tables
+        ]
+        out.append(Diagnostic(
+            "B204", where,
+            f"bundle does not cover its own workload: aggregate tables "
+            f"missing for {missing[:4]}{'...' if len(missing) > 4 else ''}",
+        ))
+    return out
+
+
+# ----------------------------------------------------------------------
+# S3xx — solver compile-cache key invariants (the PR 5 stale-epoch rule)
+# ----------------------------------------------------------------------
+
+
+def verify_solver_key(key, session, bundle=None) -> List[Diagnostic]:
+    """Check a BGD driver cache key against the session it is about to
+    run in. The jitted drive bakes the FD penalty and FaMa interaction
+    tables into its closure, so a key scoped to another session or a
+    stale delta epoch silently optimizes stale penalties (the PR 5 bug
+    class caught by test_apply_delta_on_fd_relation_refit_parity)."""
+    out: List[Diagnostic] = []
+    where = "solver_key"
+    if not isinstance(key, tuple) or len(key) != SOLVER_KEY_LEN:
+        out.append(Diagnostic(
+            "S301", where,
+            f"expected an {SOLVER_KEY_LEN}-tuple (tag, serial, bundle "
+            f"key, workload key, spec, solver, delta epoch, space "
+            f"total); got {type(key).__name__} of length "
+            f"{len(key) if isinstance(key, tuple) else 'n/a'}",
+        ))
+        return out
+    if key[0] not in SOLVER_KEY_TAGS:
+        out.append(Diagnostic(
+            "S301", where,
+            f"tag {key[0]!r} not in {SOLVER_KEY_TAGS}; scalar and "
+            f"batched drives must never collide",
+        ))
+    if key[1] != session._serial:
+        out.append(Diagnostic(
+            "S302", where,
+            f"key is scoped to session serial {key[1]}, running session "
+            f"is {session._serial}: drivers bake data-dependent closures "
+            f"(FD penalty, FaMa interactions) and must never cross "
+            f"sessions",
+        ))
+    if key[6] != session.stats.deltas_applied:
+        out.append(Diagnostic(
+            "S303", where,
+            f"key carries delta epoch {key[6]}, session is at epoch "
+            f"{session.stats.deltas_applied}: a stale-epoch driver would "
+            f"re-optimize the pre-delta FD penalty (PR 5 stale-FD-"
+            f"penalty bug class)",
+        ))
+    if bundle is not None and key[2] != bundle.key:
+        out.append(Diagnostic(
+            "S304", where,
+            f"key names bundle {key[2]}, fit is running against "
+            f"{bundle.key}",
+        ))
+    return out
+
+
+def verify_session(session, level: str = "full") -> List[Diagnostic]:
+    """Verify every compiled bundle in a session (the ``acdc_check``
+    entry point)."""
+    out: List[Diagnostic] = []
+    for b in session.bundles:
+        out.extend(verify_bundle(b, session=session, level=level))
+    return out
+
+
+# ----------------------------------------------------------------------
+# Raising wrappers (what the engine/executor/session hooks call)
+# ----------------------------------------------------------------------
+
+
+def _raise_if(diags: List[Diagnostic]) -> None:
+    if diags:
+        raise PlanVerificationError(diags)
+
+
+def check_plan(plan, dtype=np.float64, level: str = "structural") -> None:
+    _raise_if(verify_plan(plan, dtype=dtype, level=level))
+
+
+def check_bundle(bundle, session=None, db=None, level: str = "full") -> None:
+    _raise_if(verify_bundle(bundle, session=session, db=db, level=level))
+
+
+def check_solver_key(key, session, bundle=None) -> None:
+    _raise_if(verify_solver_key(key, session, bundle=bundle))

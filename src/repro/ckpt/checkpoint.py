@@ -122,7 +122,9 @@ class CheckpointManager:
         self.directory = directory
         self.keep = keep
         self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
-        self._pending: Optional[concurrent.futures.Future] = None
+        # _lock only serializes the pool thread's retention GC; _pending
+        # itself is owned by the trainer thread (save/wait/close).
+        self._pending: Optional[concurrent.futures.Future] = None  # lock: external(trainer thread)
         self._lock = threading.Lock()
 
     def save(self, step: int, tree: Any) -> None:

@@ -322,14 +322,12 @@ def build_plan(fz: Factorized, regs: Registers) -> EnginePlan:
             ).astype(np.int32)
 
             # --- per-entry column metadata ---
-            E = len(cols)
             p0 = np.array([ents[i].power0 for i in cols], dtype=np.int32)
             child_col: Dict[str, Tuple[np.ndarray, Sig]] = {}
             for ki, c in enumerate(kids):
                 ccols = np.array(
                     [ents[i].child_idx[ki] for i in cols], dtype=np.int32
                 )
-                centry = [regs.entries[c][j] for j in ccols]
                 csig = sub[c]
                 # all entries of one sig project to the same child sub-sig
                 # (categorical vars of the child projection = sig ∩ subtree)
@@ -493,6 +491,7 @@ def execute(
     dtype=jnp.float64,
     backend: str = "jax",
     kernels=None,
+    check: Optional[str] = None,
 ) -> AggregateResult:
     """Run the aggregate pass. Index plans are numpy; numeric work is jax,
     compiled ONCE per plan *shape* by the persistent executor plane
@@ -500,15 +499,32 @@ def execute(
     recompiling, a tenant refitting, a post-delta re-execution — reuses
     the cached executable with zero re-tracing. ``backend="numpy"`` skips
     jit for small (delta) passes; ``kernels`` is an optional
-    ``executor.KernelPolicy`` steering the Pallas dispatch."""
+    ``executor.KernelPolicy`` steering the Pallas dispatch.
+
+    ``check`` is the static-verification knob ("off"/"cheap"/"strict",
+    ``None`` = the process default from ``repro.check``): cheap verifies
+    plan structure before any uncached execution, strict adds O(n_exp)
+    index-bound scans on every pass (DESIGN.md §13)."""
     regs = plan.registers
     if backend == "numpy":
+        from repro import check as _check
+
+        mode = _check.resolve_mode(check)
+        if mode != "off":
+            # the numpy path has no executor cache to hang "verify once
+            # per shape" off of — cheap verifies structure every pass
+            # (it is O(plan metadata), the pass itself is O(data))
+            _check.check_plan(
+                plan,
+                dtype=np.float64,
+                level="full" if mode == "strict" else "structural",
+            )
         root_payloads = _run_numpy(plan)
     else:
         from .executor import global_plane
 
         root_payloads = global_plane().execute(
-            plan, dtype=dtype, policy=kernels
+            plan, dtype=dtype, policy=kernels, check=check
         )
 
     tables: Dict[Monomial, Tuple[Dict[str, np.ndarray], jnp.ndarray]] = {}

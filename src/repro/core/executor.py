@@ -322,6 +322,7 @@ class ExecutorStats:
     executions: int = 0
     seg_outer_steps: int = 0        # dispatch accounting (per execution)
     moments_steps: int = 0
+    checks: int = 0                 # plan verifications (repro.check)
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -428,14 +429,31 @@ class ExecutorPlane:
         plan: EnginePlan,
         dtype=jnp.float64,
         policy: Optional[KernelPolicy] = None,
+        check: Optional[str] = None,
     ) -> Dict[Tuple[str, ...], jnp.ndarray]:
         """Run the plan's aggregate pass through the compiled plane;
         returns the root payload per group-by signature, padding sliced
-        off."""
+        off. ``check`` ("off"/"cheap"/"strict", ``None`` = process
+        default) verifies the plan first: cheap does structural checks
+        on a cache MISS only — a hit means a structurally identical plan
+        already verified against this executable shape — strict runs the
+        full O(n_exp) index-bound scan on every pass (DESIGN.md §13)."""
         policy = policy or DEFAULT_POLICY
         signature, lams, bufs, (root_meta, fused, moments) = _prepare(
             plan, dtype, policy
         )
+        from repro import check as _check
+
+        mode = _check.resolve_mode(check)
+        if mode == "strict" or (
+            mode == "cheap" and signature not in self._cache
+        ):
+            _check.check_plan(
+                plan,
+                dtype=dtype,
+                level="full" if mode == "strict" else "structural",
+            )
+            self.stats.checks += 1
         self.last_signature = signature
         fn = self.executable_for(signature)
         traces_before = self.stats.traces

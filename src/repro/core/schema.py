@@ -37,6 +37,10 @@ def float_key_bits(a: np.ndarray) -> np.ndarray:
     nan = np.isnan(f)
     if nan.any():
         f[nan] = np.nan
+    # this is the ONE sanctioned raw bit view; acdc-lint rule ACDC003
+    # flags `.view(int64)` float keying anywhere outside the
+    # canonicalizers so new key sites cannot re-introduce the -0.0/NaN
+    # split this function exists to prevent
     return f.view(np.int64)
 
 

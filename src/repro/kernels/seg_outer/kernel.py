@@ -20,6 +20,7 @@ file in VMEM and updates it with systolic matmuls.
 
 from __future__ import annotations
 
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,12 +58,19 @@ def seg_outer(
     x: jnp.ndarray,
     seg: jnp.ndarray,
     block_rows: int = 256,
-    interpret: bool = False,
+    interpret: Optional[bool] = None,
 ):
     """x (N, f) float, seg (N,) int32 SORTED ascending.
 
     Returns (partials (n_blocks, BN, f) f32, ids (n_blocks, BN) int32).
+    ``interpret=None`` resolves from the platform (compiled on TPU,
+    interpreter elsewhere) — a literal default here would either silently
+    run the interpreter on real TPUs or break every other backend
+    (acdc-lint ACDC004).
     """
+    if interpret is None:
+        # inline ops.default_interpret() — ops.py imports this module
+        interpret = jax.default_backend() != "tpu"
     n, f = x.shape
     assert n % block_rows == 0, "pad in ops.py"
     grid = (n // block_rows,)

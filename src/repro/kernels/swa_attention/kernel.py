@@ -15,6 +15,7 @@ BK = 128, D padded to a multiple of 128 by the wrapper.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -78,8 +79,12 @@ def swa_attention(
     window: int,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = False,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    # interpret=None resolves from the platform (acdc-lint ACDC004 —
+    # literal defaults either always-interpret or break non-TPU backends)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     bh, s, d = q.shape
     assert s % block_q == 0 and s % block_k == 0
     kv_steps = window // block_k + 1          # band width in kv blocks

@@ -1,27 +1,33 @@
-"""jit'd wrapper: (B, S, H, D) sliding-window attention via the kernel."""
+"""jit'd wrapper: (B, S, H, D) sliding-window attention via the kernel.
+
+``interpret`` defaults to *platform-derived* (compiled Pallas on TPU,
+interpreter elsewhere) instead of the old always-interpret default —
+the same silent-perf-bug class acdc-lint rule ACDC004 guards against."""
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.seg_outer.ops import default_interpret
 
 from .kernel import swa_attention
 from .ref import swa_attention_ref
 
 
 @partial(jax.jit, static_argnames=("window", "block_q", "block_k", "interpret"))
-def sliding_window_attention(
+def _swa(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
     window: int,
-    block_q: int = 128,
-    block_k: int = 128,
-    interpret: bool = True,
+    block_q: int,
+    block_k: int,
+    interpret: bool,
 ) -> jnp.ndarray:
-    """q/k/v (B, S, H, D), same head counts (repeat GQA kv before calling)."""
     b, s, h, d = q.shape
 
     def flat(x):
@@ -32,6 +38,23 @@ def sliding_window_attention(
         block_q=block_q, block_k=block_k, interpret=interpret,
     )
     return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def sliding_window_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    window: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """q/k/v (B, S, H, D), same head counts (repeat GQA kv before calling).
+    ``interpret=None`` resolves from the platform (compiled on TPU,
+    interpreter elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _swa(q, k, v, window, block_q, block_k, interpret)
 
 
 sliding_window_attention_ref = swa_attention_ref

@@ -1,0 +1,109 @@
+"""``acdc_check`` — verify every compiled bundle in a live session.
+
+Builds the synthetic retailer database, compiles a representative
+workload mix (shared pr2/lr/fama bundle + an FD-reparameterized
+bundle), pushes one delta batch through ``apply_delta`` so refreshed
+bundles are covered too, then runs the ``repro.check`` plan/IR verifier
+over every live bundle (DESIGN.md §13):
+
+    python -m repro.launch.check [--level full|structural] [--self-test]
+
+``--self-test`` additionally runs the seeded corruption corpus
+(``repro.check.corrupt``): every mutant — a targeted single-field
+corruption drawn from a real bug class — must be rejected with its
+expected rule id while the pristine bundles stay clean. This is the
+CI static-analysis job's executable proof that the verifier catches
+what it claims to catch, without needing pytest.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+
+def acdc_check(argv=None) -> int:
+    import argparse
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.data import retailer
+    from repro.data.retailer import RetailerSpec, generate, variable_order
+    from repro.session import Session
+
+    p = argparse.ArgumentParser(description=acdc_check.__doc__)
+    p.add_argument("--level", choices=("structural", "full"), default="full")
+    p.add_argument("--self-test", action="store_true",
+                   help="also run the seeded corruption corpus")
+    p.add_argument("--scale", type=float, default=0.5)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", action="store_true")
+    args = p.parse_args(argv)
+
+    db = generate(RetailerSpec(
+        n_locn=int(20 * args.scale) or 2,
+        n_zip=int(12 * args.scale) or 2,
+        n_date=int(30 * args.scale) or 2,
+        n_sku=int(40 * args.scale) or 2,
+        seed=args.seed,
+    ))
+    sess = Session(db, variable_order())
+    feats = retailer.features()
+    # one shared cofactor bundle covers pr2/lr/fama; the FD-reduced
+    # workload reparameterizes and compiles its own (B201/B202 coverage)
+    pr2 = sess.compile(feats, "units", degree=2, squares=True)
+    sess.compile(feats, "units", degree=1)          # subsumed: same bundle
+    fd = sess.compile(feats, "units", degree=1, fds=db.fds)
+    # a refreshed bundle must verify too — patch tables in place once
+    delta = next(retailer.deltas(sess.db, n_batches=1, seed=args.seed + 1))
+    sess.apply_delta(delta)
+
+    t0 = time.perf_counter()
+    n = sess.verify(level=args.level)
+    verify_s = time.perf_counter() - t0
+    report = {
+        "bundles_verified": n,
+        "level": args.level,
+        "verify_seconds": round(verify_s, 6),
+        "deltas_applied": sess.stats.deltas_applied,
+    }
+
+    failures = 0
+    if args.self_test:
+        from repro.check.corrupt import run_corpus
+
+        bundle = pr2 if pr2.plan is not None else fd  # evicted-plan guard
+        corpus = []
+        for c, diags, ok in run_corpus(sess, bundle):
+            corpus.append({
+                "corruption": c.name,
+                "expected_rule": c.expected_rule,
+                "rejected": ok,
+                "diagnostics": [str(d) for d in diags],
+            })
+            if not ok:
+                failures += 1
+            if not args.json:
+                mark = "ok " if ok else "FAIL"
+                print(f"[check] {mark} {c.name:<28} -> {c.expected_rule} "
+                      f"({len(diags)} diagnostic"
+                      f"{'s' if len(diags) != 1 else ''}): {c.bug}")
+        report["corpus"] = corpus
+        report["corpus_failures"] = failures
+
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        print(f"[check] {n} bundle{'s' if n != 1 else ''} verified clean "
+              f"at level={args.level} in {verify_s * 1e3:.1f}ms")
+        if args.self_test:
+            total = len(report["corpus"])
+            print(f"[check] corpus: {total - failures}/{total} corruptions "
+                  f"rejected with their expected rule")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(acdc_check())

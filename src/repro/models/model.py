@@ -375,9 +375,6 @@ class LM:
             pmean_axes=mi.all_axes,
         )
         xs = P(mi.dp_axes, mi.tp_axis if seq_ok else None, None)
-        dp = 1
-        for a in mi.dp_axes:
-            dp *= mi.mesh.shape[a]
         fsdp_axis = None
         if ep:
             # expert-parallel: expert dim sharded on all three weights

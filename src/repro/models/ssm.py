@@ -149,7 +149,6 @@ def apply_mamba(
     """Returns (out (B, L, d), (ssm_state, conv_tail))."""
     s = cfg.ssm
     B, L, _ = x.shape
-    di = p["in_proj"].shape[1] // 2
     xz = x @ p["in_proj"]
     xi, z = jnp.split(xz, 2, axis=-1)
     tail = state[1] if state is not None else None

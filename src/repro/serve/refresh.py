@@ -145,12 +145,12 @@ class RefreshDaemon:
         self.session = session
         self.clock = clock
         self.on_applied = on_applied
-        self.stats = RefreshStats()
+        self.stats = RefreshStats()  # lock: _mu
         # relation -> ordered [(delta, enqueued_at)]; _mu guards the queue
         # map and the stats counters so producers may submit concurrently
         # with an in-flight drain (the scheduler serializes drains
         # themselves under its write lock, DESIGN.md §12)
-        self._queues: Dict[str, List[Tuple[Delta, float]]] = {}
+        self._queues: Dict[str, List[Tuple[Delta, float]]] = {}  # lock: _mu
         self._mu = threading.Lock()
 
     # ------------------------------------------------------------------

@@ -116,17 +116,17 @@ class Scheduler:
         self.server = server
         self.on_publish = on_publish
         self.flush_pending_max = flush_pending_max
-        self.stats = SchedulerStats()
+        self.stats = SchedulerStats()  # lock: _stats_mu
         # write plane: ONE lock serializes session mutation (fits, drains,
         # publishes); _pending is the group-commit queue behind it
         self._write = threading.RLock()
-        self._pending: List[_PendingFit] = []
+        self._pending: List[_PendingFit] = []  # lock: _pending_mu
         self._pending_mu = threading.Lock()
         # counter updates from concurrent readers (predicts/deltas) — a
         # leaf lock, never held while taking any other
         self._stats_mu = threading.Lock()
-        self._refreshing = False       # best-effort gauge, set under _write
-        self._snapshot = BundleSnapshot(
+        self._refreshing = False  # lock: _write (best-effort gauge)
+        self._snapshot = BundleSnapshot(  # lock: _write
             version=0,
             deltas_applied=server.session.stats.deltas_applied,
             published={},
@@ -180,7 +180,7 @@ class Scheduler:
             self._commit()
             return self._snapshot
 
-    def _commit(self) -> None:
+    def _commit(self) -> None:  # lock: held(_write)
         """One write-plane turn; caller MUST hold ``_write``. Wakes every
         waiter it services strictly AFTER the snapshot installs, so a
         fit's caller can immediately predict against its own result."""
@@ -224,7 +224,7 @@ class Scheduler:
             for p in batch:
                 p.done.set()
 
-    def _publish(self) -> None:
+    def _publish(self) -> None:  # lock: held(_write)
         """Install a new immutable snapshot; caller holds ``_write``."""
         published = {
             key: PublishedModel(

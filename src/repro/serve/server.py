@@ -196,15 +196,15 @@ class ModelServer:
         # session adopts the server's (possibly injected, deterministic)
         # clock (DESIGN.md §12)
         session.clock = clock
-        self.stats = ServerStats()
-        self.tenants: Dict[TenantKey, Tenant] = {}
+        self.stats = ServerStats()  # lock: external(Scheduler._write)
+        self.tenants: Dict[TenantKey, Tenant] = {}  # lock: external(Scheduler._write)
         self.refresh = RefreshDaemon(
             session, clock=clock, on_applied=self._refit_subscribed
         )
         # compiled-bundle ownership, for the cross-tenant reuse stats:
         # BundleKey -> tenant name (unique among live bundles; a recompile
         # after eviction re-assigns ownership to whoever pays the pass)
-        self._owners: Dict[object, str] = {}
+        self._owners: Dict[object, str] = {}  # lock: external(Scheduler._write)
 
     # ------------------------------------------------------------------
     def handle(self, request):

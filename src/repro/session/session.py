@@ -321,6 +321,19 @@ class Session:
         return evicted
 
     # ------------------------------------------------------------------
+    def verify(self, level: str = "full"):
+        """Run the static plan/bundle verifier (``repro.check``) over every
+        live bundle; raises ``PlanVerificationError`` on the first bad one.
+        Returns the number of bundles verified. ``acdc_check`` drives this
+        per-session; strict-mode executes verify incrementally instead."""
+        from repro import check as _check
+
+        diags = _check.verify_session(self, level=level)
+        if diags:
+            raise _check.PlanVerificationError(diags)
+        return len(self.bundles)
+
+    # ------------------------------------------------------------------
     def apply_delta(self, delta: Delta) -> DeltaReport:
         """Incrementally maintain the session under a base-relation delta
         (DESIGN.md §9): every compiled bundle's monomial tables are patched
@@ -478,6 +491,13 @@ class Session:
                 self.stats.deltas_applied,
                 sig_exec.space.total,
             )
+            from repro import check as _check
+
+            if _check.default_mode() == "strict":
+                # strict mode re-derives the driver key's identity claims
+                # (serial, epoch, bundle) before the solve — the S30x
+                # guard against the PR 5 stale-epoch reuse class
+                _check.check_solver_key(cache_key, self, bundle=bundle)
             loss_args = (
                 sig_exec.rows,
                 sig_exec.cols,
@@ -607,6 +627,13 @@ class Session:
                 self.stats.deltas_applied,
                 sig_exec.space.total,
             )
+            from repro import check as _check
+
+            if _check.default_mode() == "strict":
+                # strict mode re-derives the driver key's identity claims
+                # (serial, epoch, bundle) before the solve — the S30x
+                # guard against the PR 5 stale-epoch reuse class
+                _check.check_solver_key(cache_key, self, bundle=bundle)
             loss_args = (
                 sig_exec.rows,
                 sig_exec.cols,

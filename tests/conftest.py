@@ -1,9 +1,19 @@
+import os
+
 import jax
 import numpy as np
 import pytest
 
 # The ACDC plane tests require f64 exactness; LM layers are dtype-explicit.
 jax.config.update("jax_enable_x64", True)
+
+# Tier-1 runs with cheap plan verification: structural checks ride every
+# executor-cache miss across the whole suite at ~zero cost (DESIGN.md §13).
+# An explicit ACDC_CHECK env (e.g. strict, or off to bisect) wins.
+if "ACDC_CHECK" not in os.environ:
+    from repro import check as _check
+
+    _check.set_default_mode("cheap")
 
 
 @pytest.fixture

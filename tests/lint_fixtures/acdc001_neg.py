@@ -1,0 +1,14 @@
+"""ACDC001 negative: Sigma enters the jitted drive as an ARGUMENT (the
+``loss_args`` pattern ``Session._fit_pinned`` uses), so the compiled
+executable is reusable across Sigmas of the same structure."""
+
+import jax
+
+
+def fit_ok(bundle, theta):
+    sigma = bundle.sigma_for(("price",), "units")
+
+    def loss(p, sig):
+        return (p * p).sum() + sig.sy
+
+    return jax.jit(loss)(theta, sigma)

@@ -1,0 +1,13 @@
+"""ACDC001 positive: the jitted loss closes over a Sigma-typed local,
+baking the Sigma's DATA into the trace (PR 5 compile-cache bug class)."""
+
+import jax
+
+
+def fit_bad(bundle, theta):
+    sigma = bundle.sigma_for(("price",), "units")
+
+    def loss(p):
+        return (p * p).sum() + sigma.sy
+
+    return jax.jit(loss)(theta)

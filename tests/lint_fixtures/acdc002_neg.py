@@ -1,0 +1,25 @@
+"""ACDC002 negative: every mutation of declared state happens under its
+lock — inline ``with``, a ``held()`` caller-holds contract, and an
+``external(...)`` exemption for externally serialized state."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._mu = threading.Lock()
+        self.count = 0  # lock: _mu
+        self.events = []  # lock: _mu
+        self.gauge = 0  # lock: external(single-threaded owner)
+
+    def bump(self):
+        with self._mu:
+            self.count += 1
+
+    def _record(self, event):  # lock: held(_mu)
+        self.events.append(event)
+
+    def record(self, event):
+        with self._mu:
+            self._record(event)
+            self.gauge += 1

@@ -1,0 +1,17 @@
+"""ACDC002 positive: state declared under ``# lock: _mu`` mutated with
+the lock not held (and no ``held()`` contract on the method)."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._mu = threading.Lock()
+        self.count = 0  # lock: _mu
+        self.events = []  # lock: _mu
+
+    def bump(self):
+        self.count += 1
+
+    def record(self, event):
+        self.events.append(event)

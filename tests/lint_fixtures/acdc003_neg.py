@@ -1,0 +1,16 @@
+"""ACDC003 negative: the bit view lives inside the canonicalizer (which
+collapses signed zero and canonicalizes NaN first); key sites call it."""
+
+import numpy as np
+
+
+def float_key_bits(a):
+    f = a.astype(np.float64) + 0.0
+    nan = np.isnan(f)
+    if nan.any():
+        f[nan] = np.nan
+    return f.view(np.int64)
+
+
+def row_key(col):
+    return float_key_bits(col)

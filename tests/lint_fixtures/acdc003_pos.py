@@ -1,0 +1,9 @@
+"""ACDC003 positive: a float column keyed by its raw bit pattern —
+``-0.0`` and ``0.0`` land in different key groups, NaN payloads split
+(the PR 3 join-group bug)."""
+
+import numpy as np
+
+
+def row_key(col):
+    return col.astype(np.float64).view(np.int64)

@@ -1,0 +1,21 @@
+"""ACDC004 negative: ``interpret`` defaults to ``None`` and resolves
+from the platform; the kernel accumulates in promote_types(input, f32)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    acc = jnp.promote_types(x_ref.dtype, jnp.float32)
+    o_ref[...] = x_ref[...].astype(acc)
+
+
+def row_copy(x, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,19 @@
+"""ACDC004 positive: a Pallas wrapper with a literal ``interpret``
+default (breaks CPU hosts or silently interprets on TPU) and a kernel
+body accumulating in float16 (loses the aggregate pass's f64 parity)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float16)
+
+
+def row_copy(x, interpret: bool = False):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,16 @@
+"""ACDC005 negative: both sanctioned ownership patterns — the process
+owns a daemon thread's lifetime; the creator joins a worker it started."""
+
+import threading
+
+
+def start_daemon(fn):
+    t = threading.Thread(target=fn, daemon=True)
+    t.start()
+    return t
+
+
+def run_to_completion(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+    t.join()

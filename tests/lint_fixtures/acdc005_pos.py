@@ -1,0 +1,10 @@
+"""ACDC005 positive: a worker thread with no lifetime owner — neither
+``daemon=`` nor a ``.join()`` in the creating function."""
+
+import threading
+
+
+def start_worker(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+    return t

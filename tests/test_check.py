@@ -1,0 +1,230 @@
+"""The static-analysis plane (DESIGN.md §13): plan/IR verifier over
+pristine and corrupted bundles, the check= knob's cheap/strict wiring
+through the executor plane, solver-key verification, and the acdc-lint
+rule fixtures."""
+
+import copy
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import check as check_mod
+from repro.check.corrupt import CORPUS
+from repro.check.lint import lint_paths, lint_source
+from repro.check.plan import (
+    PlanVerificationError,
+    verify_bundle,
+    verify_plan,
+    verify_solver_key,
+)
+from repro.core.executor import ExecutorPlane
+from repro.core.schema import make_database
+from repro.core.variable_order import vo
+from repro.delta import Delta
+from repro.session import Session
+from repro.session.bundle import workload_key
+
+HERE = pathlib.Path(__file__).resolve().parent
+FIXTURES = HERE / "lint_fixtures"
+
+ORDER = vo("A", vo("B", vo("C"), vo("G", vo("D"))), vo("E"))
+FEATS = ["A", "B", "C", "D"]
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(7)
+    nR, nS, nT = 60, 40, 30
+    bvals = rng.integers(0, 8, nS)
+    gmap = rng.integers(0, 3, 8)
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 6, nR), "B": rng.integers(0, 8, nR),
+                  "C": rng.normal(size=nR).round(2)},
+            "S": {"B": bvals, "G": gmap[bvals],
+                  "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 6, nT),
+                  "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B", "G"],
+        fds=[("B", ["G"])],
+    )
+
+
+@pytest.fixture(scope="module")
+def sess(db):
+    s = Session(db, ORDER)
+    s.compile(FEATS, "E", degree=2, squares=True)
+    return s
+
+
+@pytest.fixture(scope="module")
+def bundle(sess):
+    return sess.bundles[0]
+
+
+# ----------------------------------------------------------------------
+# pristine plans/bundles verify clean (no false positives)
+# ----------------------------------------------------------------------
+
+
+def test_pristine_plan_verifies_clean(bundle):
+    assert verify_plan(bundle.plan, level="full") == []
+
+
+def test_pristine_bundle_and_session_clean(sess, bundle):
+    assert verify_bundle(bundle, session=sess, level="full") == []
+    assert sess.verify(level="full") == len(sess.bundles)
+
+
+def test_refreshed_bundle_verifies_clean(db):
+    """A bundle patched in place by apply_delta must still satisfy every
+    plan invariant — the refresh path rebuilds index arrays."""
+    rng = np.random.default_rng(11)
+    s = Session(db, ORDER)
+    s.compile(FEATS, "E", degree=2, squares=True)
+    n_ins = 5
+    s.apply_delta(Delta("R", inserts={
+        "A": rng.integers(0, db.adom["A"], n_ins).astype(np.int32),
+        "B": rng.integers(0, db.adom["B"], n_ins).astype(np.int32),
+        "C": rng.normal(size=n_ins).round(6),
+    }))
+    assert s.stats.deltas_applied == 1
+    assert s.verify(level="full") == len(s.bundles)
+
+
+def test_good_solver_key_passes(sess, bundle):
+    key = (
+        "bgd", sess._serial, bundle.key, workload_key(bundle.workload),
+        None, None, sess.stats.deltas_applied, 0,
+    )
+    assert verify_solver_key(key, sess, bundle=bundle) == []
+
+
+# ----------------------------------------------------------------------
+# the corruption corpus: every mutant rejected with its expected rule
+# ----------------------------------------------------------------------
+
+
+def test_corpus_is_big_enough():
+    assert len(CORPUS) >= 10
+
+
+@pytest.mark.parametrize("corruption", CORPUS, ids=lambda c: c.name)
+def test_corruption_rejected_with_expected_rule(sess, bundle, corruption):
+    diags = corruption.apply(sess, bundle)
+    rules = {d.rule for d in diags}
+    assert corruption.expected_rule in rules, (
+        f"{corruption.name}: expected {corruption.expected_rule}, "
+        f"got {sorted(rules)}: {[str(d) for d in diags]}"
+    )
+    # diagnostics are precise: rule id, a plan location, and a message
+    for d in diags:
+        assert d.rule and d.where and d.message
+        assert d.rule in str(d) and d.where in str(d)
+
+
+def test_corruptions_leave_the_bundle_pristine(sess, bundle):
+    """Corruptions mutate deep copies — after the whole corpus runs, the
+    live bundle still verifies clean (no corpus cross-contamination)."""
+    for c in CORPUS:
+        c.apply(sess, bundle)
+    assert verify_bundle(bundle, session=sess, level="full") == []
+
+
+# ----------------------------------------------------------------------
+# the check= knob through the executor plane
+# ----------------------------------------------------------------------
+
+
+def test_cheap_mode_checks_on_cache_miss_only(bundle):
+    plane = ExecutorPlane()
+    plane.execute(bundle.plan, check="cheap")
+    assert (plane.stats.checks, plane.stats.misses) == (1, 1)
+    plane.execute(bundle.plan, check="cheap")       # hit: already verified
+    assert (plane.stats.checks, plane.stats.hits) == (1, 1)
+    plane.execute(bundle.plan, check="strict")      # strict: every pass
+    plane.execute(bundle.plan, check="strict")
+    assert plane.stats.checks == 3
+    assert "checks" in plane.stats.snapshot()
+
+
+def test_strict_mode_rejects_corrupt_plan_before_execution(bundle):
+    plan = copy.deepcopy(bundle.plan)
+    var = plan.order[0]
+    sp = next(iter(plan.node_sigs[var].values()))
+    sp.out_id[0] = sp.n_out + 9
+    plane = ExecutorPlane()
+    with pytest.raises(PlanVerificationError, match="P106"):
+        plane.execute(plan, check="strict")
+    assert plane.stats.executions == 0              # rejected pre-flight
+    plane.execute(plan, check="off")                # knob off: runs anyway
+
+
+def test_check_off_never_verifies(bundle):
+    plane = ExecutorPlane()
+    plane.execute(bundle.plan, check="off")
+    assert plane.stats.checks == 0
+
+
+def test_mode_knob_roundtrip():
+    prev = check_mod.set_default_mode("strict")
+    try:
+        assert check_mod.default_mode() == "strict"
+        assert check_mod.resolve_mode(None) == "strict"
+        assert check_mod.resolve_mode("off") == "off"
+        with pytest.raises(ValueError):
+            check_mod.resolve_mode("bogus")
+        with pytest.raises(ValueError):
+            check_mod.set_default_mode("loud")
+    finally:
+        check_mod.set_default_mode(prev)
+
+
+# ----------------------------------------------------------------------
+# acdc-lint: every rule has a firing positive and a clean negative
+# ----------------------------------------------------------------------
+
+RULE_IDS = ["ACDC001", "ACDC002", "ACDC003", "ACDC004", "ACDC005"]
+
+
+@pytest.mark.parametrize("rule", RULE_IDS)
+def test_lint_rule_fires_on_positive_fixture(rule):
+    path = FIXTURES / f"acdc{rule[-3:]}_pos.py"
+    diags = lint_paths([str(path)])
+    assert diags, f"{path.name} produced no findings"
+    assert {d.rule for d in diags} == {rule}
+
+
+@pytest.mark.parametrize("rule", RULE_IDS)
+def test_lint_rule_quiet_on_negative_fixture(rule):
+    path = FIXTURES / f"acdc{rule[-3:]}_neg.py"
+    assert lint_paths([str(path)]) == []
+
+
+def test_lint_suppression_comment():
+    src = (
+        "import numpy as np\n"
+        "def row_key(col):\n"
+        "    return col.view(np.int64)  # acdc: ignore[ACDC003]\n"
+    )
+    assert lint_source(src) == []
+    unsuppressed = src.replace("  # acdc: ignore[ACDC003]", "")
+    assert [d.rule for d in lint_source(unsuppressed)] == ["ACDC003"]
+    wrong_rule = src.replace("ACDC003]", "ACDC001]")
+    assert [d.rule for d in lint_source(wrong_rule)] == ["ACDC003"]
+    bare = src.replace("[ACDC003]", "")
+    assert lint_source(bare) == []
+
+
+def test_lint_syntax_error_is_a_diagnostic():
+    assert [d.rule for d in lint_source("def f(:\n")] == ["ACDC000"]
+
+
+def test_src_tree_lints_clean():
+    """The merge gate: the shipped source carries zero acdc-lint findings
+    (CI runs the same sweep via scripts/acdc_lint.py)."""
+    src = HERE.parent / "src" / "repro"
+    assert [str(d) for d in lint_paths([str(src)])] == []

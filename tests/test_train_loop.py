@@ -48,7 +48,7 @@ def test_restart_resumes_from_checkpoint(tmp_path):
     data = SyntheticTokens(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
     loop = LoopConfig(total_steps=10, ckpt_every=5, ckpt_dir=str(tmp_path),
                       log_every=5)
-    out1 = train_loop(model, adamw(3e-3), data, loop)
+    train_loop(model, adamw(3e-3), data, loop)
     # "crash" and restart with a longer horizon: must resume at step 10
     loop2 = dataclasses.replace(loop, total_steps=15)
     out2 = train_loop(model, adamw(3e-3), data, loop2)
