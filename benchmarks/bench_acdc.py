@@ -266,6 +266,49 @@ def bench_executor_cache(emit) -> None:
     )
 
 
+def bench_frontend(emit) -> None:
+    """Schema-generic frontend (DESIGN.md §14): lower a snowflake catalog
+    through catalog -> GYO -> variable order -> engine, and show the
+    warm-fingerprint second touch — a fresh Session over a structurally
+    identical database re-enters the compiled-executor plane without a
+    single new XLA trace. Reported: cold vs warm end-to-end fit seconds
+    and the schema fingerprint both sessions share."""
+    from repro.core.executor import global_plane
+    from repro.data import snowflake
+
+    plane = global_plane()
+    plane.clear()  # self-contained cold numbers
+    sf = snowflake.SnowflakeSpec(n_fact=int(800 * SCALE) or 8, seed=0)
+    cat, q = snowflake.catalog(sf), snowflake.query(sf)
+    cfg = SolverConfig(max_iters=200, tol=1e-9, policy="single")
+    spec = PolynomialRegression(degree=2, lam=1e-2)
+
+    t0 = time.perf_counter()
+    sess = Session(snowflake.generate(sf), catalog=cat, query=q)
+    cold_fit = sess.fit(spec, solver=cfg)
+    cold_s = time.perf_counter() - t0
+    cold_traces = sess.stats.executor_traces
+
+    t0 = time.perf_counter()
+    sess2 = Session(snowflake.generate(sf), catalog=cat, query=q)
+    warm_fit = sess2.fit(spec, solver=cfg)
+    warm_s = time.perf_counter() - t0
+    assert sess.schema_fingerprint == sess2.schema_fingerprint
+    assert sess2.stats.executor_traces == 0, (
+        "warm-fingerprint session re-traced an identical plan shape"
+    )
+    assert abs(float(cold_fit.loss) - float(warm_fit.loss)) < 1e-9
+
+    emit(
+        "frontend/snowflake-pr2", warm_s * 1e6,
+        f"cold_fit_s={cold_s:.3f};warm_fit_s={warm_s:.3f};"
+        f"speedup={cold_s / max(warm_s, 1e-9):.1f}x;"
+        f"cold_traces={cold_traces};warm_traces={sess2.stats.executor_traces};"
+        f"fingerprint={sess.schema_fingerprint};"
+        f"order_cost={sess.frontend.order_cost:.0f}",
+    )
+
+
 def bench_multi_tenant(emit) -> None:
     """ROADMAP "Multi-tenant serving": replay a mixed fit/predict trace
     through one ModelServer (shared bundle cache, one Session) vs the

@@ -36,6 +36,7 @@ BENCHES = [
     bench_acdc.bench_session_reuse,
     bench_acdc.bench_delta_refresh,
     bench_acdc.bench_executor_cache,
+    bench_acdc.bench_frontend,
     bench_acdc.bench_multi_tenant,
     bench_acdc.bench_qps,
     bench_acdc.bench_grad_compression,

@@ -69,7 +69,8 @@ def resolve_mode(check=None) -> str:
 _PLAN_EXPORTS = frozenset({
     "Diagnostic", "PlanVerificationError",
     "verify_plan", "verify_bundle", "verify_solver_key", "verify_session",
-    "check_plan", "check_bundle", "check_solver_key",
+    "verify_frontend",
+    "check_plan", "check_bundle", "check_solver_key", "check_frontend",
 })
 _LINT_EXPORTS = frozenset({"LintDiagnostic", "lint_source", "lint_paths"})
 _CORRUPT_EXPORTS = frozenset({"CORPUS", "run_corpus"})

@@ -21,6 +21,7 @@ from typing import Callable, List
 from .plan import (
     Diagnostic,
     verify_bundle,
+    verify_frontend,
     verify_plan,
     verify_solver_key,
 )
@@ -169,6 +170,101 @@ def cross_session_solver_key(session, bundle) -> List[Diagnostic]:
     return verify_solver_key(key, session, bundle=bundle)
 
 
+# --- frontend (Q4xx) mutants ------------------------------------------
+
+
+def _frontend_of(session, bundle):
+    """The session's frontend plan, or one rebuilt from its database.
+
+    Legacy sessions (hand-wired order, e.g. the test fixtures) have no
+    frontend; the catalog is reverse-engineered from the database and the
+    query reconstructed from the bundle key, so the Q-rule mutants run
+    against every session the corpus sweeps.
+    """
+    fe = getattr(session, "frontend", None)
+    if fe is not None:
+        return fe
+    from repro.frontend import Catalog, Query, plan_query
+
+    cat = Catalog.from_database(session.db)
+    q = Query(features=bundle.key.features, response=bundle.key.response)
+    return plan_query(cat, q, session.db)
+
+
+def cyclic_schema(session, bundle) -> List[Diagnostic]:
+    fe = _frontend_of(session, bundle)
+    # overwrite the schemas with a triangle hypergraph: GYO cannot find an
+    # ear, so the acyclicity witness the lowering relied on is gone
+    mutant = dataclasses.replace(
+        fe,
+        schemas={"R1": ("a", "b"), "R2": ("b", "c"), "R3": ("c", "a")},
+    )
+    return [d for d in verify_frontend(mutant) if d.rule == "Q401"]
+
+
+def order_drops_variable(session, bundle) -> List[Diagnostic]:
+    fe = _frontend_of(session, bundle)
+    order = copy.deepcopy(fe.order)
+    # prune the first leaf below the root: that variable's relation rows
+    # would silently cross-product out of every aggregate
+    node = order
+    while node.children:
+        if not node.children[0].children:
+            del node.children[0]
+            break
+        node = node.children[0]
+    else:
+        raise AssertionError("order has a single variable; cannot prune")
+    mutant = dataclasses.replace(fe, order=order)
+    return verify_frontend(mutant)
+
+
+def fd_inconsistent_data(session, bundle) -> List[Diagnostic]:
+    import numpy as np
+
+    from repro.core.schema import Database, Relation
+
+    fe = _frontend_of(session, bundle)
+    db = session.db
+    fd = next(
+        (f for f in db.fds if any(db.adom.get(b, 0) > 1 for b in f.determined)),
+        None,
+    )
+    if fd is None:
+        raise AssertionError("corpus needs an FD with a >1-domain attr")
+    host = next(
+        r for r in db.relations.values()
+        if {fd.determinant, *fd.determined} <= set(r.columns)
+    )
+    b = next(b for b in fd.determined if db.adom.get(b, 0) > 1)
+    # duplicate the host's first row with a flipped determined value: the
+    # determinant now maps to two values, so fd_map would overwrite one
+    cols = {}
+    for a, col in host.columns.items():
+        col = np.asarray(col)
+        extra = col[:1].copy()
+        if a == b:
+            extra[0] = (extra[0] + 1) % db.adom[b]
+        cols[a] = np.concatenate([col, extra])
+    tampered = Database(
+        relations={
+            **db.relations, host.name: Relation(host.name, cols),
+        },
+        attributes=db.attributes,
+        fds=db.fds,
+        adom=db.adom,
+        dictionaries=db.dictionaries,
+    )
+    return verify_frontend(fe, db=tampered)
+
+
+def fingerprint_mismatch(session, bundle) -> List[Diagnostic]:
+    fe = _frontend_of(session, bundle)
+    key = dataclasses.replace(bundle.key, fingerprint="f00dfacef00dface")
+    mutant = dataclasses.replace(bundle, key=key)
+    return verify_frontend(fe, bundles=[mutant])
+
+
 CORPUS = (
     Corruption(
         "dtype_downgrade", "P101",
@@ -234,6 +330,26 @@ CORPUS = (
         "cross_session_solver_key", "S302",
         "driver with baked closures reused across sessions",
         cross_session_solver_key,
+    ),
+    Corruption(
+        "cyclic_schema", "Q401",
+        "triangle join lowered as width-1 silently mis-joins",
+        cyclic_schema,
+    ),
+    Corruption(
+        "order_drops_variable", "Q402",
+        "inferred order losing a variable cross-products its relation",
+        order_drops_variable,
+    ),
+    Corruption(
+        "fd_inconsistent_data", "Q403",
+        "declared FD violated by data: fd_map overwrites a mapping",
+        fd_inconsistent_data,
+    ),
+    Corruption(
+        "fingerprint_mismatch", "Q404",
+        "forged/stale schema fingerprint on a bundle key poisons caches",
+        fingerprint_mismatch,
     ),
 )
 

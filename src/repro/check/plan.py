@@ -7,8 +7,8 @@ plan does not crash, it silently mis-aggregates. This module is an
 abstract-interpretation pass over that IR: WITHOUT executing anything it
 infers per-step shapes, dtypes and segment-id ranges and checks them
 against the invariants the executor assumes. Every check carries a rule
-id (P1xx plan, B2xx bundle, S3xx solver key) so a violation maps to one
-invariant in the DESIGN.md §13 catalogue.
+id (P1xx plan, B2xx bundle, S3xx solver key, Q4xx frontend) so a
+violation maps to one invariant in the DESIGN.md §13/§14 catalogue.
 
 Two levels:
 
@@ -25,7 +25,7 @@ The verifier never mutates the plan and never touches a device.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List
 
 import numpy as np
 
@@ -490,12 +490,133 @@ def verify_solver_key(key, session, bundle=None) -> List[Diagnostic]:
     return out
 
 
+# ----------------------------------------------------------------------
+# Q4xx: frontend rules — catalog/query lowering invariants (DESIGN.md §14)
+# ----------------------------------------------------------------------
+
+
+def _order_vars(node) -> List[str]:
+    out = [node.var]
+    for ch in node.children:
+        out.extend(_order_vars(ch))
+    return out
+
+
+def verify_frontend(frontend, db=None, bundles=()) -> List[Diagnostic]:
+    """Frontend-plan invariants over a lowered (catalog, query) pair.
+
+    Q401  the query's schemas are α-acyclic (GYO reduction terminates)
+    Q402  the variable order covers every attribute of every in-scope
+          relation exactly once (a dropped join variable silently
+          cross-products that relation out of the aggregates)
+    Q403  every declared FD is hosted and single-valued in the data, so
+          ``Database.fd_map`` is a function, not a lossy overwrite
+    Q404  the plan's schema fingerprint matches a recomputation from its
+          catalog/query, and every bundle key carrying a fingerprint
+          agrees (a mismatch means cache identity was forged or went
+          stale across a schema change)
+    """
+    from repro.frontend.join_tree import CyclicSchemaError, gyo_reduce
+    from repro.frontend.plan import schema_fingerprint
+
+    out: List[Diagnostic] = []
+    where = "frontend"
+
+    try:
+        gyo_reduce(frontend.schemas)
+    except CyclicSchemaError as e:
+        out.append(Diagnostic(
+            "Q401", where,
+            f"schemas are not alpha-acyclic: GYO stalls on "
+            f"{list(e.core)}; width-1 lowering is unsound here",
+        ))
+
+    ovars = _order_vars(frontend.order)
+    dup = sorted({v for v in ovars if ovars.count(v) > 1})
+    if dup:
+        out.append(Diagnostic(
+            "Q402", where,
+            f"variable order places {dup} more than once",
+        ))
+    placed = set(ovars)
+    for rel, attrs in sorted(frontend.schemas.items()):
+        missing = sorted(set(attrs) - placed)
+        if missing:
+            out.append(Diagnostic(
+                "Q402", where,
+                f"variable order drops {missing} of relation {rel}; its "
+                "tuples would be cross-producted out of the aggregates",
+            ))
+
+    if db is not None:
+        out.extend(_verify_fds(db))
+
+    want = schema_fingerprint(frontend.catalog, frontend.query)
+    if frontend.fingerprint != want:
+        out.append(Diagnostic(
+            "Q404", where,
+            f"plan fingerprint {frontend.fingerprint!r} != recomputed "
+            f"{want!r} for its own catalog/query",
+        ))
+    for b in bundles:
+        fp = getattr(b.key, "fingerprint", None)
+        if fp is not None and fp != want:
+            out.append(Diagnostic(
+                "Q404", f"bundle[{b.key.features}]",
+                f"bundle key fingerprint {fp!r} != session schema "
+                f"fingerprint {want!r}",
+            ))
+    return out
+
+
+def _verify_fds(db) -> List[Diagnostic]:
+    """Q403: declared FDs are hosted and single-valued (fd_map-safe)."""
+    out: List[Diagnostic] = []
+    for fd in db.fds:
+        need = {fd.determinant, *fd.determined}
+        host = None
+        for rel in db.relations.values():
+            if need <= set(rel.columns):
+                host = rel
+                break
+        if host is None:
+            out.append(Diagnostic(
+                "Q403", f"fd[{fd.determinant}]",
+                f"no relation hosts FD {fd.determinant} -> "
+                f"{list(fd.determined)}; fd_map would raise at fit time",
+            ))
+            continue
+        det = np.asarray(host.columns[fd.determinant])
+        n_det = len(np.unique(det))
+        for b in fd.determined:
+            pair = np.stack(
+                [det.astype(np.int64),
+                 np.asarray(host.columns[b]).astype(np.int64)],
+                axis=1,
+            )
+            n_pairs = len(np.unique(pair, axis=0))
+            if n_pairs > n_det:
+                out.append(Diagnostic(
+                    "Q403", f"fd[{fd.determinant}]",
+                    f"declared FD {fd.determinant} -> {b} is violated in "
+                    f"{host.name}: {n_pairs} distinct pairs over {n_det} "
+                    "determinant values; fd_map would silently overwrite",
+                ))
+    return out
+
+
 def verify_session(session, level: str = "full") -> List[Diagnostic]:
     """Verify every compiled bundle in a session (the ``acdc_check``
-    entry point)."""
+    entry point), plus the frontend plan when the session was built from
+    a (catalog, query) pair."""
     out: List[Diagnostic] = []
     for b in session.bundles:
         out.extend(verify_bundle(b, session=session, level=level))
+    fe = getattr(session, "frontend", None)
+    if fe is not None:
+        out.extend(
+            verify_frontend(fe, db=session.db, bundles=session.bundles)
+        )
     return out
 
 
@@ -519,3 +640,7 @@ def check_bundle(bundle, session=None, db=None, level: str = "full") -> None:
 
 def check_solver_key(key, session, bundle=None) -> None:
     _raise_if(verify_solver_key(key, session, bundle=bundle))
+
+
+def check_frontend(frontend, db=None, bundles=()) -> None:
+    _raise_if(verify_frontend(frontend, db=db, bundles=bundles))

@@ -21,9 +21,10 @@ from typing import Iterator, List, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.schema import Database, make_database
+from repro.core.schema import Database
 from repro.core.variable_order import VarNode, vo
 from repro.delta import Delta
+from repro.frontend import Catalog, Query, table
 
 CENSUS_FEATURES = ["population", "median_age", "house_units", "families"]
 LOCATION_FEATURES = ["dist_comp1", "dist_comp2"]
@@ -31,6 +32,61 @@ WEATHER_CONT = ["mean_temp"]
 WEATHER_CAT = ["rain", "snow", "thunder"]
 ITEM_CONT = ["price"]
 ITEM_CAT = ["category", "subcategory", "categoryCluster"]
+
+# The whole schema as ONE declarative Catalog (DESIGN.md §14): the
+# generator lowers through it, the frontend infers the join tree and
+# variable order from it, and the hand-built ``variable_order()`` below
+# survives only as the parity oracle the tests pin against.  Column order
+# matches the legacy relation dicts exactly so the lowered Database is
+# bit-identical to the pre-catalog generator.
+CATALOG = Catalog(
+    tables=(
+        table(
+            "Inventory",
+            {"locn": "key", "date": "key", "sku": "categorical",
+             "units": "continuous"},
+        ),
+        table(
+            "Census",
+            {"zip": "categorical",
+             **{f: "continuous" for f in CENSUS_FEATURES}},
+        ),
+        table(
+            "Location",
+            {"locn": "key", "zip": "categorical",
+             **{f: "continuous" for f in LOCATION_FEATURES}},
+        ),
+        table(
+            "Item",
+            {"sku": "categorical", "price": "continuous",
+             "subcategory": "categorical", "category": "categorical",
+             "categoryCluster": "categorical"},
+        ),
+        table(
+            "Weather",
+            {"locn": "key", "date": "key", "mean_temp": "continuous",
+             "rain": "categorical", "snow": "categorical",
+             "thunder": "categorical"},
+        ),
+    ),
+    fds=(("sku", tuple(ITEM_CAT)),),
+)
+
+
+def catalog() -> Catalog:
+    """The retailer schema as a frontend catalog."""
+    return CATALOG
+
+
+def query(
+    feats: Sequence[str] = None, use_fds: bool = False
+) -> Query:
+    """The standard retailer learning query (all features, predict units)."""
+    return Query(
+        features=tuple(feats) if feats is not None else tuple(features()),
+        response="units",
+        use_fds=use_fds,
+    )
 
 
 @dataclasses.dataclass
@@ -118,20 +174,14 @@ def generate(spec: RetailerSpec) -> Database:
         "units": units,
     }
 
-    return make_database(
-        relations={
+    return CATALOG.database(
+        {
             "Inventory": inventory,
             "Census": census,
             "Location": location,
             "Item": item,
             "Weather": weather,
-        },
-        continuous=["units", "price", "mean_temp"]
-        + CENSUS_FEATURES
-        + LOCATION_FEATURES,
-        categorical=["zip", "sku"] + ITEM_CAT + WEATHER_CAT,
-        keys=["locn", "date"],
-        fds=[("sku", ITEM_CAT)],
+        }
     )
 
 

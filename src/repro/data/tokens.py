@@ -69,19 +69,54 @@ class SyntheticTokens:
             stop.set()
 
 
-def retailer_tuples_as_tokens(db, vocab: int, seq_len: int):
-    """Bridge utility: serialize retailer join tuples into token streams
-    (used by the lm_head_probe example to connect the two planes)."""
-    import numpy as np
+#: per-position mixing multipliers; position i gets _MIX[i] (last key
+#: gets 1 so the retailer ("sku","locn","date") layout hashes exactly as
+#: the historical sku*31 + locn*17 + date
+_MIX = (31, 17, 1, 41, 23, 7, 13, 3)
 
-    inv = db.relations["Inventory"]
-    ids = (
-        inv.columns["sku"].astype(np.int64) * 31
-        + inv.columns["locn"].astype(np.int64) * 17
-        + inv.columns["date"].astype(np.int64)
+
+def tuples_as_tokens(db, vocab: int, seq_len: int, fact_table=None,
+                     key_attrs=None, catalog=None):
+    """Serialize a fact table's join tuples into token streams.
+
+    ``fact_table``/``key_attrs`` default from ``catalog`` (a
+    ``frontend.Catalog``): the fact table is the relation hosting the
+    most join variables and the keys are its join variables in declared
+    column order. Without a catalog one is reverse-engineered from the
+    database, so any schema works out of the box.
+    """
+    if fact_table is None or key_attrs is None:
+        if catalog is None:
+            from repro.frontend import Catalog
+
+            catalog = Catalog.from_database(db)
+        if fact_table is None:
+            fact_table = catalog.fact_table()
+        if key_attrs is None:
+            jv = catalog.join_variables()
+            key_attrs = tuple(
+                a for a in catalog.table_def(fact_table).attrs if a in jv
+            )
+    rel = db.relations[fact_table]
+    if not key_attrs:
+        raise ValueError(f"{fact_table} has no key attributes to tokenize")
+    if len(key_attrs) > len(_MIX):
+        raise ValueError(f"at most {len(_MIX)} key attributes supported")
+    ids = sum(
+        rel.columns[a].astype(np.int64) * m
+        for a, m in zip(key_attrs, _MIX)
     ) % vocab
     n = (len(ids) // (seq_len + 1)) * (seq_len + 1)
     if n == 0:
         raise ValueError("not enough tuples")
     grid = ids[:n].reshape(-1, seq_len + 1).astype(np.int32)
     return {"tokens": grid[:, :-1], "labels": grid[:, 1:]}
+
+
+def retailer_tuples_as_tokens(db, vocab: int, seq_len: int):
+    """Bridge utility: serialize retailer join tuples into token streams
+    (used by the lm_head_probe example to connect the two planes)."""
+    return tuples_as_tokens(
+        db, vocab, seq_len,
+        fact_table="Inventory", key_attrs=("sku", "locn", "date"),
+    )

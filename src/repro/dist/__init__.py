@@ -27,6 +27,7 @@ from .shard import (
     input_specs,
     lower_aggregate_pass,
     lower_bgd_step,
+    shapes_from_bundle,
     shard_coo,
 )
 
@@ -46,5 +47,6 @@ __all__ = [
     "lower_bgd_step",
     "quantize",
     "replan",
+    "shapes_from_bundle",
     "shard_coo",
 ]

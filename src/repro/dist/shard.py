@@ -29,6 +29,7 @@ combine — the default multi-device convergence path (core/solver.py).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -59,6 +60,66 @@ class AcdcShapes:
     pair_cols: int = 64
     sigma_nnz: int = 46_000_000            # paper: 46M distinct aggregates
     n_params: int = 154_624                # padded 154,033 + 562
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def shapes_from_bundle(bundle, db=None, n_shards: int = 512) -> AcdcShapes:
+    """Derive dry-run shard sizes from a compiled bundle's actual plan
+    stats instead of the hard-coded production retailer constants.
+
+    Works for any schema the frontend lowers: fact rows come from the
+    plan's ``|Q(D)|``, the categorical tables from the bundle's singleton
+    group-by signatures (active domains from ``db.adom`` when given, else
+    the observed key range), the pair hash table from the widest multi-
+    attribute signature, and ``sigma_nnz`` from the aggregate tables'
+    value counts. ``n_params`` needs ``db`` (the Sigma parameter space);
+    without it a padded square-root-of-nnz estimate stands in.
+    """
+    fz = bundle.plan.fz if bundle.plan is not None else None
+    rows = int(fz.num_join_rows) if fz is not None else 0
+    by_sig: Dict[Tuple[str, ...], list] = {}
+    for m, (keys, vals) in bundle.result.tables.items():
+        sig = tuple(sorted(keys))
+        ent = by_sig.setdefault(sig, [0, 0, 0])
+        ent[0] += 1                                   # payload monomials
+        ent[1] += int(np.asarray(vals).size)          # stored values
+        if sig:
+            n_keys = len(np.asarray(next(iter(keys.values()))))
+            ent[2] = max(ent[2], n_keys)              # distinct key rows
+    nnz = sum(v[1] for v in by_sig.values())
+    cat_tables = tuple(
+        (
+            sig[0],
+            int(db.adom[sig[0]]) if db is not None else _next_pow2(v[2]),
+            max(v[0], 1),
+        )
+        for sig, v in sorted(by_sig.items())
+        if len(sig) == 1
+    )
+    multi = [v for sig, v in by_sig.items() if len(sig) >= 2]
+    pair_slots = _next_pow2(max((v[2] for v in multi), default=1))
+    pair_cols = max((v[0] for v in multi), default=1)
+    scalars = by_sig.get((), [1, 0, 0])[0]
+    if db is not None:
+        from repro.core.sigma import build_param_space
+
+        n_params = int(
+            build_param_space(db, bundle.workload, bundle.result).total
+        )
+    else:
+        n_params = _next_pow2(int(np.sqrt(nnz)))
+    return AcdcShapes(
+        rows_per_shard=max(-(-rows // n_shards), 1),
+        n_cont=max(int(np.ceil(np.sqrt(scalars))), 1),
+        cat_tables=cat_tables,
+        pair_hash_slots=pair_slots,
+        pair_cols=pair_cols,
+        sigma_nnz=nnz,
+        n_params=n_params,
+    )
 
 
 def input_specs(shapes: AcdcShapes, n_shards: int) -> Dict[str, jax.ShapeDtypeStruct]:
@@ -123,7 +184,10 @@ def aggregate_pass(shapes: AcdcShapes, data_axes: Tuple[str, ...],
             yrow = jax.lax.dynamic_slice_in_dim(yb, rank * rows_loc, rows_loc, 1)
             return acc + jnp.dot(yrow.T, yb, preferred_element_type=jnp.float32), None
 
-        xb = x.reshape(-1, 1000, f)
+        # scan block: 1000 rows when the shard divides evenly (production
+        # shapes), else the largest compatible block — bundle-derived
+        # shapes (shapes_from_bundle) have arbitrary row counts
+        xb = x.reshape(-1, math.gcd(x.shape[0], 1000), f)
         gram, _ = jax.lax.scan(
             block, jnp.zeros((rows_loc, f2), jnp.float32), xb
         )

@@ -1,0 +1,57 @@
+"""Schema-generic relational frontend (DESIGN.md §14).
+
+catalog → query → GYO join tree → width-1 variable order → the existing
+``core.variable_order.analyze`` / engine / ExecutorPlane plane, unchanged.
+"""
+
+from repro.frontend.catalog import (
+    Catalog,
+    ColumnDef,
+    FrontendError,
+    TableDef,
+    load_schema,
+    table,
+)
+from repro.frontend.join_tree import (
+    CyclicSchemaError,
+    JoinTree,
+    gyo_reduce,
+    is_acyclic,
+    join_variables,
+)
+from repro.frontend.order import (
+    CostContext,
+    CostModel,
+    candidate_orders,
+    choose_order,
+    fanout_cost,
+)
+from repro.frontend.plan import FrontendPlan, plan_query, schema_fingerprint
+from repro.frontend.query import Query, parse_query
+from repro.frontend.synth import synthesize, synthetic_requests
+
+__all__ = [
+    "Catalog",
+    "ColumnDef",
+    "CostContext",
+    "CostModel",
+    "CyclicSchemaError",
+    "FrontendError",
+    "FrontendPlan",
+    "JoinTree",
+    "Query",
+    "TableDef",
+    "candidate_orders",
+    "choose_order",
+    "fanout_cost",
+    "gyo_reduce",
+    "is_acyclic",
+    "join_variables",
+    "load_schema",
+    "parse_query",
+    "plan_query",
+    "schema_fingerprint",
+    "synthesize",
+    "synthetic_requests",
+    "table",
+]

@@ -1,0 +1,248 @@
+"""Declarative schema catalog: the frontend's source of truth.
+
+A :class:`Catalog` is the schema-generic replacement for the hand-wired
+retailer module: it names every table, tags each column with a kind
+(``continuous`` feature, ``categorical`` feature, or join ``key``), and
+records the declared functional dependencies.  From a catalog plus raw
+column arrays the frontend lowers into the exact same
+:func:`repro.core.schema.make_database` call the retailer generator has
+always made — the engine below never sees the catalog, only the
+``Database`` it produces.
+
+Catalogs round-trip through JSON (``--schema path.json`` in the launch
+CLIs) and can be reverse-engineered from an existing ``Database`` via
+:meth:`Catalog.from_database`, which is how the corruption corpus builds
+frontend context for sessions that were constructed the legacy way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.core.schema import Database, Kind, make_database
+
+KINDS = ("continuous", "categorical", "key")
+
+_KIND_OF = {
+    Kind.CONTINUOUS: "continuous",
+    Kind.CATEGORICAL: "categorical",
+    Kind.KEY: "key",
+}
+
+
+class FrontendError(ValueError):
+    """A malformed catalog, query, or schema the frontend cannot lower."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnDef:
+    """One column of one table: a name plus its kind tag."""
+
+    name: str
+    kind: str
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise FrontendError(
+                f"column {self.name!r}: unknown kind {self.kind!r} "
+                f"(expected one of {KINDS})"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class TableDef:
+    """One table: an ordered tuple of column definitions."""
+
+    name: str
+    columns: Tuple[ColumnDef, ...]
+
+    @property
+    def attrs(self) -> Tuple[str, ...]:
+        return tuple(c.name for c in self.columns)
+
+
+def table(name: str, columns: Mapping[str, str]) -> TableDef:
+    """Convenience constructor: ``table("Item", {"sku": "categorical", ...})``."""
+    return TableDef(name, tuple(ColumnDef(a, k) for a, k in columns.items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Catalog:
+    """A full relational schema: tables, column kinds, declared FDs.
+
+    ``fds`` entries are ``(determinant, (determined, ...))`` attribute-name
+    pairs, mirroring the tuples :func:`make_database` accepts.
+    """
+
+    tables: Tuple[TableDef, ...]
+    fds: Tuple[Tuple[str, Tuple[str, ...]], ...] = ()
+
+    def __post_init__(self) -> None:
+        if not self.tables:
+            raise FrontendError("catalog has no tables")
+        names = [t.name for t in self.tables]
+        if len(set(names)) != len(names):
+            raise FrontendError(f"duplicate table names in catalog: {names}")
+        kinds = self.attribute_kinds()  # validates cross-table consistency
+        for det, dets in self.fds:
+            for a in (det, *dets):
+                if a not in kinds:
+                    raise FrontendError(f"FD references unknown attribute {a!r}")
+            if kinds[det] == "continuous":
+                raise FrontendError(
+                    f"FD determinant {det!r} is continuous; determinants must "
+                    "be encoded (categorical or key) attributes"
+                )
+
+    # -- schema views ---------------------------------------------------
+
+    def table_def(self, name: str) -> TableDef:
+        for t in self.tables:
+            if t.name == name:
+                return t
+        raise FrontendError(f"no table {name!r} in catalog")
+
+    def attribute_kinds(self) -> Dict[str, str]:
+        """Attribute name -> kind, validated consistent across tables."""
+        kinds: Dict[str, str] = {}
+        for t in self.tables:
+            seen = set()
+            for c in t.columns:
+                if c.name in seen:
+                    raise FrontendError(
+                        f"table {t.name!r} repeats column {c.name!r}"
+                    )
+                seen.add(c.name)
+                if c.name in kinds and kinds[c.name] != c.kind:
+                    raise FrontendError(
+                        f"attribute {c.name!r} declared {kinds[c.name]!r} and "
+                        f"{c.kind!r} in different tables"
+                    )
+                kinds.setdefault(c.name, c.kind)
+        return kinds
+
+    def schemas(
+        self, tables: Tuple[str, ...] = ()
+    ) -> Dict[str, Tuple[str, ...]]:
+        """Table name -> attribute tuple, optionally restricted."""
+        scope = tables or tuple(t.name for t in self.tables)
+        return {n: self.table_def(n).attrs for n in scope}
+
+    def join_variables(
+        self, tables: Tuple[str, ...] = ()
+    ) -> frozenset:
+        """Attributes shared by at least two tables in scope."""
+        counts: Dict[str, int] = {}
+        for attrs in self.schemas(tables).values():
+            for a in attrs:
+                counts[a] = counts.get(a, 0) + 1
+        return frozenset(a for a, n in counts.items() if n > 1)
+
+    def fact_table(self, tables: Tuple[str, ...] = ()) -> str:
+        """The table carrying the most join variables (ties: widest, then
+        name) — the natural root for token extraction and synthesis."""
+        schemas = self.schemas(tables)
+        jv = self.join_variables(tables)
+        return max(
+            sorted(schemas),
+            key=lambda n: (sum(a in jv for a in schemas[n]), len(schemas[n])),
+        )
+
+    def scoped_fds(
+        self, tables: Tuple[str, ...] = ()
+    ) -> Tuple[Tuple[str, Tuple[str, ...]], ...]:
+        """Declared FDs fully hosted by some in-scope table."""
+        schemas = self.schemas(tables)
+        out = []
+        for det, dets in self.fds:
+            need = {det, *dets}
+            if any(need <= set(attrs) for attrs in schemas.values()):
+                out.append((det, tuple(dets)))
+        return tuple(out)
+
+    # -- lowering -------------------------------------------------------
+
+    def database(self, data: Mapping[str, Mapping[str, object]]) -> Database:
+        """Lower raw per-table column arrays into a ``Database``.
+
+        ``data`` maps table name -> {column name -> array-like}; every
+        catalog table must be present with exactly its declared columns.
+        """
+        missing = [t.name for t in self.tables if t.name not in data]
+        if missing:
+            raise FrontendError(f"data missing tables {missing}")
+        relations = {}
+        for t in self.tables:
+            cols = data[t.name]
+            if set(cols) != set(t.attrs):
+                raise FrontendError(
+                    f"table {t.name!r}: data columns {sorted(cols)} != "
+                    f"declared {sorted(t.attrs)}"
+                )
+            relations[t.name] = {a: cols[a] for a in t.attrs}
+        kinds = self.attribute_kinds()
+        return make_database(
+            relations=relations,
+            continuous=[a for a, k in kinds.items() if k == "continuous"],
+            categorical=[a for a, k in kinds.items() if k == "categorical"],
+            keys=[a for a, k in kinds.items() if k == "key"],
+            fds=[(det, list(dets)) for det, dets in self.fds],
+        )
+
+    # -- interop --------------------------------------------------------
+
+    @classmethod
+    def from_database(cls, db: Database) -> "Catalog":
+        """Reverse-engineer a catalog from an existing ``Database``."""
+        tables = tuple(
+            TableDef(
+                name,
+                tuple(
+                    ColumnDef(a, _KIND_OF[db.kind(a)]) for a in rel.columns
+                ),
+            )
+            for name, rel in db.relations.items()
+        )
+        fds = tuple(
+            (fd.determinant, tuple(fd.determined)) for fd in db.fds
+        )
+        return cls(tables=tables, fds=fds)
+
+    def to_json(self) -> dict:
+        return {
+            "tables": [
+                {"name": t.name, "columns": {c.name: c.kind for c in t.columns}}
+                for t in self.tables
+            ],
+            "fds": [[det, list(dets)] for det, dets in self.fds],
+        }
+
+    @classmethod
+    def from_json(cls, obj: Mapping) -> "Catalog":
+        try:
+            tables = tuple(
+                table(t["name"], t["columns"]) for t in obj["tables"]
+            )
+            fds = tuple(
+                (det, tuple(dets)) for det, dets in obj.get("fds", [])
+            )
+        except (KeyError, TypeError) as e:
+            raise FrontendError(f"malformed catalog JSON: {e}") from e
+        return cls(tables=tables, fds=fds)
+
+
+def load_schema(path: str) -> Tuple[Catalog, Optional[dict]]:
+    """Load ``--schema path.json``: a catalog plus optional extras.
+
+    The JSON object holds the catalog fields (``tables``, ``fds``) and may
+    also carry a ``query`` object (``select``/``response``/``use_fds``) and
+    a ``synthetic`` object (``rows``/``seed``) consumed by the launch CLIs;
+    those extras are returned verbatim as the second element.
+    """
+    with open(path, "r", encoding="utf-8") as f:
+        obj = json.load(f)
+    catalog = Catalog.from_json(obj)
+    extras = {k: obj[k] for k in ("query", "synthetic") if k in obj}
+    return catalog, (extras or None)

@@ -1,0 +1,141 @@
+"""GYO-style acyclicity reduction and join-tree inference.
+
+The Graham–Yu–Özsoyoğlu reduction repeatedly (1) strips attributes that
+appear in exactly one alive hyperedge and (2) removes "ear" edges whose
+remaining attributes are contained in another alive edge, recording the
+containing edge as the ear's parent witness.  The schema is α-acyclic iff
+the reduction terminates with a single edge; the recorded parents form a
+join tree satisfying the running-intersection property, which is exactly
+the precondition the width-1 variable-order engine (paper Def 4.1 via
+``core.variable_order.analyze``) needs.  Cyclic schemas raise
+:class:`CyclicSchemaError` carrying the irreducible core, so callers (and
+check rule Q401) can name the offending relations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from repro.frontend.catalog import FrontendError
+
+
+class CyclicSchemaError(FrontendError):
+    """The schema hypergraph is not α-acyclic."""
+
+    def __init__(self, core: Sequence[str]):
+        self.core = tuple(core)
+        super().__init__(
+            f"schema is not alpha-acyclic: GYO reduction stalls on "
+            f"{list(self.core)}; a width-1 variable order cannot cover its "
+            "join bags"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinTree:
+    """A rooted join tree over relation names.
+
+    ``parent[root]`` is ``None``.  Because the running-intersection
+    property is invariant under re-rooting, :meth:`rooted_at` can pivot the
+    tree to any relation — that is the degree of freedom the variable-order
+    cost search explores.
+    """
+
+    root: str
+    parent: Dict[str, Optional[str]]
+
+    def children(self) -> Dict[str, List[str]]:
+        ch: Dict[str, List[str]] = {n: [] for n in self.parent}
+        for n, p in self.parent.items():
+            if p is not None:
+                ch[p].append(n)
+        for kids in ch.values():
+            kids.sort()
+        return ch
+
+    def rooted_at(self, rel: str) -> "JoinTree":
+        if rel not in self.parent:
+            raise FrontendError(f"no relation {rel!r} in join tree")
+        if rel == self.root:
+            return self
+        adj: Dict[str, List[str]] = {n: [] for n in self.parent}
+        for n, p in self.parent.items():
+            if p is not None:
+                adj[n].append(p)
+                adj[p].append(n)
+        parent: Dict[str, Optional[str]] = {rel: None}
+        stack = [rel]
+        while stack:
+            n = stack.pop()
+            for m in sorted(adj[n]):
+                if m not in parent:
+                    parent[m] = n
+                    stack.append(m)
+        return JoinTree(root=rel, parent=parent)
+
+
+def join_variables(schemas: Mapping[str, Sequence[str]]) -> frozenset:
+    """Attributes appearing in at least two relations."""
+    counts = Counter(a for attrs in schemas.values() for a in attrs)
+    return frozenset(a for a, n in counts.items() if n > 1)
+
+
+def is_acyclic(schemas: Mapping[str, Sequence[str]]) -> bool:
+    try:
+        gyo_reduce(schemas)
+        return True
+    except CyclicSchemaError:
+        return False
+
+
+def gyo_reduce(schemas: Mapping[str, Sequence[str]]) -> JoinTree:
+    """Reduce the schema hypergraph; return a join tree or raise.
+
+    Deterministic: ears are removed in sorted name order, attaching to the
+    lexicographically-first containing edge, so the inferred tree (and
+    everything downstream — variable order, fingerprint parity tests) is
+    stable across runs.
+    """
+    if not schemas:
+        raise FrontendError("cannot infer a join tree over zero relations")
+    alive: Dict[str, set] = {n: set(attrs) for n, attrs in schemas.items()}
+    parent: Dict[str, Optional[str]] = {}
+    while len(alive) > 1:
+        counts = Counter(a for e in alive.values() for a in e)
+        changed = False
+        for n in sorted(alive):
+            private = {a for a in alive[n] if counts[a] == 1}
+            if private:
+                # only this edge held them, so counts need no rebuild
+                alive[n] -= private
+                changed = True
+        removed = None
+        for n in sorted(alive):
+            for m in sorted(alive):
+                if m != n and alive[n] <= alive[m]:
+                    parent[n] = m
+                    removed = n
+                    break
+            if removed is not None:
+                break
+        if removed is not None:
+            del alive[removed]
+            changed = True
+        if not changed:
+            raise CyclicSchemaError(sorted(alive))
+    root = next(iter(alive))
+    parent[root] = None
+    # ears recorded their witness at removal time; witnesses removed later
+    # are still valid parents because containment is preserved downward.
+    return JoinTree(root=root, parent=parent)
+
+
+__all__ = [
+    "CyclicSchemaError",
+    "JoinTree",
+    "gyo_reduce",
+    "is_acyclic",
+    "join_variables",
+]

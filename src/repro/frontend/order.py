@@ -1,0 +1,239 @@
+"""Automatic variable-order construction with a pluggable cost hook.
+
+Given a join tree (from GYO reduction) the builder walks the relation
+tree depth-first and, for each relation, chains its not-yet-placed join
+variables followed by its private attributes under the *anchor* — the
+deepest already-placed variable the relation shares with its ancestors.
+Running intersection guarantees the shared variables sit on one
+root-to-leaf path, so every relation's variables end up on one path: the
+width-1 shape :func:`repro.core.variable_order.analyze` demands (paper
+Def 4.1).
+
+The search space is (join-tree root) x (join-variable chain direction);
+each candidate is validated through ``analyze`` and scored by a
+:data:`CostModel` — the default estimates per-bag materialization as
+``min(host rows, prod of bag attr domains)`` summed over variables, the
+fanout/domain-size proxy the paper's width discussion suggests.  The hook
+is deliberately a plain callable so a learned optimizer (ROADMAP: RL
+order search) can drop in without touching the builder.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.schema import Database
+from repro.core.variable_order import OrderInfo, VarNode, analyze
+from repro.frontend.catalog import FrontendError
+from repro.frontend.join_tree import JoinTree, join_variables
+
+
+class CostContext:
+    """Cached per-relation cardinality and per-attribute domain stats."""
+
+    def __init__(
+        self,
+        schemas: Mapping[str, Sequence[str]],
+        db: Optional[Database] = None,
+    ):
+        self.schemas = {n: tuple(a) for n, a in schemas.items()}
+        self.db = db
+        self._distinct: Dict[Tuple[str, str], int] = {}
+
+    def rows(self, rel: str) -> int:
+        if self.db is None or rel not in self.db.relations:
+            return 1
+        return self.db.relations[rel].num_rows
+
+    def distinct(self, rel: str, attr: str) -> int:
+        """Distinct values of ``attr`` within ``rel`` (1 when unknown)."""
+        key = (rel, attr)
+        if key not in self._distinct:
+            n = 1
+            if self.db is not None and rel in self.db.relations:
+                col = self.db.relations[rel].columns.get(attr)
+                if col is not None:
+                    n = int(len(np.unique(np.asarray(col))))
+            self._distinct[key] = max(1, n)
+        return self._distinct[key]
+
+    def domain(self, attr: str) -> int:
+        """Distinct values of ``attr`` across all hosting relations."""
+        if self.db is not None and attr in self.db.adom:
+            return max(1, int(self.db.adom[attr]))
+        return max(
+            (self.distinct(r, attr) for r, a in self.schemas.items() if attr in a),
+            default=1,
+        )
+
+
+# (order root, its analyze() info, stats context) -> score; lower is better
+CostModel = Callable[[VarNode, OrderInfo, CostContext], float]
+
+
+def fanout_cost(order: VarNode, info: OrderInfo, ctx: CostContext) -> float:
+    """Default cost: sum over variables of the cheapest covering estimate.
+
+    For each variable X the bag {X} ∪ dep(X) must be covered by some
+    relation; the materialization estimate for a cover is
+    ``min(rows(host), prod of per-attr distinct counts)`` and the bag costs
+    the cheapest cover.  Without a database every term degenerates to 1 and
+    the tie-break (candidate enumeration order) decides.
+    """
+    total = 0.0
+    for v in info.preorder:
+        bag = set(info.dep[v]) | {v}
+        best = math.inf
+        for rel, attrs in ctx.schemas.items():
+            if bag <= set(attrs):
+                est = float(ctx.rows(rel))
+                prod = 1.0
+                for a in bag:
+                    prod *= ctx.distinct(rel, a)
+                best = min(best, min(est, prod))
+        # uncovered bags cannot happen on analyze()-validated orders
+        total += best if best < math.inf else 1.0
+    return total
+
+
+def _build_order(
+    tree: JoinTree,
+    schemas: Mapping[str, Sequence[str]],
+    join_vars: frozenset,
+    rank: Callable[[str], Tuple],
+) -> VarNode:
+    """Chain each relation's variables under its anchor (see module doc)."""
+    children = tree.children()
+    nodes: Dict[str, VarNode] = {}
+    depth: Dict[str, int] = {}
+    root_holder: List[VarNode] = []
+
+    def place_chain(names: Sequence[str], anchor: Optional[VarNode]) -> None:
+        for name in names:
+            node = VarNode(name, [])
+            nodes[name] = node
+            if anchor is None:
+                depth[name] = 0
+                root_holder.append(node)
+            else:
+                depth[name] = depth[anchor.var] + 1
+                anchor.children.append(node)
+            anchor = node
+
+    def visit(rel: str, parent_rel: Optional[str]) -> None:
+        attrs = schemas[rel]
+        placed = [a for a in attrs if a in nodes]
+        new = [a for a in attrs if a not in nodes]
+        chain = sorted((a for a in new if a in join_vars), key=rank)
+        chain += sorted((a for a in new if a not in join_vars), key=rank)
+        if placed:
+            anchor = nodes[max(placed, key=lambda a: depth[a])]
+        elif parent_rel is not None:
+            # cartesian arm (no shared attrs survive): hang below the
+            # parent relation's deepest variable so one-path still holds
+            panchor = max(
+                (a for a in schemas[parent_rel] if a in nodes),
+                key=lambda a: depth[a],
+            )
+            anchor = nodes[panchor]
+        else:
+            anchor = None
+        place_chain(chain, anchor)
+        for ch in children.get(rel, []):
+            visit(ch, rel)
+
+    visit(tree.root, None)
+    if not root_holder:
+        raise FrontendError("order construction placed no variables")
+    return root_holder[0]
+
+
+def candidate_orders(
+    tree: JoinTree,
+    schemas: Mapping[str, Sequence[str]],
+    ctx: CostContext,
+) -> List[VarNode]:
+    """Enumerate candidate orders: every join-tree root x chain direction."""
+    jv = join_variables(schemas)
+    out: List[VarNode] = []
+    seen = set()
+    for root in sorted(schemas):
+        rooted = tree.rooted_at(root)
+        for sign in (1, -1):
+
+            def rank(a: str, _sign: int = sign) -> Tuple:
+                return (_sign * ctx.domain(a), a)
+
+            order = _build_order(rooted, schemas, jv, rank)
+            key = repr(order)
+            if key not in seen:
+                seen.add(key)
+                out.append(order)
+    return out
+
+
+def choose_order(
+    tree: JoinTree,
+    schemas: Mapping[str, Sequence[str]],
+    db: Optional[Database] = None,
+    cost: Optional[CostModel] = None,
+) -> Tuple[VarNode, float]:
+    """Pick the cheapest valid candidate order.
+
+    Candidates that fail ``analyze`` (e.g. a degenerate rooting) are
+    silently dropped; at least one must survive or we raise.  Ties break on
+    enumeration order, which is deterministic.
+    """
+    cost = cost or fanout_cost
+    ctx = CostContext(schemas, db)
+    best: Optional[Tuple[float, int, VarNode]] = None
+    scored = 0
+    for i, order in enumerate(candidate_orders(tree, schemas, ctx)):
+        try:
+            info = _analyze_schemas(order, schemas, db)
+        except ValueError:
+            continue
+        scored += 1
+        s = float(cost(order, info, ctx))
+        if best is None or (s, i) < (best[0], best[1]):
+            best = (s, i, order)
+    if best is None:
+        raise FrontendError(
+            "no candidate variable order satisfies width-1 for schemas "
+            f"{dict(schemas)!r}"
+        )
+    return best[2], best[0]
+
+
+def _analyze_schemas(
+    order: VarNode,
+    schemas: Mapping[str, Sequence[str]],
+    db: Optional[Database],
+) -> OrderInfo:
+    """Validate ``order`` against the scoped schemas.
+
+    ``analyze`` wants a ``Database``; when the real one is present and its
+    relations match the scope exactly we use it, otherwise we validate
+    against a schema-only shell with the same relation->attrs map.
+    """
+    if db is not None and set(db.relations) == set(schemas):
+        return analyze(order, db)
+    shell = _SchemaShell(schemas)
+    return analyze(order, shell)  # type: ignore[arg-type]
+
+
+class _SchemaShell:
+    """Duck-typed stand-in for ``Database``: ``analyze`` only reads
+    ``db.relations`` values' ``.name`` and ``.attrs``."""
+
+    class _Rel:
+        def __init__(self, name: str, attrs: Sequence[str]):
+            self.name = name
+            self.attrs = tuple(attrs)
+            self.columns = {a: None for a in attrs}
+
+    def __init__(self, schemas: Mapping[str, Sequence[str]]):
+        self.relations = {n: self._Rel(n, a) for n, a in schemas.items()}

@@ -1,0 +1,157 @@
+"""Frontend lowering: (catalog, query) -> FrontendPlan -> engine inputs.
+
+:func:`plan_query` is the one entry point the session layer calls.  It
+resolves the query against the catalog, infers the join tree by GYO
+reduction, builds/scored a width-1 variable order, and stamps the plan
+with a *schema fingerprint* — a name-anonymized structural hash of
+(tables, column kinds, join topology, FDs, query shape).  Two schemas
+that differ only by renaming produce the same fingerprint, which is the
+key property behind warm second-touch: the fingerprint rides on
+``BundleKey`` and the serve-layer tenant key, while the anonymized-shape
+executor cache underneath already matches on dataflow structure, so a
+structurally-identical novel schema re-enters compiled executors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional, Tuple, Union
+
+from repro.core.schema import FD, Database
+from repro.core.variable_order import VarNode
+from repro.frontend.catalog import Catalog, FrontendError
+from repro.frontend.join_tree import JoinTree, gyo_reduce
+from repro.frontend.order import CostModel, choose_order
+from repro.frontend.query import Query, parse_query
+
+
+def schema_fingerprint(catalog: Catalog, query: Optional[Query] = None) -> str:
+    """Name-anonymized structural hash of a (catalog, query) pair.
+
+    Attributes are labelled by ``(kind, #hosting tables)`` refined once by
+    the multiset of hosting-table shapes (a 1-round Weisfeiler-Leman
+    pass); tables, FDs, and the query are then encoded over those labels
+    and hashed.  Renaming every table/attribute consistently leaves the
+    fingerprint unchanged; adding a column, an FD, a table, or changing
+    the query's structural shape changes it.
+    """
+    if query is not None:
+        query = query.resolve(catalog)
+        scope = query.tables
+    else:
+        scope = ()
+    schemas = catalog.schemas(scope)
+    kinds = catalog.attribute_kinds()
+    hosts: Dict[str, list] = {}
+    for t, attrs in schemas.items():
+        for a in attrs:
+            hosts.setdefault(a, []).append(t)
+    base = {a: (kinds[a], len(ts)) for a, ts in hosts.items()}
+    tlabel = {
+        t: tuple(sorted(base[a] for a in attrs)) for t, attrs in schemas.items()
+    }
+    label = {
+        a: (base[a], tuple(sorted(tlabel[t] for t in ts)))
+        for a, ts in hosts.items()
+    }
+    struct = {
+        "tables": sorted(
+            tuple(sorted(label[a] for a in attrs)) for attrs in schemas.values()
+        ),
+        "fds": sorted(
+            (label[det], tuple(sorted(label[b] for b in dets)))
+            for det, dets in catalog.scoped_fds(scope)
+        ),
+    }
+    if query is not None:
+        struct["query"] = {
+            "features": sorted(label[f] for f in query.features),
+            "response": label[query.response],
+            "use_fds": query.use_fds,
+        }
+    return hashlib.sha1(repr(struct).encode("utf-8")).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendPlan:
+    """Everything the session layer needs from one lowered query."""
+
+    catalog: Catalog
+    query: Query                      # resolved: concrete features/tables
+    schemas: Dict[str, Tuple[str, ...]]
+    join_tree: JoinTree
+    order: VarNode
+    order_cost: float
+    fingerprint: str
+    fds: Tuple[FD, ...]               # declared FDs in scope (if use_fds)
+
+    def lower(self, db: Database) -> Database:
+        """Restrict ``db`` to the query's table scope (no-op when total).
+
+        ``analyze`` validates *every* relation of the database it is given,
+        so a table-subset query must drop out-of-scope relations before the
+        order is installed.  Arrays are shared, never copied.
+        """
+        missing = [t for t in self.query.tables if t not in db.relations]
+        if missing:
+            raise FrontendError(
+                f"database missing tables {missing} required by the query"
+            )
+        if set(db.relations) == set(self.query.tables):
+            return db
+        keep = set(self.query.tables)
+        relations = {n: r for n, r in db.relations.items() if n in keep}
+        live = {a for r in relations.values() for a in r.columns}
+        return Database(
+            relations=relations,
+            attributes={a: k for a, k in db.attributes.items() if a in live},
+            fds=[
+                fd
+                for fd in db.fds
+                if {fd.determinant, *fd.determined} <= live
+            ],
+            adom={a: n for a, n in db.adom.items() if a in live},
+            dictionaries={
+                a: d for a, d in db.dictionaries.items() if a in live
+            },
+        )
+
+
+def plan_query(
+    catalog: Catalog,
+    query: Union[Query, str],
+    db: Optional[Database] = None,
+    cost: Optional[CostModel] = None,
+) -> FrontendPlan:
+    """Lower a query against a catalog into a :class:`FrontendPlan`.
+
+    ``query`` may be a :class:`Query` dataclass or the SQL-subset string.
+    ``db`` (optional) supplies cardinality/domain stats to the cost model;
+    without it candidates tie and the deterministic enumeration order
+    decides.  ``cost`` overrides the scoring hook.
+    """
+    if isinstance(query, str):
+        query = parse_query(query)
+    query = query.resolve(catalog)
+    schemas = catalog.schemas(query.tables)
+    tree = gyo_reduce(schemas)
+    stats_db = db
+    if db is not None and not (set(query.tables) <= set(db.relations)):
+        stats_db = None
+    order, order_cost = choose_order(tree, schemas, db=stats_db, cost=cost)
+    fds: Tuple[FD, ...] = ()
+    if query.use_fds:
+        fds = tuple(
+            FD(det, tuple(dets)) for det, dets in catalog.scoped_fds(query.tables)
+        )
+    return FrontendPlan(
+        catalog=catalog,
+        query=query,
+        schemas=schemas,
+        join_tree=tree,
+        order=order,
+        order_cost=order_cost,
+        fingerprint=schema_fingerprint(catalog, query),
+        fds=fds,
+    )

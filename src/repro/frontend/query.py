@@ -1,0 +1,111 @@
+"""The frontend's query layer: natural join + feature selection.
+
+A :class:`Query` is either built directly as a dataclass or parsed from
+the SQL subset::
+
+    SELECT f1, f2, ... FROM T1 NATURAL JOIN T2 ... PREDICT response [USING FDS]
+
+``SELECT *`` expands (against a catalog) to every non-key attribute of the
+in-scope tables except the response; an empty ``tables`` means "all
+catalog tables".  ``USING FDS`` opts the query into the catalog's declared
+functional dependencies, which become the session's default ``fds=`` for
+compiles and fits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Tuple
+
+from repro.frontend.catalog import Catalog, FrontendError
+
+_IDENT = re.compile(r"[A-Za-z_]\w*\Z")
+
+_GRAMMAR = re.compile(
+    r"\s*select\s+(?P<sel>.+?)"
+    r"\s+from\s+(?P<frm>.+?)"
+    r"\s+predict\s+(?P<resp>\w+)"
+    r"(?P<fds>\s+using\s+fds)?"
+    r"\s*;?\s*\Z",
+    re.IGNORECASE | re.DOTALL,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """Feature selection over the natural join of ``tables``.
+
+    ``tables == ()`` means every table in the catalog.  ``features`` may be
+    ``("*",)`` until resolved against a catalog.
+    """
+
+    features: Tuple[str, ...]
+    response: str
+    tables: Tuple[str, ...] = ()
+    use_fds: bool = False
+
+    def resolve(self, catalog: Catalog) -> "Query":
+        """Expand ``*``, default the table scope, and validate names."""
+        tables = self.tables or tuple(t.name for t in catalog.tables)
+        for t in tables:
+            catalog.table_def(t)  # raises on unknown table
+        kinds = catalog.attribute_kinds()
+        in_scope = set()
+        for attrs in catalog.schemas(tables).values():
+            in_scope.update(attrs)
+        if self.response not in in_scope:
+            raise FrontendError(
+                f"response {self.response!r} not an attribute of tables "
+                f"{sorted(tables)}"
+            )
+        feats = self.features
+        if "*" in feats:
+            feats = tuple(
+                a
+                for a in sorted(in_scope)
+                if kinds[a] != "key" and a != self.response
+            )
+        bad = [f for f in feats if f not in in_scope]
+        if bad:
+            raise FrontendError(
+                f"features {bad} not attributes of tables {sorted(tables)}"
+            )
+        if len(set(feats)) != len(feats):
+            raise FrontendError(f"duplicate features in query: {feats}")
+        if self.response in feats:
+            raise FrontendError(
+                f"response {self.response!r} also selected as a feature"
+            )
+        return Query(
+            features=tuple(feats),
+            response=self.response,
+            tables=tables,
+            use_fds=self.use_fds,
+        )
+
+
+def parse_query(text: str) -> Query:
+    """Parse the SQL subset into a (possibly un-resolved) :class:`Query`."""
+    m = _GRAMMAR.match(text)
+    if m is None:
+        raise FrontendError(
+            "query must match 'SELECT <features> FROM <t1> NATURAL JOIN "
+            f"<t2> ... PREDICT <response> [USING FDS]'; got {text!r}"
+        )
+    feats = tuple(s.strip() for s in m["sel"].split(",") if s.strip())
+    if not feats:
+        raise FrontendError(f"empty SELECT list in {text!r}")
+    tables = tuple(
+        t.strip()
+        for t in re.split(r"\s+natural\s+join\s+", m["frm"].strip(), flags=re.I)
+    )
+    for name in (*feats, *tables):
+        if name != "*" and not _IDENT.match(name):
+            raise FrontendError(f"bad identifier {name!r} in query {text!r}")
+    return Query(
+        features=feats,
+        response=m["resp"],
+        tables=tables,
+        use_fds=bool(m["fds"]),
+    )

@@ -1,0 +1,133 @@
+"""Seeded synthetic data and serving traces for arbitrary catalogs.
+
+:func:`synthesize` turns any acyclic :class:`Catalog` into a consistent
+``Database``: join keys of dimension-style tables enumerate their domain
+(so fact rows always find a match), declared FDs are enforced by lookup
+maps (determined = map[determinant]), and the whole draw is a pure
+function of ``seed`` — two calls with the same arguments produce
+bit-identical relations, which is what makes warm-fingerprint /
+executor-cache second-touch tests deterministic.
+
+:func:`synthetic_requests` mirrors ``data.retailer.requests`` for any
+(db, query): a handful of tenants over feature subsets plus predict
+traffic drawn from the materialized join, so ``launch/indb_serve.py
+--schema <anything>`` has a trace to replay.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, Mapping, Optional
+
+import numpy as np
+
+from repro.core.schema import Database
+from repro.frontend.catalog import Catalog
+from repro.frontend.query import Query
+
+DEFAULT_ROWS = 512
+_DOMAIN = 8
+
+
+def synthesize(
+    catalog: Catalog,
+    rows: Optional[Mapping[str, int]] = None,
+    fact_rows: int = DEFAULT_ROWS,
+    seed: int = 0,
+) -> Database:
+    """Generate a database for ``catalog`` (see module docstring).
+
+    ``rows`` pins exact per-table row counts; unpinned dimension tables get
+    one row per value of their first join key (domain-enumerating), and the
+    fact table gets ``fact_rows``.
+    """
+    rng = np.random.default_rng(seed)
+    kinds = catalog.attribute_kinds()
+    jv = catalog.join_variables()
+    fact = catalog.fact_table()
+    dom: Dict[str, int] = {
+        a: _DOMAIN for a, k in kinds.items() if k != "continuous"
+    }
+    fd_maps = {
+        det: {b: rng.integers(0, dom[b], dom[det]) for b in dets}
+        for det, dets in catalog.fds
+    }
+    data: Dict[str, Dict[str, np.ndarray]] = {}
+    for t in catalog.tables:
+        join_attrs = [a for a in t.attrs if a in jv]
+        primary = join_attrs[0] if (join_attrs and t.name != fact) else None
+        if rows and t.name in rows:
+            n = int(rows[t.name])
+        elif primary is not None:
+            n = dom[primary]
+        else:
+            n = int(fact_rows)
+        cols: Dict[str, np.ndarray] = {}
+        for c in t.columns:
+            if c.name == primary:
+                cols[c.name] = np.arange(n, dtype=np.int64) % dom[c.name]
+            elif c.kind == "continuous":
+                cols[c.name] = rng.normal(size=n).round(3)
+            else:
+                cols[c.name] = rng.integers(0, dom[c.name], n)
+        for det, dets in catalog.fds:
+            if det in cols and all(b in {c.name for c in t.columns} for b in dets):
+                for b in fd_maps[det]:
+                    if b in cols:
+                        cols[b] = fd_maps[det][b][cols[det]]
+        data[t.name] = cols
+    return catalog.database(data)
+
+
+def synthetic_requests(
+    db: Database,
+    query: Query,
+    n_requests: int = 40,
+    n_tenants: int = 3,
+    fit_fraction: float = 0.3,
+    predict_rows: int = 8,
+    subscribe: bool = False,
+    lam: float = 1e-2,
+    seed: int = 0,
+) -> Iterator[object]:
+    """A generic multi-tenant serving trace over any (db, query).
+
+    Mirrors ``data.retailer.requests`` for arbitrary schemas: tenant 0 is
+    a degree-2 polynomial regression over the query's full feature set
+    and the rest are linear regressions over random subsets (so bundle
+    subsumption serves them off tenant 0's pass); predicts draw rows from
+    the materialized join, so every categorical id is in-domain.  Yields
+    ``serve.FitRequest`` / ``serve.PredictRequest`` objects.
+    """
+    from repro.core.oracle import materialize_join
+    from repro.serve import FitRequest, PredictRequest
+    from repro.session import LinearRegression, PolynomialRegression
+
+    rng = np.random.default_rng(seed)
+    base = tuple(query.features)
+    fds = tuple(db.fds) if query.use_fds else ()
+    tenants = [(PolynomialRegression(degree=2, lam=lam), base)]
+    for k in range(1, n_tenants):
+        lo = min(2, len(base))
+        size = (
+            int(rng.integers(lo, len(base))) if len(base) > lo else len(base)
+        )
+        chosen = set(rng.choice(len(base), size=size, replace=False).tolist())
+        feats = tuple(f for i, f in enumerate(base) if i in chosen)
+        tenants.append((LinearRegression(lam=lam * 10 ** (k % 2)), feats))
+
+    join = materialize_join(db)
+    n_join = len(join[query.response])
+    for _ in range(n_requests):
+        spec_k, feats = tenants[int(rng.integers(0, len(tenants)))]
+        if rng.random() < fit_fraction:
+            yield FitRequest(
+                spec=spec_k, features=feats, response=query.response,
+                fds=fds, subscribe=subscribe,
+            )
+        else:
+            idx = rng.integers(0, n_join, size=predict_rows)
+            rows = {a: np.asarray(join[a])[idx] for a in feats}
+            yield PredictRequest(
+                spec=spec_k, features=feats, response=query.response,
+                fds=fds, rows=rows, subscribe=subscribe,
+            )

@@ -29,11 +29,15 @@ def acdc_serve(argv=None) -> int:
     jax.config.update("jax_enable_x64", True)
 
     from repro.data import retailer
-    from repro.data.retailer import RetailerSpec, generate, variable_order
+    from repro.data.retailer import RetailerSpec, generate
     from repro.serve import DeltaEvent, FitReply, ModelServer, snapshot
     from repro.session import Session, SolverConfig
 
     p = argparse.ArgumentParser(description=acdc_serve.__doc__)
+    p.add_argument("--schema", default="retailer",
+                   help="retailer | snowflake | path to a catalog JSON; "
+                        "non-retailer schemas replay a generic synthetic "
+                        "trace (no delta stream)")
     p.add_argument("--n-requests", type=int, default=40)
     p.add_argument("--n-tenants", type=int, default=4)
     p.add_argument("--fit-fraction", type=float, default=0.3)
@@ -53,34 +57,80 @@ def acdc_serve(argv=None) -> int:
                    help="dump the full metrics snapshot as JSON")
     args = p.parse_args(argv)
 
-    db = generate(RetailerSpec(
-        n_locn=int(20 * args.scale) or 2,
-        n_zip=int(12 * args.scale) or 2,
-        n_date=int(30 * args.scale) or 2,
-        n_sku=int(40 * args.scale) or 2,
-        seed=args.seed,
-    ))
-    sess = Session(db, variable_order())
+    if args.schema == "retailer":
+        db = generate(RetailerSpec(
+            n_locn=int(20 * args.scale) or 2,
+            n_zip=int(12 * args.scale) or 2,
+            n_date=int(30 * args.scale) or 2,
+            n_sku=int(40 * args.scale) or 2,
+            seed=args.seed,
+        ))
+        sess = Session(
+            db, catalog=retailer.catalog(), query=retailer.query()
+        )
+        trace = list(retailer.requests(
+            sess.db,
+            n_requests=args.n_requests,
+            n_tenants=args.n_tenants,
+            fit_fraction=args.fit_fraction,
+            predict_rows=args.predict_rows,
+            subscribe=args.subscribe,
+            seed=args.seed,
+        ))
+        dstream = retailer.deltas(
+            sess.db, n_batches=10**9, frac=args.delta_frac, seed=args.seed + 1
+        )
+    else:
+        from repro.frontend import synthetic_requests
+
+        if args.schema == "snowflake":
+            from repro.data import snowflake
+
+            sf = snowflake.SnowflakeSpec(
+                n_fact=max(int(800 * args.scale), 8), seed=args.seed
+            )
+            cat, q = snowflake.catalog(sf), snowflake.query(sf)
+            db = snowflake.generate(sf)
+        else:
+            from repro.frontend import Query, load_schema, synthesize
+
+            cat, extras = load_schema(args.schema)
+            extras = extras or {}
+            qspec = extras.get("query") or {}
+            sel = qspec.get("select", "*")
+            q = Query(
+                features=tuple(sel) if sel != "*" else ("*",),
+                response=qspec["response"],
+                tables=tuple(qspec.get("tables", ())),
+                use_fds=bool(qspec.get("use_fds", False)),
+            )
+            db = synthesize(
+                cat,
+                rows=(extras.get("synthetic") or {}).get("rows"),
+                seed=args.seed,
+            )
+        sess = Session(db, catalog=cat, query=q)
+        trace = list(synthetic_requests(
+            sess.db,
+            sess.frontend.query,
+            n_requests=args.n_requests,
+            n_tenants=args.n_tenants,
+            fit_fraction=args.fit_fraction,
+            predict_rows=args.predict_rows,
+            subscribe=args.subscribe,
+            seed=args.seed,
+        ))
+        dstream = None  # delta streams are generator-specific (retailer)
     server = ModelServer(
         sess,
         byte_budget=args.byte_budget_kb * 1024 or None,
         default_solver=SolverConfig(max_iters=args.max_iters, tol=args.tol),
     )
-    trace = list(retailer.requests(
-        sess.db,
-        n_requests=args.n_requests,
-        n_tenants=args.n_tenants,
-        fit_fraction=args.fit_fraction,
-        predict_rows=args.predict_rows,
-        subscribe=args.subscribe,
-        seed=args.seed,
-    ))
-    dstream = retailer.deltas(
-        sess.db, n_batches=10**9, frac=args.delta_frac, seed=args.seed + 1
-    )
+    print(f"[serve] schema={args.schema} "
+          f"fingerprint={server.fingerprint}")
 
     for i, req in enumerate(trace):
-        if args.delta_every and i and i % args.delta_every == 0:
+        if dstream and args.delta_every and i and i % args.delta_every == 0:
             ack = server.handle(DeltaEvent(next(dstream)))
             print(f"[serve] {i:03d} delta {ack.relation} "
                   f"pending={ack.pending_batches}/{ack.pending_rows}rows")

@@ -207,11 +207,76 @@ def train_loop(
 # ----------------------------------------------------------------------
 
 
+def _schema_session(args, Session):
+    """Resolve ``--schema`` into a frontend-lowered Session + query.
+
+    Every schema goes through the frontend: retailer (its Catalog
+    instance), snowflake (the seeded generator), or an arbitrary catalog
+    JSON (``--schema path.json``, data synthesized FD-consistently).
+    Returns ``(session, label)`` — workload defaults (features, response,
+    FDs) come from the session's lowered query."""
+    if args.schema == "retailer":
+        from repro.data import retailer
+
+        db, feats = retailer.fragment(args.fragment, args.scale)
+        sess = Session(
+            db,
+            catalog=retailer.catalog(),
+            query=retailer.query(feats, use_fds=args.fd),
+        )
+        label = f"retailer/{args.fragment}"
+    elif args.schema == "snowflake":
+        from repro.data import snowflake
+
+        spec = snowflake.SnowflakeSpec(
+            n_fact=max(int(800 * args.scale), 8)
+        )
+        sess = Session(
+            db=snowflake.generate(spec),
+            catalog=snowflake.catalog(spec),
+            query=snowflake.query(spec, use_fds=args.fd),
+        )
+        label = "snowflake"
+    else:
+        from repro.frontend import Query, load_schema, parse_query, synthesize
+
+        catalog, extras = load_schema(args.schema)
+        extras = extras or {}
+        qspec = extras.get("query")
+        if qspec is None:
+            raise SystemExit(
+                f"--schema {args.schema}: the JSON needs a 'query' object "
+                "({'select': [...]|'*', 'response': ..., 'use_fds': bool})"
+            )
+        if isinstance(qspec, str):
+            query = parse_query(qspec)
+        else:
+            sel = qspec.get("select", "*")
+            query = Query(
+                features=tuple(sel) if sel != "*" else ("*",),
+                response=qspec["response"],
+                tables=tuple(qspec.get("tables", ())),
+                use_fds=bool(qspec.get("use_fds", args.fd)),
+            )
+        synth = extras.get("synthetic", {})
+        db = synthesize(
+            catalog,
+            rows=synth.get("rows"),
+            fact_rows=int(synth.get("fact_rows", 512) * args.scale) or 8,
+            seed=int(synth.get("seed", 0)),
+        )
+        sess = Session(db, catalog=catalog, query=query)
+        label = args.schema
+    return sess, label
+
+
 def acdc_main(argv=None) -> int:
-    """Train the retailer workload off one shared session bundle.
+    """Train one schema's workload off one shared session bundle.
 
         python -m repro.launch.train --fragment v4 --models lr,pr2,fama \
             --policy auto [--fd] [--grad-compression int8]
+        python -m repro.launch.train --schema snowflake --models lr,pr2
+        python -m repro.launch.train --schema my_schema.json
 
     Replaces the old ``core.api.train`` one-shot path on the launch
     surface: the aggregate pass is compiled once per (features, response,
@@ -222,12 +287,14 @@ def acdc_main(argv=None) -> int:
 
     jax.config.update("jax_enable_x64", True)
 
-    from repro.data.retailer import fragment, variable_order
     from repro.session import (
         ExecutionPolicy, Session, SolverConfig, spec_from_string,
     )
 
     p = argparse.ArgumentParser(description=acdc_main.__doc__)
+    p.add_argument("--schema", default="retailer",
+                   help="retailer | snowflake | path to a catalog JSON "
+                        "(see DESIGN.md §14)")
     p.add_argument("--fragment", default="v1", choices=["v1", "v2", "v3", "v4"])
     p.add_argument("--scale", type=float, default=0.5)
     p.add_argument("--models", default="lr,pr2,fama",
@@ -244,8 +311,7 @@ def acdc_main(argv=None) -> int:
     p.add_argument("--tol", type=float, default=1e-9)
     args = p.parse_args(argv)
 
-    db, feats = fragment(args.fragment, args.scale)
-    sess = Session(db, variable_order())
+    sess, label = _schema_session(args, Session)
     specs = [
         spec_from_string(m.strip(), rank=args.rank, lam=args.lam)
         for m in args.models.split(",") if m.strip()
@@ -258,9 +324,11 @@ def acdc_main(argv=None) -> int:
             None if args.grad_compression == "none" else args.grad_compression
         ),
     )
-    results = sess.fit_many(
-        specs, feats, "units", fds=db.fds if args.fd else (), solver=cfg
-    )
+    # features/response/FDs default to the session's lowered query
+    results = sess.fit_many(specs, solver=cfg)
+    print(f"[acdc] schema={label} "
+          f"fingerprint={sess.schema_fingerprint} "
+          f"order={sess.order!r}")
     print(f"[acdc] {len(specs)} models, "
           f"{sess.stats.aggregate_passes} aggregate pass(es), "
           f"policy={args.policy}, devices={jax.device_count()}")

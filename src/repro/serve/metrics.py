@@ -29,6 +29,9 @@ def snapshot(server: "ModelServer") -> dict:
     fits_total = st.fits + st.implicit_fits + st.refresh_refits
     return {
         "server": dataclasses.asdict(server.stats),
+        # anonymized schema identity of the session behind this server
+        # (DESIGN.md §14); None when built from a hand-wired order
+        "schema_fingerprint": server.fingerprint,
         # latency/QPS plane: totals and per-op means on the server clock.
         # fits_total counts EVERY solve — explicit, implicit, refresh
         # refits — and fit_seconds accumulates over exactly the same set

@@ -261,6 +261,7 @@ class Scheduler:
                 f"predict rows missing feature columns {missing}"
             )
         key: TenantKey = (
+            self.server.fingerprint,
             tuple(request.features),
             request.response,
             fd_key(request.fds),

@@ -42,8 +42,12 @@ from repro.session.bundle import fd_key
 
 from .refresh import RefreshDaemon
 
-# structural tenant identity: (features, response, fd key, spec)
-TenantKey = Tuple[Tuple[str, ...], str, Tuple, ModelSpec]
+# structural tenant identity: (schema fingerprint, features, response,
+# fd key, spec) — the fingerprint prefix (DESIGN.md §14) namespaces
+# tenants by the anonymized schema shape, so a server can be re-pointed
+# at a structurally different database without key collisions and two
+# isomorphic schemas register under the same prefix
+TenantKey = Tuple[Optional[str], Tuple[str, ...], str, Tuple, ModelSpec]
 
 
 # ----------------------------------------------------------------------
@@ -187,6 +191,11 @@ class ModelServer:
         clock=time.monotonic,
     ):
         self.session = session
+        # tenant-key namespace: the session's schema fingerprint when it
+        # was built through the frontend, else None (legacy hand-wired)
+        self.fingerprint: Optional[str] = getattr(
+            session, "schema_fingerprint", None
+        )
         if byte_budget is not None:
             session.byte_budget = byte_budget
         self.default_solver = default_solver or SolverConfig()
@@ -227,6 +236,7 @@ class ModelServer:
     # ------------------------------------------------------------------
     def _tenant(self, req) -> Tenant:
         key: TenantKey = (
+            self.fingerprint,
             tuple(req.features), req.response, fd_key(req.fds), req.spec,
         )
         t = self.tenants.get(key)

@@ -48,6 +48,9 @@ class BundleKey:
     degree: int
     squares: bool
     fds: Tuple[Tuple[str, Tuple[str, ...]], ...]
+    # schema fingerprint of the frontend-lowered (catalog, query) pair
+    # (DESIGN.md §14); None for sessions built from a hand-wired order
+    fingerprint: Optional[str] = None
 
 
 def fd_key(fds) -> Tuple[Tuple[str, Tuple[str, ...]], ...]:

@@ -114,14 +114,43 @@ class Session:
     def __init__(
         self,
         db: Database,
-        order: VarNode,
+        order: Optional[VarNode] = None,
         byte_budget: Optional[int] = None,
         eviction_policy=None,
         kernel_policy=None,
         clock=time.monotonic,
         cache_half_life_s: Optional[float] = None,
         cache_ttl_s: Optional[float] = None,
+        *,
+        catalog=None,
+        query=None,
+        cost=None,
     ):
+        # Two construction paths. Legacy: an explicit hand-built variable
+        # order. Frontend (DESIGN.md §14): a (catalog, query) pair — the
+        # query may be a frontend.Query or the SQL-subset string — lowered
+        # through GYO join-tree inference and the scored order builder;
+        # the plan's schema fingerprint then rides on every BundleKey so
+        # structurally-identical schemas share executor-cache identity.
+        self.frontend = None
+        self.schema_fingerprint: Optional[str] = None
+        if order is None:
+            if catalog is None or query is None:
+                raise ValueError(
+                    "Session needs either an explicit order or a "
+                    "(catalog, query) pair"
+                )
+            from repro.frontend import plan_query
+
+            plan = plan_query(catalog, query, db, cost=cost)
+            self.frontend = plan
+            self.schema_fingerprint = plan.fingerprint
+            db = plan.lower(db)
+            order = plan.order
+        elif catalog is not None or query is not None:
+            raise ValueError(
+                "pass either order= or (catalog=, query=), not both"
+            )
         self.db = db
         self.order = order
         self.info: OrderInfo = analyze(order, db)
@@ -164,12 +193,44 @@ class Session:
         feats = list(features)
         return fdmod.reduced_features(feats, fds) if fds else feats
 
+    def _resolve_workload(self, features, response, fds):
+        """Fill workload defaults from the frontend query.
+
+        ``features`` may also be a ``frontend.Query`` carrying the whole
+        selection; ``features=None``/``response=None`` fall back to the
+        session's lowered query; ``fds=None`` means "the query's declared
+        FDs if it opted in (USING FDS), else none" — an explicit ``()``
+        still disables FDs unconditionally.
+        """
+        if features is not None and not isinstance(features, (list, tuple)):
+            q = features  # a frontend.Query in the features slot
+            if self.frontend is not None:
+                q = q.resolve(self.frontend.catalog)
+            features = tuple(q.features)
+            if response is None:
+                response = q.response
+            if fds is None:
+                fds = tuple(self.db.fds) if q.use_fds else ()
+        if features is None or response is None:
+            if self.frontend is None:
+                raise ValueError(
+                    "features/response defaults need a (catalog, query) "
+                    "session; pass them explicitly"
+                )
+            if features is None:
+                features = self.frontend.query.features
+            if response is None:
+                response = self.frontend.query.response
+        if fds is None:
+            fds = self.frontend.fds if self.frontend is not None else ()
+        return list(features), response, tuple(fds)
+
     # ------------------------------------------------------------------
     def compile(
         self,
-        features: Sequence[str],
-        response: str,
-        fds=(),
+        features: Optional[Sequence[str]] = None,
+        response: Optional[str] = None,
+        fds=None,
         degree: int = 2,
         squares: bool = True,
         admit: bool = True,
@@ -183,7 +244,9 @@ class Session:
         one-shot oversized workload cannot evict the resident hot set
         (DESIGN.md §12 admission control). A subsumption hit is returned
         as usual regardless of ``admit``."""
-        fds = tuple(fds)
+        features, response, fds = self._resolve_workload(
+            features, response, fds
+        )
         feats = self._reduced(features, fds)
         wl = build_workload(self.db, feats, response, degree, squares=squares)
         fk = fd_key(fds)
@@ -219,6 +282,7 @@ class Session:
                 degree=degree,
                 squares=squares,
                 fds=fk,
+                fingerprint=self.schema_fingerprint,
             ),
             workload=wl,
             result=res,
@@ -383,15 +447,17 @@ class Session:
     def materialize(
         self,
         spec: ModelSpec,
-        features: Sequence[str],
-        response: str,
-        fds=(),
+        features: Optional[Sequence[str]] = None,
+        response: Optional[str] = None,
+        fds=None,
         bundle: Optional[AggregateBundle] = None,
         admit: bool = True,
     ):
         """Aggregate stage only: ``(model, sigma, workload, bundle)`` with
         the spec's Sigma view assembled from a (possibly shared) bundle."""
-        fds = tuple(fds)
+        features, response, fds = self._resolve_workload(
+            features, response, fds
+        )
         feats = self._reduced(features, fds)
         wl = spec.workload(self.db, feats, response)
         if bundle is None:
@@ -421,9 +487,9 @@ class Session:
     def fit(
         self,
         spec: ModelSpec,
-        features: Sequence[str],
-        response: str,
-        fds=(),
+        features: Optional[Sequence[str]] = None,
+        response: Optional[str] = None,
+        fds=None,
         solver: Optional[SolverConfig] = None,
         bundle: Optional[AggregateBundle] = None,
         warm_from: Optional[FitResult] = None,
@@ -564,9 +630,9 @@ class Session:
     def fit_batched(
         self,
         specs: Sequence[ModelSpec],
-        features: Sequence[str],
-        response: str,
-        fds=(),
+        features: Optional[Sequence[str]] = None,
+        response: Optional[str] = None,
+        fds=None,
         solver: Optional[SolverConfig] = None,
         bundle: Optional[AggregateBundle] = None,
         warm_from: Optional[Sequence[Optional[FitResult]]] = None,
@@ -706,9 +772,9 @@ class Session:
     def fit_many(
         self,
         specs: Sequence[ModelSpec],
-        features: Sequence[str],
-        response: str,
-        fds=(),
+        features: Optional[Sequence[str]] = None,
+        response: Optional[str] = None,
+        fds=None,
         solver: Optional[SolverConfig] = None,
         warm_start: bool = False,
         warm_from: Optional[Sequence[FitResult]] = None,

@@ -1,0 +1,520 @@
+"""Schema-generic frontend tests (DESIGN.md §14).
+
+Three layers of coverage:
+
+  * **GYO / join tree**: a fixture corpus of known acyclic and cyclic
+    hypergraphs, plus a property test — random tree-grown schemas must
+    reduce, random chordless cycles must raise.  The property runs as a
+    seeded sweep always and as a hypothesis search when the package is
+    installed (same checker, mirroring ``test_refresh_property.py``).
+  * **Parity**: the frontend-lowered retailer catalog must reproduce the
+    hand-wired variable order's aggregate tables (<=1e-9 relative) and
+    the closed-form theta (<=1e-6) — the lowering changes the order, not
+    the mathematics.
+  * **End-to-end**: a snowflake catalog fits through ``Session`` and
+    ``ModelServer``, and a second structurally-identical session re-enters
+    the compiled-executor plane with zero new traces (warm fingerprint).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.solver import closed_form_ridge
+from repro.data import retailer, snowflake
+from repro.data.retailer import RetailerSpec, generate, variable_order
+from repro.frontend import (
+    Catalog,
+    CyclicSchemaError,
+    FrontendError,
+    Query,
+    gyo_reduce,
+    is_acyclic,
+    parse_query,
+    plan_query,
+    schema_fingerprint,
+    synthesize,
+    synthetic_requests,
+    table,
+)
+from repro.session import (
+    LinearRegression,
+    PolynomialRegression,
+    Session,
+    SolverConfig,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - container without dev deps
+    HAVE_HYPOTHESIS = False
+
+
+SPEC = RetailerSpec(n_locn=6, n_zip=4, n_date=8, n_sku=10, seed=0)
+CFG = SolverConfig(max_iters=40, tol=1e-9, policy="single")
+
+
+@pytest.fixture(scope="module")
+def hand_sess():
+    sess = Session(generate(SPEC), variable_order())
+    sess.compile(retailer.features(), "units", degree=2, squares=True)
+    return sess
+
+
+@pytest.fixture(scope="module")
+def front_sess():
+    sess = Session(
+        generate(SPEC), catalog=retailer.catalog(), query=retailer.query()
+    )
+    sess.compile(degree=2, squares=True)
+    return sess
+
+
+@pytest.fixture(scope="module")
+def sf():
+    return snowflake.SnowflakeSpec(n_fact=120, seed=0)
+
+
+@pytest.fixture(scope="module")
+def sf_sess(sf):
+    return Session(
+        snowflake.generate(sf),
+        catalog=snowflake.catalog(sf),
+        query=snowflake.query(sf),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GYO reduction / join tree
+# ---------------------------------------------------------------------------
+
+ACYCLIC_CORPUS = {
+    "single": {"R": ("a", "b")},
+    "path": {"R": ("a", "b"), "S": ("b", "c"), "T": ("c", "d")},
+    "star": {"F": ("k1", "k2", "k3"), "D1": ("k1", "x"), "D2": ("k2", "y"),
+             "D3": ("k3", "z")},
+    "containment": {"R": ("a", "b", "c"), "S": ("a", "b")},
+    "disconnected": {"R": ("a",), "S": ("b",)},
+    "retailer": None,   # filled below from the catalog
+    "snowflake": None,
+}
+
+CYCLIC_CORPUS = {
+    "triangle": {"R": ("a", "b"), "S": ("b", "c"), "T": ("c", "a")},
+    "square": {"R": ("a", "b"), "S": ("b", "c"), "T": ("c", "d"),
+               "U": ("d", "a")},
+    "triangle_plus_ear": {"R": ("a", "b"), "S": ("b", "c"), "T": ("c", "a"),
+                          "E": ("a", "x")},
+}
+
+
+def _corpus_schemas(name):
+    if name == "retailer":
+        return retailer.catalog().schemas()
+    if name == "snowflake":
+        return snowflake.catalog(snowflake.SnowflakeSpec()).schemas()
+    return ACYCLIC_CORPUS[name]
+
+
+@pytest.mark.parametrize("name", sorted(ACYCLIC_CORPUS))
+def test_gyo_accepts_acyclic(name):
+    schemas = _corpus_schemas(name)
+    tree = gyo_reduce(schemas)
+    assert set(tree.parent) == set(schemas)
+    roots = [n for n, p in tree.parent.items() if p is None]
+    assert roots == [tree.root]
+    # re-rooting keeps the node set and is an involution back to the root
+    other = sorted(schemas)[-1]
+    pivoted = tree.rooted_at(other)
+    assert pivoted.root == other
+    assert set(pivoted.parent) == set(schemas)
+    assert pivoted.rooted_at(tree.root).parent == tree.parent
+
+
+@pytest.mark.parametrize("name", sorted(CYCLIC_CORPUS))
+def test_gyo_rejects_cyclic(name):
+    schemas = CYCLIC_CORPUS[name]
+    with pytest.raises(CyclicSchemaError) as ei:
+        gyo_reduce(schemas)
+    assert set(ei.value.core) <= set(schemas)
+    assert not is_acyclic(schemas)
+
+
+def _tree_grown_schemas(rng, n_tables):
+    """Random acyclic schemas: each new table shares one attribute with an
+    existing table and adds private ones — a grown join tree by
+    construction."""
+    schemas = {"T0": {"a0", "p0"}}
+    for i in range(1, n_tables):
+        parent = f"T{int(rng.integers(0, i))}"
+        shared = str(rng.choice(sorted(schemas[parent])))
+        schemas[f"T{i}"] = {shared, f"a{i}"} | (
+            {f"p{i}"} if rng.integers(0, 2) else set()
+        )
+    return {n: tuple(sorted(s)) for n, s in schemas.items()}
+
+
+def _cycle_schemas(k):
+    """A chordless k-cycle (k >= 3): never alpha-acyclic."""
+    return {
+        f"C{i}": (f"c{i}", f"c{(i + 1) % k}") for i in range(k)
+    }
+
+
+def _check_property(seed, n_tables, k):
+    rng = np.random.default_rng(seed)
+    assert is_acyclic(_tree_grown_schemas(rng, n_tables))
+    assert not is_acyclic(_cycle_schemas(k))
+
+
+def test_gyo_property_seeded_sweep():
+    rng = np.random.default_rng(1234)
+    for _ in range(50):
+        _check_property(
+            int(rng.integers(0, 2**31)),
+            int(rng.integers(1, 12)),
+            int(rng.integers(3, 9)),
+        )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=100, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_tables=st.integers(1, 14),
+        k=st.integers(3, 10),
+    )
+    def test_gyo_property_hypothesis(seed, n_tables, k):
+        _check_property(seed, n_tables, k)
+
+else:  # pragma: no cover
+
+    @pytest.mark.skip(reason="hypothesis not installed; seeded sweep ran")
+    def test_gyo_property_hypothesis():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# retailer parity: frontend lowering vs the hand-wired oracle order
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_order_is_valid_and_fingerprinted(front_sess):
+    fe = front_sess.frontend
+    assert fe is not None
+    assert fe.fingerprint == front_sess.schema_fingerprint
+    assert len(fe.fingerprint) == 16
+    # every bundle key carries the fingerprint
+    for b in front_sess.bundles:
+        assert b.key.fingerprint == fe.fingerprint
+
+
+def test_retailer_aggregate_table_parity(hand_sess, front_sess):
+    (b1,), (b2,) = hand_sess.bundles, front_sess.bundles
+    t1, t2 = b1.result.tables, b2.result.tables
+    assert set(t1) == set(t2)
+    for m, (k1, v1) in t1.items():
+        k2, v2 = t2[m]
+        assert set(k1) == set(k2)
+        v1, v2 = np.asarray(v1), np.asarray(v2)
+        if k1:
+            names = sorted(k1)
+            i1 = np.lexsort(tuple(np.asarray(k1[n]) for n in reversed(names)))
+            i2 = np.lexsort(tuple(np.asarray(k2[n]) for n in reversed(names)))
+            for n in names:
+                assert np.array_equal(
+                    np.asarray(k1[n])[i1], np.asarray(k2[n])[i2]
+                ), (m, n)
+            v1, v2 = v1[i1], v2[i2]
+        scale = max(float(np.max(np.abs(v1))), 1.0)
+        assert float(np.max(np.abs(v1 - v2))) / scale < 1e-9, m
+
+
+@pytest.mark.parametrize("spec", [
+    LinearRegression(lam=1e-2),
+    PolynomialRegression(degree=2, lam=1e-2),
+], ids=["lr", "pr2"])
+def test_retailer_theta_parity_closed_form(hand_sess, front_sess, spec):
+    feats = retailer.features()
+    _, sig1, _, _ = hand_sess.materialize(spec, feats, "units")
+    _, sig2, _, _ = front_sess.materialize(spec)  # defaults from the query
+    t1 = closed_form_ridge(sig1.dense(), np.asarray(sig1.c), 1e-2)
+    t2 = closed_form_ridge(sig2.dense(), np.asarray(sig2.c), 1e-2)
+    assert t1.shape == t2.shape
+    assert float(np.max(np.abs(t1 - t2))) < 1e-6
+
+
+def test_frontend_session_verifies_clean(front_sess):
+    assert front_sess.verify(level="full") >= 1
+
+
+# ---------------------------------------------------------------------------
+# session API around (catalog, query)
+# ---------------------------------------------------------------------------
+
+
+def test_session_rejects_order_and_catalog_both():
+    db = generate(SPEC)
+    with pytest.raises(ValueError):
+        Session(
+            db, variable_order(),
+            catalog=retailer.catalog(), query=retailer.query(),
+        )
+    with pytest.raises(ValueError):
+        Session(db)
+
+
+def test_table_subset_query_restricts_database():
+    db = generate(SPEC)
+    q = Query(
+        features=("price", "subcategory"), response="units",
+        tables=("Inventory", "Item"),
+    )
+    sess = Session(db, catalog=retailer.catalog(), query=q)
+    assert set(sess.db.relations) == {"Inventory", "Item"}
+    r = sess.fit(LinearRegression(lam=1e-2), solver=CFG)
+    assert np.isfinite(float(r.loss))
+
+
+def test_query_string_lowers(hand_sess):
+    q = parse_query(
+        "SELECT price, subcategory FROM Inventory NATURAL JOIN Item "
+        "PREDICT units"
+    )
+    plan = plan_query(retailer.catalog(), q, hand_sess.db)
+    assert set(plan.schemas) == {"Inventory", "Item"}
+    assert plan.query.features == ("price", "subcategory")
+
+
+# ---------------------------------------------------------------------------
+# snowflake end-to-end + warm-fingerprint second touch
+# ---------------------------------------------------------------------------
+
+
+def test_snowflake_fits_through_session(sf, sf_sess):
+    r = sf_sess.fit(PolynomialRegression(degree=2, lam=1e-2), solver=CFG)
+    assert np.isfinite(float(r.loss))
+    assert sf_sess.schema_fingerprint is not None
+    # declared FD is in the generated database
+    assert any(fd.determinant == "d0" for fd in sf_sess.db.fds)
+
+
+def test_snowflake_warm_fingerprint_executor_hit(sf, sf_sess):
+    sf_sess.compile(degree=2, squares=True)
+    warm = Session(
+        snowflake.generate(sf),
+        catalog=snowflake.catalog(sf),
+        query=snowflake.query(sf),
+    )
+    warm.compile(degree=2, squares=True)
+    assert warm.schema_fingerprint == sf_sess.schema_fingerprint
+    assert warm.stats.executor_traces == 0, (
+        "structurally identical schema re-traced its aggregate plan"
+    )
+
+
+def test_snowflake_model_server(sf, sf_sess):
+    from repro.serve import FitReply, ModelServer, snapshot
+
+    server = ModelServer(sf_sess, default_solver=CFG)
+    assert server.fingerprint == sf_sess.schema_fingerprint
+    fits = 0
+    for req in synthetic_requests(
+        sf_sess.db, sf_sess.frontend.query,
+        n_requests=10, n_tenants=2, fit_fraction=0.4, predict_rows=4, seed=3,
+    ):
+        reply = server.handle(req)
+        fits += isinstance(reply, FitReply)
+    snap = snapshot(server)
+    assert snap["schema_fingerprint"] == sf_sess.schema_fingerprint
+    assert snap["server"]["requests"] == 10
+    assert fits >= 1
+
+
+def test_synthesize_is_deterministic(sf):
+    cat = snowflake.catalog(sf)
+    d1, d2 = synthesize(cat, seed=5), synthesize(cat, seed=5)
+    for n, rel in d1.relations.items():
+        for a, col in rel.columns.items():
+            assert np.array_equal(col, d2.relations[n].columns[a]), (n, a)
+    # declared FD holds in the draw
+    host = next(
+        r for r in d1.relations.values()
+        if {"d0", "g0"} <= set(r.columns)
+    )
+    pairs = {
+        (int(x), int(y))
+        for x, y in zip(host.columns["d0"], host.columns["g0"])
+    }
+    assert len(pairs) == len({d for d, _ in pairs})
+
+
+# ---------------------------------------------------------------------------
+# catalog / query validation and JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_json_roundtrip():
+    cat = retailer.catalog()
+    assert Catalog.from_json(json.loads(json.dumps(cat.to_json()))) == cat
+
+
+def test_catalog_from_database_roundtrips_kinds():
+    db = generate(SPEC)
+    cat = Catalog.from_database(db)
+    assert set(cat.schemas()) == set(db.relations)
+    assert cat.attribute_kinds()["units"] == "continuous"
+    assert cat.attribute_kinds()["sku"] == "categorical"
+    assert ("sku", tuple(retailer.ITEM_CAT)) in cat.fds
+
+
+def test_catalog_validation_errors():
+    with pytest.raises(FrontendError):
+        Catalog(tables=())
+    with pytest.raises(FrontendError):
+        Catalog(tables=(
+            table("R", {"a": "key"}), table("S", {"a": "continuous"}),
+        ))
+    with pytest.raises(FrontendError):
+        Catalog(
+            tables=(table("R", {"a": "continuous", "b": "categorical"}),),
+            fds=(("a", ("b",)),),   # continuous determinant
+        )
+    with pytest.raises(FrontendError):
+        Catalog(
+            tables=(table("R", {"a": "categorical"}),),
+            fds=(("a", ("nope",)),),
+        )
+    cat = retailer.catalog()
+    with pytest.raises(FrontendError):
+        cat.database({})  # missing tables
+
+
+def test_query_resolution_and_errors():
+    cat = retailer.catalog()
+    q = Query(features=("*",), response="units").resolve(cat)
+    assert "units" not in q.features
+    assert "locn" not in q.features            # keys never features
+    assert set(retailer.features()) <= set(q.features)
+    with pytest.raises(FrontendError):
+        Query(features=("nope",), response="units").resolve(cat)
+    with pytest.raises(FrontendError):
+        Query(features=("price", "units"), response="units").resolve(cat)
+    with pytest.raises(FrontendError):
+        Query(features=("price",), response="nope").resolve(cat)
+
+
+def test_parse_query_grammar():
+    q = parse_query(
+        "select price, subcategory from Inventory natural join Item "
+        "predict units using fds;"
+    )
+    assert q.features == ("price", "subcategory")
+    assert q.tables == ("Inventory", "Item")
+    assert q.response == "units" and q.use_fds
+    assert parse_query("SELECT * FROM T PREDICT y").features == ("*",)
+    for bad in ("SELECT FROM T PREDICT y", "price FROM T PREDICT y",
+                "SELECT a,b FROM T PREDICT"):
+        with pytest.raises(FrontendError):
+            parse_query(bad)
+
+
+# ---------------------------------------------------------------------------
+# schema fingerprint
+# ---------------------------------------------------------------------------
+
+
+def _toy_catalog(prefix=""):
+    def p(s):
+        return prefix + s
+
+    return Catalog(tables=(
+        table(p("F"), {p("k"): "key", p("c"): "categorical",
+                       p("y"): "continuous"}),
+        table(p("D"), {p("k"): "key", p("x"): "continuous"}),
+    ))
+
+
+def test_fingerprint_rename_invariant_but_structure_sensitive():
+    q = Query(features=("c", "x"), response="y")
+    qz = Query(features=("zc", "zx"), response="zy")
+    fp = schema_fingerprint(_toy_catalog(), q)
+    assert schema_fingerprint(_toy_catalog("z"), qz) == fp
+    assert schema_fingerprint(_toy_catalog(), q) == fp  # stable
+    wider = Catalog(tables=(
+        _toy_catalog().tables[0],
+        table("D", {"k": "key", "x": "continuous", "w": "continuous"}),
+    ))
+    assert schema_fingerprint(wider, q) != fp
+    assert schema_fingerprint(_toy_catalog()) != fp  # query shapes the hash
+
+
+def test_fingerprint_tracks_query_shape():
+    cat = retailer.catalog()
+    full = schema_fingerprint(cat, retailer.query())
+    narrow = schema_fingerprint(
+        cat, Query(features=("price",), response="units")
+    )
+    fd = schema_fingerprint(cat, retailer.query(use_fds=True))
+    assert len({full, narrow, fd}) == 3
+
+
+# ---------------------------------------------------------------------------
+# satellites: token bridge + shard-size hints
+# ---------------------------------------------------------------------------
+
+
+def test_tokens_generalization_bit_identical():
+    from repro.data.tokens import retailer_tuples_as_tokens, tuples_as_tokens
+
+    db = generate(SPEC)
+    got = retailer_tuples_as_tokens(db, 97, 16)
+    inv = db.relations["Inventory"]
+    ids = (
+        inv.columns["sku"].astype(np.int64) * 31
+        + inv.columns["locn"].astype(np.int64) * 17
+        + inv.columns["date"].astype(np.int64)
+    ) % 97
+    n = (len(ids) // 17) * 17
+    grid = ids[:n].reshape(-1, 17).astype(np.int32)
+    assert np.array_equal(got["tokens"], grid[:, :-1])
+    assert np.array_equal(got["labels"], grid[:, 1:])
+    # catalog-driven default picks the same fact table
+    auto = tuples_as_tokens(db, 97, 16, catalog=retailer.catalog())
+    assert auto["tokens"].shape == got["tokens"].shape
+
+
+def test_tokens_any_schema(sf, sf_sess):
+    from repro.data.tokens import tuples_as_tokens
+
+    t = tuples_as_tokens(sf_sess.db, 53, 8, catalog=snowflake.catalog(sf))
+    assert t["tokens"].shape == t["labels"].shape
+    assert t["tokens"].shape[1] == 8
+    assert int(t["tokens"].max()) < 53
+
+
+def test_shard_shapes_from_bundle(front_sess):
+    from repro.dist import AcdcShapes, input_specs, shapes_from_bundle
+
+    (bundle,) = front_sess.bundles
+    sh = shapes_from_bundle(bundle, db=front_sess.db, n_shards=16)
+    assert isinstance(sh, AcdcShapes)
+    assert sh.rows_per_shard >= 1
+    kinds = retailer.catalog().attribute_kinds()
+    for name, adom, cols in sh.cat_tables:
+        assert kinds[name] == "categorical"
+        assert adom == front_sess.db.adom[name]
+        assert cols >= 1
+    assert sh.sigma_nnz == sum(
+        int(np.asarray(v).size) for _, v in bundle.result.tables.values()
+    )
+    # derived shapes drive the dry-run spec builder directly
+    specs = input_specs(sh, 4)
+    assert specs["x_cont"].shape == (4, sh.rows_per_shard, sh.n_cont)
+    # n_params falls back to an estimate without db, exact with it
+    assert shapes_from_bundle(bundle, n_shards=16).n_params > 0

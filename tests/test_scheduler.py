@@ -120,7 +120,8 @@ def test_snapshot_predict_versioned_and_exact():
     # the reply is EXACTLY a recompute from the published snapshot — the
     # no-torn-reads contract: params of one fully published version
     snap = history[reply.snapshot_version]
-    key = (FEATS, "E", (), LinearRegression(lam=LAM))
+    key = (sched.server.fingerprint, FEATS, "E", (),
+           LinearRegression(lam=LAM))
     pm = snap.published[key]
     np.testing.assert_array_equal(
         reply.predictions,
@@ -355,7 +356,8 @@ def test_stress_interleaved_fit_predict_delta(n_threads):
         assert versions == sorted(versions)
         for version, reply, rows in observed[tid]:
             snap = history[version]
-            key = (FEATS, "E", (), LinearRegression(lam=1.0))
+            key = (server.fingerprint, FEATS, "E", (),
+                   LinearRegression(lam=1.0))
             pm = snap.published[key]
             # bit-exact recompute from the published version — a torn
             # read (params of a half-published fit) cannot pass this
