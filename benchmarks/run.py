@@ -40,6 +40,7 @@ BENCHES = [
     bench_acdc.bench_multi_tenant,
     bench_acdc.bench_qps,
     bench_acdc.bench_grad_compression,
+    bench_acdc.bench_obs_overhead,
     bench_kernels.bench_sigma_fused,
     bench_kernels.bench_seg_outer,
     bench_kernels.bench_swa_vs_full,
@@ -51,6 +52,7 @@ SMOKE_BENCHES = [
     bench_acdc.bench_compression,
     bench_acdc.bench_session_reuse,
     bench_acdc.bench_executor_cache,
+    bench_acdc.bench_obs_overhead,
     bench_kernels.bench_seg_outer,
 ]
 

@@ -671,12 +671,70 @@ def check_acdc005(mod: _Module, out: List[LintDiagnostic]) -> None:
 
 
 # ----------------------------------------------------------------------
+# ACDC006 — ad-hoc timing pairs on serve/core hot paths
+# ----------------------------------------------------------------------
+
+# the hot serve path: serve/, core/, and session/ modules (plus the rule's
+# own fixtures, which carry "acdc006" in their filename). launch/ scripts
+# and the training loop keep their plain wall-clock pairs — they are not
+# request-scoped and should not feed the span ring.
+_ACDC006_SCOPE = re.compile(r"(^|[\\/])(serve|core|session)[\\/]|acdc006")
+_ACDC006_CLOCKS = {"perf_counter", "perf_counter_ns", "time", "monotonic"}
+
+
+def check_acdc006(mod: _Module, out: List[LintDiagnostic]) -> None:
+    """ACDC006: a raw ``t0 = time.perf_counter()`` / ``dt = ... - t0``
+    timing pair on a serve/core/session hot path. Those modules report
+    through the obs plane (DESIGN.md §15): ``obs.timer()`` measures the
+    same ``perf_counter`` delta (``.seconds``) AND lands the interval in
+    the span ring when tracing is on, so an ad-hoc pair is an interval
+    invisible to ``acdc_top``/Perfetto — and a second timing idiom to
+    keep allocation-light. Injected-clock pairs (``self.clock()``, the
+    refresh daemon's monotonic staleness math) are exempt: they are the
+    *tested* seam for time-dependent logic, not telemetry.
+    """
+    if not _ACDC006_SCOPE.search(mod.path):
+        return
+    for fn in [n for n in ast.walk(mod.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        # names bound to a raw time.<clock>() call in THIS scope
+        starts: Set[str] = set()
+        for n in _shallow(fn):
+            if (
+                isinstance(n, ast.Assign)
+                and len(n.targets) == 1
+                and isinstance(n.targets[0], ast.Name)
+                and isinstance(n.value, ast.Call)
+                and isinstance(n.value.func, ast.Attribute)
+                and isinstance(n.value.func.value, ast.Name)
+                and n.value.func.value.id == "time"
+                and n.value.func.attr in _ACDC006_CLOCKS
+            ):
+                starts.add(n.targets[0].id)
+        if not starts:
+            continue
+        for n in _shallow(fn):
+            if (
+                isinstance(n, ast.BinOp)
+                and isinstance(n.op, ast.Sub)
+                and isinstance(n.right, ast.Name)
+                and n.right.id in starts
+            ):
+                mod.emit(
+                    out, n, "ACDC006",
+                    "raw time.* timing pair on a serve/core hot path: "
+                    "use obs.timer()/obs.span() so the interval lands "
+                    "in the span ring (or inject a clock= seam)",
+                )
+
+
+# ----------------------------------------------------------------------
 # Driver
 # ----------------------------------------------------------------------
 
 RULES = (
     check_acdc001, check_acdc002, check_acdc003, check_acdc004,
-    check_acdc005,
+    check_acdc005, check_acdc006,
 )
 
 

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .monomials import Monomial, Registers
 from .schema import Database, Kind, Relation, key_col
 from .variable_order import OrderInfo, reduce_database, _row_key
@@ -506,35 +508,36 @@ def execute(
     plan structure before any uncached execution, strict adds O(n_exp)
     index-bound scans on every pass (DESIGN.md §13)."""
     regs = plan.registers
-    if backend == "numpy":
-        from repro import check as _check
+    with obs.span("engine.execute", backend=backend):
+        if backend == "numpy":
+            from repro import check as _check
 
-        mode = _check.resolve_mode(check)
-        if mode != "off":
-            # the numpy path has no executor cache to hang "verify once
-            # per shape" off of — cheap verifies structure every pass
-            # (it is O(plan metadata), the pass itself is O(data))
-            _check.check_plan(
-                plan,
-                dtype=np.float64,
-                level="full" if mode == "strict" else "structural",
+            mode = _check.resolve_mode(check)
+            if mode != "off":
+                # the numpy path has no executor cache to hang "verify once
+                # per shape" off of — cheap verifies structure every pass
+                # (it is O(plan metadata), the pass itself is O(data))
+                _check.check_plan(
+                    plan,
+                    dtype=np.float64,
+                    level="full" if mode == "strict" else "structural",
+                )
+            root_payloads = _run_numpy(plan)
+        else:
+            from .executor import global_plane
+
+            root_payloads = global_plane().execute(
+                plan, dtype=dtype, policy=kernels, check=check
             )
-        root_payloads = _run_numpy(plan)
-    else:
-        from .executor import global_plane
 
-        root_payloads = global_plane().execute(
-            plan, dtype=dtype, policy=kernels, check=check
-        )
-
-    tables: Dict[Monomial, Tuple[Dict[str, np.ndarray], jnp.ndarray]] = {}
-    root = regs.root
-    for sig, sp in plan.node_sigs[root].items():
-        mat = root_payloads[sig]
-        for k, ent_i in enumerate(sp.entry_cols):
-            e = regs.entries[root][ent_i]
-            tables[e.mono] = (sp.out_keys, mat[:, k])
-    count = float(tables[()][1][0])
+        tables: Dict[Monomial, Tuple[Dict[str, np.ndarray], jnp.ndarray]] = {}
+        root = regs.root
+        for sig, sp in plan.node_sigs[root].items():
+            mat = root_payloads[sig]
+            for k, ent_i in enumerate(sp.entry_cols):
+                e = regs.entries[root][ent_i]
+                tables[e.mono] = (sp.out_keys, mat[:, k])
+        count = float(tables[()][1][0])
     return AggregateResult(tables=tables, count=count)
 
 

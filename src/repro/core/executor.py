@@ -42,13 +42,14 @@ rows contribute nothing to the Gram.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from .engine import EnginePlan, SigPlan, _lambda_matrix
 from .schema import Kind
@@ -313,19 +314,21 @@ def _prepare(plan: EnginePlan, dtype, policy: KernelPolicy,
 
 
 @dataclasses.dataclass
-class ExecutorStats:
+class ExecutorStats(obs.StatsBase):
     hits: int = 0
     misses: int = 0
     evictions: int = 0
     traces: int = 0                 # XLA traces actually performed
     trace_seconds: float = 0.0
+    execute_seconds: float = 0.0    # total execute() wall time (incl. traces)
     executions: int = 0
     seg_outer_steps: int = 0        # dispatch accounting (per execution)
     moments_steps: int = 0
     checks: int = 0                 # plan verifications (repro.check)
 
-    def snapshot(self) -> dict:
-        return dataclasses.asdict(self)
+    def derived(self) -> dict:
+        total = self.hits + self.misses
+        return {"hit_rate": self.hits / total if total else 0.0}
 
 
 def _build_runner(signature, stats: ExecutorStats):
@@ -455,12 +458,31 @@ class ExecutorPlane:
             )
             self.stats.checks += 1
         self.last_signature = signature
+        hit = signature in self._cache
         fn = self.executable_for(signature)
         traces_before = self.stats.traces
-        t0 = time.perf_counter()
-        outs = fn(lams, bufs)
+        with obs.span(
+            "executor.execute", hit=hit, steps=len(signature[2]),
+            seg_outer=fused, moments=moments,
+        ):
+            # host-side dispatch markers: the device work runs inside the
+            # jitted runner, so named kernel spans are emitted here (the
+            # XLA-profile view comes from named_scope/TraceAnnotation)
+            if fused:
+                obs.event("kernel.seg_outer", steps=fused)
+            if moments:
+                obs.event("kernel.sigma_fused", steps=moments)
+            if len(signature[2]) > fused + moments:
+                obs.event(
+                    "kernel.segment_sum",
+                    steps=len(signature[2]) - fused - moments,
+                )
+            with obs.timer("executor.run", traced=not hit) as t:
+                with obs.xla_annotation("acdc.executor.run"):
+                    outs = fn(lams, bufs)
         if self.stats.traces > traces_before:
-            self.stats.trace_seconds += time.perf_counter() - t0
+            self.stats.trace_seconds += t.seconds
+        self.stats.execute_seconds += t.seconds
         self.stats.executions += 1
         self.stats.seg_outer_steps += fused
         self.stats.moments_steps += moments

@@ -15,13 +15,14 @@ Barzilai-Borwein [6]; we implement the BB1 step as an option).
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import OrderedDict
 from typing import Callable, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
+
+from repro import obs
 
 
 class SolverState(NamedTuple):
@@ -55,15 +56,16 @@ class SolverResult:
 
 
 @dataclasses.dataclass
-class SolverCacheStats:
+class SolverCacheStats(obs.StatsBase):
     hits: int = 0
     misses: int = 0
     evictions: int = 0
     traces: int = 0
     trace_seconds: float = 0.0
 
-    def snapshot(self) -> dict:
-        return dataclasses.asdict(self)
+    def derived(self) -> dict:
+        total = self.hits + self.misses
+        return {"hit_rate": self.hits / total if total else 0.0}
 
 
 _CACHE_CAPACITY = 64
@@ -219,7 +221,10 @@ def bgd(
             loss_fn, unravel, max_iters, tol, bb_step, max_backtracks,
             grad_fn,
         )
-        final = drive(theta0, jnp.float64(alpha0), carry0, tuple(loss_args))
+        with obs.span("solver.bgd", cached=False):
+            final = drive(
+                theta0, jnp.float64(alpha0), carry0, tuple(loss_args)
+            )
     else:
         drive = _DRIVER_CACHE.get(cache_key)
         if drive is None:
@@ -237,10 +242,12 @@ def bgd(
             _DRIVER_CACHE.move_to_end(cache_key)
 
         traces_before = _STATS.traces
-        t0 = time.perf_counter()
-        final = drive(theta0, jnp.float64(alpha0), carry0, tuple(loss_args))
+        with obs.timer("solver.bgd", cached=True) as t:
+            final = drive(
+                theta0, jnp.float64(alpha0), carry0, tuple(loss_args)
+            )
         if _STATS.traces > traces_before:
-            _STATS.trace_seconds += time.perf_counter() - t0
+            _STATS.trace_seconds += t.seconds
     return SolverResult(
         params=unravel(final.theta),
         loss=float(final.loss),
@@ -298,7 +305,8 @@ def bgd_batched(
         return jax.vmap(run, in_axes=(0, 0, 0))(theta0s, alpha0s, bargs)
 
     if cache_key is None:
-        final = batched_drive(theta0s, alpha0s, bargs, tuple(loss_args))
+        with obs.span("solver.bgd_batched", cached=False, batch=len(flats)):
+            final = batched_drive(theta0s, alpha0s, bargs, tuple(loss_args))
     else:
         key = ("batched", cache_key)
         drive = _DRIVER_CACHE.get(key)
@@ -313,10 +321,11 @@ def bgd_batched(
             _STATS.hits += 1
             _DRIVER_CACHE.move_to_end(key)
         traces_before = _STATS.traces
-        t0 = time.perf_counter()
-        final = drive(theta0s, alpha0s, bargs, tuple(loss_args))
+        with obs.timer("solver.bgd_batched", cached=True,
+                       batch=len(flats)) as t:
+            final = drive(theta0s, alpha0s, bargs, tuple(loss_args))
         if _STATS.traces > traces_before:
-            _STATS.trace_seconds += time.perf_counter() - t0
+            _STATS.trace_seconds += t.seconds
     return [
         SolverResult(
             params=unravel(final.theta[i]),

@@ -55,7 +55,20 @@ def acdc_serve(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--json", action="store_true",
                    help="dump the full metrics snapshot as JSON")
+    p.add_argument("--trace-dir", default=None,
+                   help="enable request tracing and write trace.json "
+                        "(Perfetto), spans.jsonl, and metrics.prom there "
+                        "at exit (DESIGN.md §15)")
+    p.add_argument("--metrics-port", type=int, default=None,
+                   help="serve /metrics (Prometheus), /snapshot (JSON), "
+                        "and /healthz on this port while the trace "
+                        "replays (0 = ephemeral)")
     args = p.parse_args(argv)
+
+    from repro import obs
+
+    if args.trace_dir is not None:
+        obs.enable()
 
     if args.schema == "retailer":
         db = generate(RetailerSpec(
@@ -129,6 +142,16 @@ def acdc_serve(argv=None) -> int:
     print(f"[serve] schema={args.schema} "
           f"fingerprint={server.fingerprint}")
 
+    exporter = None
+    if args.metrics_port is not None:
+        from repro.obs.export import serve_metrics_http
+
+        exporter = serve_metrics_http(
+            args.metrics_port, snapshot_fn=lambda: snapshot(server)
+        )
+        print(f"[serve] metrics exporter at {exporter.url}/metrics "
+              f"(also /snapshot, /healthz)")
+
     for i, req in enumerate(trace):
         if dstream and args.delta_every and i and i % args.delta_every == 0:
             ack = server.handle(DeltaEvent(next(dstream)))
@@ -168,6 +191,29 @@ def acdc_serve(argv=None) -> int:
               f"pending={stale['pending_batches']}, "
               f"age={stale['data_age_seconds']:.3f}s, "
               f"last_refresh={stale['refresh_seconds_last']:.3f}s")
+    if args.trace_dir is not None:
+        import os
+
+        from repro.obs import export
+
+        os.makedirs(args.trace_dir, exist_ok=True)
+        export.write_perfetto(os.path.join(args.trace_dir, "trace.json"))
+        export.write_spans_jsonl(
+            os.path.join(args.trace_dir, "spans.jsonl")
+        )
+        with open(
+            os.path.join(args.trace_dir, "metrics.prom"), "w"
+        ) as f:
+            f.write(export.prometheus_text())
+        ring = obs.ring_stats()
+        print(f"[serve] trace: {ring['recorded']} spans "
+              f"({ring['dropped']} dropped) -> {args.trace_dir}/trace.json")
+        for h in obs.hottest(5):
+            print(f"[serve]   hot {h['name']:24s} n={h['count']:<5d} "
+                  f"total={h['total_seconds']:.3f}s "
+                  f"max={h['max_seconds'] * 1e3:.1f}ms")
+    if exporter is not None:
+        exporter.close()
     return 0
 
 

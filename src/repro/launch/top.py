@@ -1,0 +1,281 @@
+"""``acdc_top`` — live operator console over a serving snapshot.
+
+Polls the ``/snapshot`` endpoint exposed by ``acdc_serve
+--metrics-port`` (``repro.obs.export.serve_metrics_http``) and renders a
+one-screen operator view: request rates since the last poll, server-side
+latency percentiles off the log-bucketed histograms, cache economics
+(bundle hit rates, executor/solver compile caches), staleness (queue
+depth, data age, last refresh), per-tenant rows, and the hottest spans
+in the trace ring:
+
+    python -m repro.launch.top --url http://127.0.0.1:9100
+    python -m repro.launch.top --port 9100 --interval 2
+    python -m repro.launch.top --demo          # no server needed
+
+Rendering is the pure ``render(snap, prev, interval)`` function —
+snapshot dicts in, lines out — so the screen is testable without a
+server or a terminal; the loop around it only fetches, diffs, and
+repaints.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+import urllib.request
+from typing import List, Optional
+
+
+def fetch_snapshot(url: str, timeout: float = 5.0) -> dict:
+    """GET ``<url>/snapshot`` and decode the metrics JSON."""
+    with urllib.request.urlopen(
+        url.rstrip("/") + "/snapshot", timeout=timeout
+    ) as resp:
+        return json.loads(resp.read().decode("utf-8"))
+
+
+def _rate(cur: dict, prev: Optional[dict], path: List[str],
+          interval: float) -> float:
+    """Per-second delta of one nested counter between two snapshots."""
+    def dig(snap):
+        node = snap
+        for k in path:
+            if not isinstance(node, dict) or k not in node:
+                return 0.0
+            node = node[k]
+        return float(node or 0.0)
+
+    if prev is None or interval <= 0:
+        return 0.0
+    return max(0.0, (dig(cur) - dig(prev)) / interval)
+
+
+def _bar(frac: float, width: int = 12) -> str:
+    frac = min(max(frac, 0.0), 1.0)
+    full = int(round(frac * width))
+    return "#" * full + "." * (width - full)
+
+
+def _ms(seconds: float) -> str:
+    return f"{seconds * 1e3:8.2f}ms"
+
+
+def render(snap: dict, prev: Optional[dict] = None,
+           interval: float = 1.0) -> List[str]:
+    """One console frame as a list of lines (pure: no I/O, no clock)."""
+    srv = snap.get("server", {})
+    lat = snap.get("latency", {})
+    ses = snap.get("session", {})
+    stale = snap.get("staleness", {})
+    execu = snap.get("executor", {})
+    sol = snap.get("solver_cache", {})
+    trace = snap.get("trace", {})
+
+    fits_total = (
+        srv.get("fits", 0) + srv.get("implicit_fits", 0)
+        + srv.get("refresh_refits", 0)
+    )
+    lines = [
+        "acdc_top — in-DB model server"
+        + (f"  [schema {snap['schema_fingerprint']}]"
+           if snap.get("schema_fingerprint") else ""),
+        "",
+        (
+            f"requests {srv.get('requests', 0):>8}   "
+            f"fits {fits_total:>6}   "
+            f"predicts {srv.get('predicts', 0):>6}   "
+            f"deltas {srv.get('deltas', 0):>5}   "
+            f"tenants {len(snap.get('tenants', {})):>3}"
+        ),
+        (
+            f"rates    "
+            f"fit {_rate(snap, prev, ['server', 'fits'], interval):6.1f}/s   "
+            f"predict "
+            f"{_rate(snap, prev, ['server', 'predicts'], interval):6.1f}/s   "
+            f"delta "
+            f"{_rate(snap, prev, ['server', 'deltas'], interval):6.1f}/s"
+        ),
+        "",
+    ]
+
+    fp = lat.get("fit_seconds_percentiles", {})
+    pp = lat.get("predict_seconds_percentiles", {})
+    lines += [
+        "latency (server-side, log-bucketed histograms)",
+        (
+            f"  fit      p50 {_ms(fp.get('p50', 0.0))}   "
+            f"p99 {_ms(fp.get('p99', 0.0))}   "
+            f"mean {_ms(lat.get('fit_seconds_mean', 0.0))}"
+        ),
+        (
+            f"  predict  p50 {_ms(pp.get('p50', 0.0))}   "
+            f"p99 {_ms(pp.get('p99', 0.0))}   "
+            f"mean {_ms(lat.get('predict_seconds_mean', 0.0))}"
+        ),
+        "",
+    ]
+
+    hits = srv.get("self_hits", 0) + srv.get("cross_tenant_hits", 0)
+    bundle_rate = hits / fits_total if fits_total else 0.0
+    exec_rate = execu.get("hit_rate", 0.0)
+    sol_rate = sol.get("hit_rate", 0.0)
+    budget = ses.get("byte_budget") or 0
+    used = ses.get("bundle_bytes", 0)
+    lines += [
+        "caches",
+        (
+            f"  bundle   [{_bar(bundle_rate)}] {bundle_rate:6.1%}  "
+            f"{ses.get('bundles', 0)} bundles, {used}B"
+            + (f"/{budget}B" if budget else "")
+            + f", {ses.get('evictions', 0)} evictions"
+        ),
+        (
+            f"  executor [{_bar(exec_rate)}] {exec_rate:6.1%}  "
+            f"{execu.get('cached_executables', 0)} jitted, "
+            f"{execu.get('traces', 0)} traces "
+            f"({execu.get('trace_seconds', 0.0):.2f}s)"
+        ),
+        (
+            f"  solver   [{_bar(sol_rate)}] {sol_rate:6.1%}  "
+            f"{sol.get('entries', 0)} drivers, "
+            f"{sol.get('traces', 0)} traces "
+            f"({sol.get('trace_seconds', 0.0):.2f}s)"
+        ),
+        "",
+        "staleness",
+        (
+            f"  pending {stale.get('pending_batches', 0)} batches / "
+            f"{stale.get('pending_rows', 0)} rows   "
+            f"age {stale.get('data_age_seconds', 0.0):.2f}s   "
+            f"last apply {stale.get('refresh_seconds_last', 0.0) * 1e3:.1f}ms"
+            f"   {stale.get('applies', 0)} applies"
+        ),
+        "",
+    ]
+
+    tenants = snap.get("tenants", {})
+    if tenants:
+        lines.append(
+            f"  {'tenant':<14} {'spec':<5} {'fits':>5} {'pred':>5} "
+            f"{'hits':>5} {'loss':>10} {'fit s':>8}"
+        )
+        for name, t in sorted(tenants.items()):
+            loss = t.get("loss")
+            lines.append(
+                f"  {name:<14} {t.get('spec', '?'):<5} "
+                f"{t.get('fits', 0) + t.get('implicit_fits', 0):>5} "
+                f"{t.get('predicts', 0):>5} "
+                f"{t.get('self_hits', 0) + t.get('cross_hits', 0):>5} "
+                f"{loss if loss is None else format(loss, '10.4f')!s:>10} "
+                f"{t.get('fit_seconds', 0.0):>8.3f}"
+            )
+        lines.append("")
+
+    hottest = trace.get("hottest", [])
+    if hottest:
+        ring = (
+            f"ring {trace.get('recorded', 0)} spans, "
+            f"{trace.get('dropped', 0)} dropped"
+        )
+        lines.append(f"hottest spans ({ring})")
+        for h in hottest[:8]:
+            lines.append(
+                f"  {h['name']:<24} n={h['count']:<6} "
+                f"total {h['total_seconds']:8.3f}s   "
+                f"max {h['max_seconds'] * 1e3:8.2f}ms"
+            )
+    return lines
+
+
+def demo_snapshot() -> dict:
+    """A canned snapshot so ``--demo`` renders without a server."""
+    return {
+        "schema_fingerprint": "demo0000",
+        "server": {
+            "requests": 128, "fits": 24, "implicit_fits": 4,
+            "refresh_refits": 2, "predicts": 90, "deltas": 10,
+            "self_hits": 12, "cross_tenant_hits": 6,
+        },
+        "latency": {
+            "fit_seconds_mean": 0.012,
+            "predict_seconds_mean": 0.0008,
+            "fit_seconds_percentiles": {"p50": 0.011, "p99": 0.043},
+            "predict_seconds_percentiles": {"p50": 0.0007, "p99": 0.002},
+        },
+        "tenants": {
+            "t0": {"spec": "lr", "fits": 8, "implicit_fits": 1,
+                   "predicts": 40, "self_hits": 6, "cross_hits": 2,
+                   "loss": 0.0712, "fit_seconds": 0.31},
+            "t1": {"spec": "pr2", "fits": 16, "implicit_fits": 3,
+                   "predicts": 50, "self_hits": 6, "cross_hits": 4,
+                   "loss": 0.0489, "fit_seconds": 0.58},
+        },
+        "session": {"bundles": 3, "bundle_bytes": 18432,
+                    "byte_budget": 65536, "evictions": 1},
+        "staleness": {"pending_batches": 2, "pending_rows": 31,
+                      "data_age_seconds": 0.7,
+                      "refresh_seconds_last": 0.004, "applies": 9},
+        "executor": {"hit_rate": 0.83, "cached_executables": 4,
+                     "traces": 4, "trace_seconds": 1.9},
+        "solver_cache": {"hit_rate": 0.76, "entries": 3, "traces": 3,
+                         "trace_seconds": 0.8},
+        "trace": {
+            "recorded": 512, "dropped": 0,
+            "hottest": [
+                {"name": "solver.bgd", "count": 30,
+                 "total_seconds": 0.91, "max_seconds": 0.09},
+                {"name": "executor.run", "count": 30,
+                 "total_seconds": 0.44, "max_seconds": 0.21},
+                {"name": "scheduler.score", "count": 90,
+                 "total_seconds": 0.07, "max_seconds": 0.003},
+            ],
+        },
+    }
+
+
+def acdc_top(argv=None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(description=acdc_top.__doc__)
+    p.add_argument("--url", default=None,
+                   help="snapshot endpoint base, e.g. http://host:9100")
+    p.add_argument("--port", type=int, default=9100,
+                   help="shorthand for --url http://127.0.0.1:<port>")
+    p.add_argument("--interval", type=float, default=1.0)
+    p.add_argument("--once", action="store_true",
+                   help="render one frame and exit")
+    p.add_argument("--plain", action="store_true",
+                   help="no screen clearing between frames (for logs)")
+    p.add_argument("--demo", action="store_true",
+                   help="render a canned snapshot (no server)")
+    args = p.parse_args(argv)
+
+    url = args.url or f"http://127.0.0.1:{args.port}"
+    prev = None
+    try:
+        while True:
+            if args.demo:
+                snap = demo_snapshot()
+            else:
+                try:
+                    snap = fetch_snapshot(url)
+                except OSError as e:
+                    print(f"[top] {url}/snapshot unreachable: {e}")
+                    if args.once:
+                        return 1
+                    time.sleep(args.interval)
+                    continue
+            frame = render(snap, prev, args.interval)
+            if not args.plain:
+                print("\x1b[2J\x1b[H", end="")
+            print("\n".join(frame), flush=True)
+            if args.once or args.demo:
+                return 0
+            prev = snap
+            time.sleep(args.interval)
+    except KeyboardInterrupt:
+        return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(acdc_top())

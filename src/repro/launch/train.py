@@ -309,7 +309,18 @@ def acdc_main(argv=None) -> int:
     p.add_argument("--rank", type=int, default=8)
     p.add_argument("--max-iters", type=int, default=500)
     p.add_argument("--tol", type=float, default=1e-9)
+    p.add_argument("--trace", action="store_true",
+                   help="record request-scoped spans and print the "
+                        "hottest at exit (DESIGN.md §15)")
+    p.add_argument("--trace-dir", default=None,
+                   help="also dump trace.json (Perfetto) and spans.jsonl "
+                        "there; implies --trace")
     args = p.parse_args(argv)
+
+    from repro import obs
+
+    if args.trace or args.trace_dir is not None:
+        obs.enable()
 
     sess, label = _schema_session(args, Session)
     specs = [
@@ -336,6 +347,27 @@ def acdc_main(argv=None) -> int:
         print(f"[acdc] {spec.name:5s} loss={r.loss:.5f} "
               f"iters={r.solver.iterations} agg={r.aggregate_seconds:.2f}s "
               f"conv={r.converge_seconds:.2f}s params={r.sigma.space.total}")
+    if obs.enabled():
+        if args.trace_dir is not None:
+            import os
+
+            from repro.obs import export
+
+            os.makedirs(args.trace_dir, exist_ok=True)
+            export.write_perfetto(
+                os.path.join(args.trace_dir, "trace.json")
+            )
+            export.write_spans_jsonl(
+                os.path.join(args.trace_dir, "spans.jsonl")
+            )
+            print(f"[acdc] trace -> {args.trace_dir}/trace.json")
+        ring = obs.ring_stats()
+        print(f"[acdc] trace: {ring['recorded']} spans "
+              f"({ring['dropped']} dropped); hottest:")
+        for h in obs.hottest(5):
+            print(f"[acdc]   {h['name']:24s} n={h['count']:<5d} "
+                  f"total={h['total_seconds']:.3f}s "
+                  f"max={h['max_seconds'] * 1e3:.1f}ms")
     return 0
 
 

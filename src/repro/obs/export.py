@@ -1,0 +1,227 @@
+"""Exporters: Perfetto trace_event JSON, Prometheus text, JSONL, HTTP.
+
+Four ways out of the span/metrics planes (DESIGN.md §15), all stdlib:
+
+* ``perfetto_trace()`` — Chrome/Perfetto ``trace_event`` JSON (phase
+  ``X`` complete events, µs timestamps off the monotonic span clock;
+  zero-duration kernel-dispatch markers become ``i`` instant events).
+  Load in ``ui.perfetto.dev`` or ``chrome://tracing``.
+* ``prometheus_text()`` — text exposition v0.0.4: counters, gauges, and
+  histograms with cumulative ``le`` buckets (only non-empty bucket
+  bounds are emitted to keep the 81-bound geometric grid readable).
+* ``write_spans_jsonl()`` — one ``SpanRecord`` dict per line, the
+  machine-readable event log for offline analysis.
+* ``serve_metrics_http()`` — a daemon-thread HTTP exporter serving
+  ``/metrics`` (Prometheus), ``/snapshot`` (full JSON metrics snapshot,
+  what ``acdc_top`` polls), and ``/healthz``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+from . import metrics as _metrics
+from . import trace as _trace
+
+__all__ = [
+    "perfetto_events", "perfetto_trace", "write_perfetto",
+    "prometheus_text", "write_spans_jsonl", "serve_metrics_http",
+    "MetricsExporter",
+]
+
+
+def _tid_table(spans: Iterable[_trace.SpanRecord]) -> Dict[str, int]:
+    """Stable small-int thread ids in first-seen order (Perfetto wants
+    integer tids; thread names ride metadata events)."""
+    tids: Dict[str, int] = {}
+    for rec in spans:
+        if rec.thread not in tids:
+            tids[rec.thread] = len(tids) + 1
+    return tids
+
+
+def perfetto_events(
+    spans: Optional[List[_trace.SpanRecord]] = None,
+    pid: Optional[int] = None,
+) -> List[Dict[str, Any]]:
+    """Spans → Chrome ``trace_event`` dicts. ``pid`` is overridable so
+    golden tests stay deterministic."""
+    if spans is None:
+        spans = _trace.spans()
+    if pid is None:
+        pid = os.getpid()
+    tids = _tid_table(spans)
+    events: List[Dict[str, Any]] = [
+        {
+            "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+            "args": {"name": thread},
+        }
+        for thread, tid in tids.items()
+    ]
+    for rec in spans:
+        args = {
+            "trace_id": rec.trace_id,
+            "span_id": rec.span_id,
+            "parent_id": rec.parent_id,
+        }
+        args.update({k: v for k, v in rec.attrs})
+        ev: Dict[str, Any] = {
+            "name": rec.name,
+            "cat": "acdc",
+            "pid": pid,
+            "tid": tids[rec.thread],
+            "ts": rec.start_ns / 1000.0,
+            "args": args,
+        }
+        if rec.duration_ns == 0:
+            ev["ph"] = "i"
+            ev["s"] = "t"
+        else:
+            ev["ph"] = "X"
+            ev["dur"] = rec.duration_ns / 1000.0
+        events.append(ev)
+    return events
+
+
+def perfetto_trace(
+    spans: Optional[List[_trace.SpanRecord]] = None,
+    pid: Optional[int] = None,
+) -> Dict[str, Any]:
+    return {
+        "traceEvents": perfetto_events(spans, pid=pid),
+        "displayTimeUnit": "ms",
+    }
+
+
+def write_perfetto(path: str,
+                   spans: Optional[List[_trace.SpanRecord]] = None) -> str:
+    with open(path, "w") as fh:
+        json.dump(perfetto_trace(spans), fh)
+    return path
+
+
+def write_spans_jsonl(path: str,
+                      spans: Optional[List[_trace.SpanRecord]] = None) -> str:
+    if spans is None:
+        spans = _trace.spans()
+    with open(path, "w") as fh:
+        for rec in spans:
+            fh.write(json.dumps(rec.to_dict()) + "\n")
+    return path
+
+
+def _prom_labels(labels) -> str:
+    if not labels:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in labels)
+    return "{" + body + "}"
+
+
+def _prom_number(x: float) -> str:
+    if x == int(x) and abs(x) < 1e15:
+        return str(int(x))
+    return repr(x)
+
+
+def prometheus_text(registry: Optional[_metrics.Registry] = None) -> str:
+    """Text exposition v0.0.4 over every instrument in the registry.
+    Histogram series emit cumulative ``le`` buckets (non-empty bounds
+    plus ``+Inf``), ``_sum`` and ``_count``."""
+    if registry is None:
+        registry = _metrics.registry()
+    lines: List[str] = []
+    seen_types: Dict[str, str] = {}
+    for inst in registry.instruments():
+        kind = type(inst).__name__.lower()
+        if inst.name not in seen_types:
+            seen_types[inst.name] = kind
+            lines.append(f"# TYPE {inst.name} "
+                         f"{'histogram' if kind == 'histogram' else kind}")
+        if isinstance(inst, _metrics.Histogram):
+            cum = 0
+            for i, c in enumerate(inst.counts):
+                cum += c
+                if c == 0:
+                    continue
+                le = (_prom_number(_metrics.BUCKET_BOUNDS[i])
+                      if i < len(_metrics.BUCKET_BOUNDS) else "+Inf")
+                labels = (*inst.labels, ("le", le))
+                lines.append(
+                    f"{inst.name}_bucket{_prom_labels(labels)} {cum}")
+            labels_inf = (*inst.labels, ("le", "+Inf"))
+            lines.append(
+                f"{inst.name}_bucket{_prom_labels(labels_inf)} {inst.count}")
+            lines.append(f"{inst.name}_sum{_prom_labels(inst.labels)} "
+                         f"{_prom_number(inst.sum)}")
+            lines.append(f"{inst.name}_count{_prom_labels(inst.labels)} "
+                         f"{inst.count}")
+        else:
+            lines.append(f"{inst.name}{_prom_labels(inst.labels)} "
+                         f"{_prom_number(inst.value)}")
+    return "\n".join(lines) + "\n"
+
+
+class MetricsExporter:
+    """Daemon-thread HTTP exporter. ``snapshot_fn`` supplies the
+    ``/snapshot`` JSON body (typically ``lambda:
+    serve.metrics.snapshot(server)``); ``/metrics`` always renders the
+    process registry. ``port=0`` binds an ephemeral port (tests)."""
+
+    def __init__(self, port: int,
+                 snapshot_fn: Optional[Callable[[], Dict[str, Any]]] = None,
+                 host: str = "127.0.0.1"):
+        import http.server
+
+        exporter = self
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def log_message(self, *args) -> None:  # quiet
+                pass
+
+            def do_GET(self) -> None:
+                if self.path.startswith("/metrics"):
+                    body = prometheus_text().encode()
+                    ctype = "text/plain; version=0.0.4"
+                elif self.path.startswith("/snapshot"):
+                    snap = (exporter.snapshot_fn()
+                            if exporter.snapshot_fn else {})
+                    body = json.dumps(snap).encode()
+                    ctype = "application/json"
+                elif self.path.startswith("/healthz"):
+                    body, ctype = b"ok\n", "text/plain"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+        self.snapshot_fn = snapshot_fn
+        self._server = http.server.ThreadingHTTPServer((host, port), Handler)
+        self._server.daemon_threads = True
+        self.port = self._server.server_port
+        self.url = f"http://{host}:{self.port}"
+        self._thread = threading.Thread(
+            target=self._server.serve_forever,
+            name="acdc-metrics-exporter",
+            daemon=True,  # exporter must never pin the process open
+        )
+        self._thread.start()
+
+    def close(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join(timeout=5)
+
+
+def serve_metrics_http(
+    port: int,
+    snapshot_fn: Optional[Callable[[], Dict[str, Any]]] = None,
+    host: str = "127.0.0.1",
+) -> MetricsExporter:
+    return MetricsExporter(port, snapshot_fn=snapshot_fn, host=host)

@@ -1,0 +1,259 @@
+"""Typed metrics: Counter/Gauge/Histogram registry + the snapshot idiom.
+
+Two layers (DESIGN.md §15):
+
+* **Registry** — named, labelled instruments. ``Histogram`` is
+  log-bucketed (geometric bounds, ratio 10^(1/8) ≈ 1.33 per bucket,
+  spanning 100ns..~17min) so server-side p50/p99 latency comes from the
+  serving process itself instead of only ``bench_qps``: an observation
+  is one ``bisect`` + two adds, and a percentile interpolates inside
+  its bucket (worst-case relative error = one bucket ratio).
+  No locks on the observe path — ``counts[i] += 1`` under the GIL can
+  at worst lose a concurrent increment, an accepted observability-grade
+  tolerance (the serve plane's authoritative counters stay where they
+  are, under the scheduler's write lock).
+
+* **StatsBase** — the shared ``.snapshot()`` idiom for the repo's stats
+  dataclasses (``ExecutorStats``, ``SolverCacheStats``, ...):
+  ``dataclasses.asdict`` plus a ``derived()`` hook for computed fields
+  (hit rates), so every plane lands in ``serve.metrics.snapshot()`` the
+  same way.
+
+Pure stdlib: importable without jax (the lint/CI hermetic path).
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = [
+    "StatsBase", "Counter", "Gauge", "Histogram", "Registry",
+    "registry", "counter", "gauge", "histogram", "reset_registry",
+    "BUCKET_BOUNDS",
+]
+
+
+class StatsBase:
+    """Mixin for stats dataclasses: ``snapshot()`` = ``asdict`` plus
+    ``derived()`` (computed fields like hit rates). Subclasses are
+    ``@dataclasses.dataclass``es; this class holds no state."""
+
+    def derived(self) -> Dict[str, Any]:
+        return {}
+
+    def snapshot(self) -> Dict[str, Any]:
+        out = dataclasses.asdict(self)  # type: ignore[call-overload]
+        out.update(self.derived())
+        return out
+
+
+# Geometric bucket bounds: 8 buckets per decade from 1e-7s (100ns) to
+# 1e3s, precomputed once. observe() bisects; anything above the last
+# bound lands in a single overflow bucket.
+_PER_DECADE = 8
+BUCKET_BOUNDS: Tuple[float, ...] = tuple(
+    10.0 ** (-7 + i / _PER_DECADE) for i in range(_PER_DECADE * 10 + 1)
+)
+
+
+class Counter:
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...]):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"value": self.value}
+
+
+class Gauge:
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...]):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"value": self.value}
+
+
+class Histogram:
+    """Log-bucketed latency histogram (seconds). Lock-free observe;
+    percentiles interpolate linearly inside the winning bucket."""
+
+    __slots__ = ("name", "labels", "counts", "sum", "count", "max")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...]):
+        self.name = name
+        self.labels = labels
+        self.counts = [0] * (len(BUCKET_BOUNDS) + 1)
+        self.sum = 0.0
+        self.count = 0
+        self.max = 0.0
+
+    def observe(self, seconds: float) -> None:
+        idx = bisect.bisect_left(BUCKET_BOUNDS, seconds)
+        self.counts[idx] += 1
+        self.sum += seconds
+        self.count += 1
+        if seconds > self.max:
+            self.max = seconds
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100]. 0 with no observations."""
+        total = self.count
+        if total <= 0:
+            return 0.0
+        rank = q / 100.0 * total
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if seen + c >= rank:
+                lo = BUCKET_BOUNDS[i - 1] if i > 0 else 0.0
+                hi = (BUCKET_BOUNDS[i] if i < len(BUCKET_BOUNDS)
+                      else max(self.max, lo))
+                frac = (rank - seen) / c
+                return min(lo + (hi - lo) * frac, self.max or hi)
+            seen += c
+        return self.max
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "mean": (self.sum / self.count) if self.count else 0.0,
+            "max": self.max,
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+        }
+
+    def merge_counts_into(self, counts: List[int]) -> None:
+        for i, c in enumerate(self.counts):
+            counts[i] += c
+
+
+def _label_key(labels: Dict[str, Any]) -> Tuple[Tuple[str, str], ...]:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+class Registry:
+    """Get-or-create instrument store keyed by (name, labels). Creation
+    takes a lock (rare); the returned instrument is then lock-free."""
+
+    def __init__(self) -> None:
+        self._mu = threading.Lock()  # lock: registry (creation only)
+        # double-checked in _get: writes under _mu, reads lock-free (the
+        # dict is insert-only, so a racing read sees an instrument or None)
+        self._instruments: Dict[Tuple[str, Tuple], Any] = {}  # lock: _mu
+
+    def _get(self, cls, name: str, labels: Dict[str, Any]):
+        key = (name, _label_key(labels))
+        inst = self._instruments.get(key)
+        if inst is None:
+            with self._mu:
+                inst = self._instruments.get(key)
+                if inst is None:
+                    inst = cls(name, key[1])
+                    self._instruments[key] = inst
+        if not isinstance(inst, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(inst).__name__}, requested {cls.__name__}"
+            )
+        return inst
+
+    def counter(self, name: str, **labels: Any) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels: Any) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, **labels: Any) -> Histogram:
+        return self._get(Histogram, name, labels)
+
+    def instruments(self) -> List[Any]:
+        return list(self._instruments.values())
+
+    def merged_histogram(self, name: str) -> Optional[Histogram]:
+        """All series of ``name`` merged into one label-free histogram
+        (the cross-tenant p50/p99 in ``serve.metrics.snapshot()``)."""
+        merged: Optional[Histogram] = None
+        for inst in self.instruments():
+            if isinstance(inst, Histogram) and inst.name == name:
+                if merged is None:
+                    merged = Histogram(name, ())
+                inst.merge_counts_into(merged.counts)
+                merged.count += inst.count
+                merged.sum += inst.sum
+                merged.max = max(merged.max, inst.max)
+        return merged
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-native nested view: name -> {type, series: [...]}, with
+        a cross-series ``merged`` block for histograms."""
+        out: Dict[str, Any] = {}
+        for inst in self.instruments():
+            entry = out.setdefault(inst.name, {
+                "type": type(inst).__name__.lower(), "series": [],
+            })
+            entry["series"].append({
+                "labels": {k: v for k, v in inst.labels},
+                **inst.snapshot(),
+            })
+        for name, entry in out.items():
+            if entry["type"] == "histogram":
+                merged = self.merged_histogram(name)
+                if merged is not None:
+                    entry["merged"] = merged.snapshot()
+        return out
+
+
+_REGISTRY = Registry()
+
+
+def registry() -> Registry:
+    return _REGISTRY
+
+
+def reset_registry() -> Registry:
+    """Swap in a fresh registry (tests, golden exports); returns it."""
+    global _REGISTRY
+    _REGISTRY = Registry()
+    return _REGISTRY
+
+
+def counter(name: str, **labels: Any) -> Counter:
+    return _REGISTRY.counter(name, **labels)
+
+
+def gauge(name: str, **labels: Any) -> Gauge:
+    return _REGISTRY.gauge(name, **labels)
+
+
+def histogram(name: str, **labels: Any) -> Histogram:
+    return _REGISTRY.histogram(name, **labels)
+
+
+def bucket_ratio() -> float:
+    """Adjacent-bound ratio — the histogram's worst-case relative error
+    (documented for tests comparing percentiles vs numpy)."""
+    return 10.0 ** (1.0 / _PER_DECADE)
+
+
+def geometric_midpoint(lo: float, hi: float) -> float:
+    return math.sqrt(max(lo, 1e-30) * max(hi, 1e-30))

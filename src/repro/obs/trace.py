@@ -1,0 +1,359 @@
+"""Request-scoped tracing: contextvar spans over a lock-free ring.
+
+The span plane (DESIGN.md §15) turns the repo's ad-hoc ``perf_counter``
+sprinkles into one coherent timing stream. A ``span("engine.execute",
+backend=...)`` context manager records a ``SpanRecord`` — monotonic
+start/duration (``time.perf_counter_ns``), the active ``trace_id``, its
+parent span — into a fixed-size ring buffer. The current ``(trace_id,
+span_id)`` pair lives in a ``contextvars.ContextVar``, so nesting and
+async/thread hand-off follow Python's context rules: a root span mints a
+fresh trace id (the serve boundary — ``Scheduler.fit``/``predict`` and
+``ModelServer.handle`` — is where that happens in practice), child spans
+inherit it, and ``current_context()``/``use_context(ctx)`` carry it
+across an explicit thread hop (the scheduler waiter → group-commit
+leader hand-off).
+
+Concurrency contract
+--------------------
+No locks anywhere on the span path — instrumentation must be safe under
+the lock-free snapshot-predict path. The ring claims slots from an
+``itertools.count`` (``next()`` is atomic under the GIL) and a slot
+write is a single list-item assignment (also atomic), so concurrent
+writers never block and never tear a record; a full ring overwrites the
+oldest entries. Readers (``spans()``, exporters, ``acdc_top``) get a
+best-effort consistent view — good enough for observability, by design.
+
+Overhead contract
+-----------------
+``span()`` with tracing disabled returns a shared no-op singleton: one
+global read, zero allocation. ``timer()`` ALWAYS measures (its
+``.seconds`` feeds existing stats accounting) and only emits a span when
+tracing is enabled — this is what ACDC006 conversions use so stats keep
+working with tracing off. The enabled-path budget is ≤5% on a warm fit
+(``bench_acdc.bench_obs_overhead`` enforces it).
+"""
+
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+import itertools
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = [
+    "SpanRecord", "span", "timer", "event", "use_context",
+    "current_context", "current_trace_id", "enable", "disable", "enabled",
+    "spans", "clear", "ring_stats", "hottest", "xla_annotation",
+]
+
+_ENABLED = False
+_XLA_ANNOTATIONS = False
+
+# Span/trace id mints: plain counters, atomic under the GIL. Trace ids
+# carry the pid so traces merged across processes stay distinct.
+_SPAN_IDS = itertools.count(1)
+_TRACE_IDS = itertools.count(1)
+_PID_PREFIX = f"{os.getpid():x}"
+
+# The active (trace_id, parent_span_id) pair. ``None`` = no active trace:
+# the next span becomes a root and mints a fresh trace id.
+_CTX: "contextvars.ContextVar[Optional[Tuple[str, Optional[int]]]]" = (
+    contextvars.ContextVar("acdc_obs_ctx", default=None)
+)
+
+_DEFAULT_RING = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanRecord:
+    """One completed span. ``start_ns``/``duration_ns`` are on the
+    ``perf_counter_ns`` timeline (monotonic, process-local) — exporters
+    convert to µs; nothing here is wall-clock."""
+
+    name: str
+    trace_id: str
+    span_id: int
+    parent_id: Optional[int]
+    start_ns: int
+    duration_ns: int
+    thread: str
+    attrs: Tuple[Tuple[str, Any], ...] = ()
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "trace_id": self.trace_id,
+            "span_id": self.span_id,
+            "parent_id": self.parent_id,
+            "start_ns": self.start_ns,
+            "duration_ns": self.duration_ns,
+            "thread": self.thread,
+            "attrs": {k: v for k, v in self.attrs},
+        }
+
+
+class _Ring:
+    """Fixed-size lock-free span sink. Writers claim a monotonically
+    increasing index from ``itertools.count`` and store into
+    ``slots[i % size]`` — both steps atomic under the GIL, so the ring
+    is multi-writer safe without a lock; overwrite is the overflow
+    policy. ``last`` tracks the highest claimed index (benign race:
+    a plain store, at worst momentarily stale for readers)."""
+
+    __slots__ = ("size", "slots", "_claim", "last")
+
+    def __init__(self, size: int) -> None:
+        self.size = int(size)
+        self.slots: List[Optional[SpanRecord]] = [None] * self.size
+        self._claim = itertools.count()
+        self.last = -1
+
+    def push(self, rec: SpanRecord) -> None:
+        i = next(self._claim)
+        self.slots[i % self.size] = rec
+        self.last = i
+
+    def recorded(self) -> int:
+        return self.last + 1
+
+    def dropped(self) -> int:
+        return max(0, self.recorded() - self.size)
+
+    def spans(self) -> List[SpanRecord]:
+        """Oldest→newest snapshot of resident records."""
+        n = self.recorded()
+        if n <= self.size:
+            out = self.slots[:n]
+        else:
+            cut = n % self.size
+            out = self.slots[cut:] + self.slots[:cut]
+        return [r for r in out if r is not None]
+
+
+_RING = _Ring(_DEFAULT_RING)
+
+
+class _NoopSpan:
+    """Shared disabled-path singleton: zero allocation per span()."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NoopSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+_NOOP = _NoopSpan()
+
+
+class _Span:
+    __slots__ = (
+        "name", "attrs", "trace_id", "span_id", "parent_id",
+        "_token", "_start_ns",
+    )
+
+    def __init__(self, name: str, attrs: Tuple[Tuple[str, Any], ...]):
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self) -> "_Span":
+        ctx = _CTX.get()
+        if ctx is None:
+            self.trace_id = f"{_PID_PREFIX}-{next(_TRACE_IDS):06x}"
+            self.parent_id = None
+        else:
+            self.trace_id, self.parent_id = ctx
+        self.span_id = next(_SPAN_IDS)
+        self._token = _CTX.set((self.trace_id, self.span_id))
+        self._start_ns = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        end_ns = time.perf_counter_ns()
+        _CTX.reset(self._token)
+        _RING.push(SpanRecord(
+            name=self.name,
+            trace_id=self.trace_id,
+            span_id=self.span_id,
+            parent_id=self.parent_id,
+            start_ns=self._start_ns,
+            duration_ns=end_ns - self._start_ns,
+            thread=threading.current_thread().name,
+            attrs=self.attrs,
+        ))
+        return False
+
+
+def span(name: str, **attrs: Any):
+    """Context manager recording one span when tracing is enabled;
+    a shared no-op otherwise. Attrs must be small JSON-native values
+    (the ring holds them verbatim)."""
+    if not _ENABLED:
+        return _NOOP
+    return _Span(name, tuple(attrs.items()))
+
+
+def event(name: str, **attrs: Any) -> None:
+    """Zero-duration marker parented to the current span — used for
+    host-side kernel-dispatch markers (``kernel.seg_outer`` etc.) where
+    the device work itself runs inside jitted code and cannot open a
+    Python span at runtime."""
+    if not _ENABLED:
+        return
+    ctx = _CTX.get()
+    if ctx is None:
+        trace_id: str = f"{_PID_PREFIX}-{next(_TRACE_IDS):06x}"
+        parent: Optional[int] = None
+    else:
+        trace_id, parent = ctx
+    _RING.push(SpanRecord(
+        name=name,
+        trace_id=trace_id,
+        span_id=next(_SPAN_IDS),
+        parent_id=parent,
+        start_ns=time.perf_counter_ns(),
+        duration_ns=0,
+        thread=threading.current_thread().name,
+        attrs=tuple(attrs.items()),
+    ))
+
+
+class _Timer:
+    """Always-on stopwatch, span only when tracing is enabled. The
+    ``.seconds`` attribute is valid after ``__exit__`` and feeds the
+    existing stats accounting (executor/solver/session) so those keep
+    working with tracing off."""
+
+    __slots__ = ("name", "attrs", "seconds", "_span", "_t0")
+
+    def __init__(self, name: str, attrs: Tuple[Tuple[str, Any], ...]):
+        self.name = name
+        self.attrs = attrs
+        self.seconds = 0.0
+
+    def __enter__(self) -> "_Timer":
+        self._span = _Span(self.name, self.attrs).__enter__() if _ENABLED \
+            else _NOOP
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        self._span.__exit__(*exc)
+        return False
+
+
+def timer(name: str, **attrs: Any) -> _Timer:
+    return _Timer(name, tuple(attrs.items()))
+
+
+class _UseContext:
+    """Activate a captured ``(trace_id, span_id)`` context in the
+    current thread — the cross-thread hop (scheduler waiter captures,
+    group-commit leader activates). ``None`` is a no-op so callers never
+    branch."""
+
+    __slots__ = ("ctx", "_token")
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self._token = None
+
+    def __enter__(self) -> "_UseContext":
+        if self.ctx is not None:
+            self._token = _CTX.set(self.ctx)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        if self._token is not None:
+            _CTX.reset(self._token)
+        return False
+
+
+def use_context(ctx) -> _UseContext:
+    return _UseContext(ctx)
+
+
+def current_context() -> Optional[Tuple[str, Optional[int]]]:
+    """The active (trace_id, span_id) pair, or None outside any span."""
+    return _CTX.get()
+
+
+def current_trace_id() -> Optional[str]:
+    ctx = _CTX.get()
+    return ctx[0] if ctx is not None else None
+
+
+def enable(on: bool = True, ring_size: Optional[int] = None,
+           xla_annotations: Optional[bool] = None) -> None:
+    """Turn the span plane on/off. ``ring_size`` replaces the ring
+    (dropping resident spans); ``xla_annotations`` additionally bridges
+    executor dispatch into XLA profiles via
+    ``jax.profiler.TraceAnnotation`` (off by default: it is not free)."""
+    global _ENABLED, _RING, _XLA_ANNOTATIONS
+    if ring_size is not None:
+        _RING = _Ring(ring_size)
+    if xla_annotations is not None:
+        _XLA_ANNOTATIONS = bool(xla_annotations)
+    _ENABLED = bool(on)
+
+
+def disable() -> None:
+    enable(False)
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def spans() -> List[SpanRecord]:
+    """Oldest→newest snapshot of the ring's resident spans."""
+    return _RING.spans()
+
+
+def clear() -> None:
+    """Drop all resident spans (ring size preserved)."""
+    global _RING
+    _RING = _Ring(_RING.size)
+
+
+def ring_stats() -> Dict[str, Any]:
+    return {
+        "enabled": _ENABLED,
+        "size": _RING.size,
+        "recorded": _RING.recorded(),
+        "dropped": _RING.dropped(),
+    }
+
+
+def hottest(n: int = 10) -> List[Dict[str, Any]]:
+    """Resident spans aggregated by name, ranked by total self time —
+    the ``acdc_top`` "hottest spans" table and the ``--trace`` exit
+    report."""
+    agg: Dict[str, List[float]] = {}
+    for rec in _RING.spans():
+        slot = agg.setdefault(rec.name, [0, 0.0, 0.0])
+        slot[0] += 1
+        slot[1] += rec.duration_ns / 1e9
+        slot[2] = max(slot[2], rec.duration_ns / 1e9)
+    rows = [
+        {"name": name, "count": c, "total_seconds": tot, "max_seconds": mx}
+        for name, (c, tot, mx) in agg.items()
+    ]
+    rows.sort(key=lambda r: r["total_seconds"], reverse=True)
+    return rows[:n]
+
+
+def xla_annotation(name: str):
+    """Host-side ``jax.profiler.TraceAnnotation`` around a dispatch when
+    XLA bridging is enabled; no-op (and jax-import-free) otherwise."""
+    if not (_ENABLED and _XLA_ANNOTATIONS):
+        return _NOOP
+    import jax.profiler
+
+    return jax.profiler.TraceAnnotation(name)

@@ -1,19 +1,24 @@
 """One plain-dict snapshot of everything the server knows about itself.
 
-``snapshot(server)`` flattens the six counter planes — server (request
-mix, reuse), session (passes/hits/evictions), bundle cache (per-bundle
+``snapshot(server)`` flattens the counter planes — server (request mix,
+reuse), session (passes/hits/evictions), bundle cache (per-bundle
 bytes/utility/pin), staleness (queue depth, data age, refresh latency),
 the process-wide compiled-executor plane and the solver compile cache
-(hit/miss/trace-seconds, DESIGN.md §11) — into JSON-serializable
-builtins, so an operator can ship it to any metrics sink without
-importing repro types.
+(hit/miss/trace-seconds, DESIGN.md §11), plus the obs planes
+(DESIGN.md §15): ``histograms`` — the typed registry's log-bucketed
+latency series, where the server-side p50/p99 live — and ``trace`` —
+ring-buffer occupancy and the hottest spans. All JSON-serializable
+builtins (the shape is gated by a ``json.dumps`` round-trip test), so
+an operator can ship it to any metrics sink without importing repro
+types. Pre-obs keys keep their exact shape for older consumers; the new
+planes are additive.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import TYPE_CHECKING
 
+from repro import obs
 from repro.core.executor import executor_stats
 from repro.core.solver import solver_cache_stats
 
@@ -23,12 +28,20 @@ if TYPE_CHECKING:  # pragma: no cover
     from .server import ModelServer
 
 
+def _percentiles(name: str) -> dict:
+    """Cross-tenant p50/p99 for one histogram name (0s when empty)."""
+    merged = obs.registry().merged_histogram(name)
+    if merged is None:
+        return {"p50": 0.0, "p99": 0.0}
+    return {"p50": merged.percentile(50), "p99": merged.percentile(99)}
+
+
 def snapshot(server: "ModelServer") -> dict:
     sess = server.session
     st = server.stats
     fits_total = st.fits + st.implicit_fits + st.refresh_refits
     return {
-        "server": dataclasses.asdict(server.stats),
+        "server": server.stats.snapshot(),
         # anonymized schema identity of the session behind this server
         # (DESIGN.md §14); None when built from a hand-wired order
         "schema_fingerprint": server.fingerprint,
@@ -47,6 +60,12 @@ def snapshot(server: "ModelServer") -> dict:
             "predict_seconds": st.predict_seconds,
             "predict_seconds_mean": (
                 st.predict_seconds / st.predicts if st.predicts else 0.0
+            ),
+            # server-side percentiles off the obs histograms (0s until
+            # the corresponding path has observations)
+            "fit_seconds_percentiles": _percentiles("acdc_fit_seconds"),
+            "predict_seconds_percentiles": _percentiles(
+                "acdc_predict_seconds"
             ),
         },
         "tenants": {
@@ -71,7 +90,7 @@ def snapshot(server: "ModelServer") -> dict:
             for t in server.tenants.values()
         },
         "session": {
-            **dataclasses.asdict(sess.stats),
+            **sess.stats.snapshot(),
             "bundles": len(sess.bundles),
             "bundle_bytes": sess.bundle_bytes(),
             "byte_budget": sess.byte_budget,
@@ -81,4 +100,10 @@ def snapshot(server: "ModelServer") -> dict:
         # process-wide planes (shared across every session in the process)
         "executor": executor_stats(),
         "solver_cache": solver_cache_stats().snapshot(),
+        # obs planes (DESIGN.md §15): typed metric series + span ring
+        "histograms": obs.registry().snapshot(),
+        "trace": {
+            **obs.ring_stats(),
+            "hottest": obs.hottest(10),
+        },
     }

@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.delta import Delta, DeltaReport
 from repro.delta.delta import _rows_view
 from repro.session import Session
@@ -119,7 +120,7 @@ def coalesce(deltas: Sequence[Delta], db=None) -> Optional[Delta]:
 
 
 @dataclasses.dataclass
-class RefreshStats:
+class RefreshStats(obs.StatsBase):
     batches_enqueued: int = 0
     rows_enqueued: int = 0          # inserts + deletes across raw batches
     drains: int = 0                 # drain() calls (incl. empty ones)
@@ -131,6 +132,11 @@ class RefreshStats:
     refresh_seconds_max: float = 0.0
     failed_drains: int = 0          # drains aborted by a poisoned run
     discarded_batches: int = 0      # batches dropped via discard()
+    # the ONE wall-clock field in the staleness plane, a human-readable
+    # "last applied at" unix timestamp only — every age/latency
+    # COMPUTATION uses the daemon's injected monotonic clock, so the
+    # math is immune to wall-clock steps (NTP slew, suspend/resume)
+    last_apply_unix: float = 0.0
 
 
 class RefreshDaemon:
@@ -212,7 +218,7 @@ class RefreshDaemon:
                 for d, _ in q
             )
             oldest = [t for q in self._queues.values() for _, t in q]
-            stats = dataclasses.asdict(self.stats)
+            stats = self.stats.snapshot()
         return {
             "pending_batches": pending_batches,
             "pending_rows": pending_rows,
@@ -243,53 +249,64 @@ class RefreshDaemon:
             self.stats.drains += 1
             relations = list(self._queues)
         reports: List[DeltaReport] = []
-        try:
-            for relation in relations:
-                with self._mu:
-                    entries = list(self._queues.get(relation, ()))
-                    if not entries:
-                        self._queues.pop(relation, None)
-                        continue
-                raw = [d for d, _ in entries]
-                try:
-                    folded = coalesce(raw, db=self.session.db)
-                    applied = None
-                    if folded.n_inserts or folded.n_deletes:
-                        t0 = self.clock()
-                        applied = self.session.apply_delta(folded)
-                        dt = self.clock() - t0
-                except Exception:
+        if not relations:
+            return reports          # the common serve-path case: no span
+        with obs.span("refresh.drain", relations=len(relations)):
+            try:
+                for relation in relations:
                     with self._mu:
-                        self.stats.failed_drains += 1
-                    raise               # queue intact — retry or discard
-                with self._mu:
-                    q = self._queues.get(relation)
-                    if q is not None:
-                        del q[: len(entries)]
-                        if not q:
-                            del self._queues[relation]
-                    self.stats.batches_coalesced += len(raw) - 1
-                    raw_rows = sum(d.n_inserts + d.n_deletes for d in raw)
-                    self.stats.rows_cancelled += raw_rows - (
-                        folded.n_inserts + folded.n_deletes
-                    )
-                if applied is None:
-                    continue            # the run cancelled itself entirely
-                reports.append(applied)
-                with self._mu:
-                    self.stats.applies += 1
-                    self.stats.refresh_seconds_total += dt
-                    self.stats.refresh_seconds_last = dt
-                    self.stats.refresh_seconds_max = max(
-                        self.stats.refresh_seconds_max, dt
-                    )
-        finally:
-            # the finale runs even when a later relation's fold raised:
-            # whatever DID apply must still enforce the byte budget
-            # (patched tables can grow; mid-fit bundles are pinned, so
-            # enforcement is safe) and trigger subscribed refits
-            if reports:
-                self.session.enforce_budget()
-                if self.on_applied is not None:
-                    self.on_applied(reports)
+                        entries = list(self._queues.get(relation, ()))
+                        if not entries:
+                            self._queues.pop(relation, None)
+                            continue
+                    raw = [d for d, _ in entries]
+                    try:
+                        folded = coalesce(raw, db=self.session.db)
+                        applied = None
+                        if folded.n_inserts or folded.n_deletes:
+                            t0 = self.clock()
+                            with obs.span("refresh.apply",
+                                          relation=relation):
+                                applied = self.session.apply_delta(folded)
+                            dt = self.clock() - t0
+                    except Exception:
+                        with self._mu:
+                            self.stats.failed_drains += 1
+                        raise           # queue intact — retry or discard
+                    with self._mu:
+                        q = self._queues.get(relation)
+                        if q is not None:
+                            del q[: len(entries)]
+                            if not q:
+                                del self._queues[relation]
+                        self.stats.batches_coalesced += len(raw) - 1
+                        raw_rows = sum(
+                            d.n_inserts + d.n_deletes for d in raw
+                        )
+                        self.stats.rows_cancelled += raw_rows - (
+                            folded.n_inserts + folded.n_deletes
+                        )
+                    if applied is None:
+                        continue        # the run cancelled itself entirely
+                    reports.append(applied)
+                    obs.histogram(
+                        "acdc_refresh_apply_seconds"
+                    ).observe(dt)
+                    with self._mu:
+                        self.stats.applies += 1
+                        self.stats.refresh_seconds_total += dt
+                        self.stats.refresh_seconds_last = dt
+                        self.stats.refresh_seconds_max = max(
+                            self.stats.refresh_seconds_max, dt
+                        )
+                        self.stats.last_apply_unix = time.time()
+            finally:
+                # the finale runs even when a later relation's fold
+                # raised: whatever DID apply must still enforce the byte
+                # budget (patched tables can grow; mid-fit bundles are
+                # pinned, so enforcement is safe) and trigger refits
+                if reports:
+                    self.session.enforce_budget()
+                    if self.on_applied is not None:
+                        self.on_applied(reports)
         return reports

@@ -35,6 +35,7 @@ import dataclasses
 import threading
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro import obs
 from repro.session.bundle import fd_key
 
 from .server import (
@@ -75,7 +76,7 @@ class BundleSnapshot:
 
 
 @dataclasses.dataclass
-class SchedulerStats:
+class SchedulerStats(obs.StatsBase):
     fits: int = 0                  # fit requests through the write plane
     predicts: int = 0
     deltas: int = 0
@@ -93,15 +94,18 @@ class SchedulerStats:
 
 class _PendingFit:
     """A queued fit: the waiter blocks on ``done``; the committing leader
-    fills ``reply`` or ``error`` BEFORE setting it."""
+    fills ``reply`` or ``error`` BEFORE setting it. ``ctx`` carries the
+    waiter's trace context (captured at admission) so the leader's spans
+    for this request land in the waiter's trace."""
 
-    __slots__ = ("request", "done", "reply", "error")
+    __slots__ = ("request", "done", "reply", "error", "ctx")
 
-    def __init__(self, request: FitRequest):
+    def __init__(self, request: FitRequest, ctx=None):
         self.request = request
         self.done = threading.Event()
         self.reply: Optional[FitReply] = None
         self.error: Optional[BaseException] = None
+        self.ctx = ctx
 
 
 class Scheduler:
@@ -160,18 +164,22 @@ class Scheduler:
         once, batch compatible solves, publish once — then wakes the
         group. A waiter that finds its request already serviced (a
         leader beat it to the lock) returns without ever holding it."""
-        with self._stats_mu:
-            self.stats.fits += 1
-        pending = _PendingFit(request)
-        with self._pending_mu:
-            self._pending.append(pending)
-        with self._write:
-            if not pending.done.is_set():
-                self._commit()
-        pending.done.wait()
-        if pending.error is not None:
-            raise pending.error
-        return pending.reply
+        # the serve-boundary span: mints this request's trace id (when no
+        # trace is active) before admission, so every downstream span —
+        # leader-side included, via the captured ctx — shares it
+        with obs.span("scheduler.fit"):
+            with self._stats_mu:
+                self.stats.fits += 1
+            pending = _PendingFit(request, ctx=obs.current_context())
+            with self._pending_mu:
+                self._pending.append(pending)
+            with self._write:
+                if not pending.done.is_set():
+                    self._commit()
+            pending.done.wait()
+            if pending.error is not None:
+                raise pending.error
+            return pending.reply
 
     def flush(self) -> BundleSnapshot:
         """Drain pending deltas/fits and publish, returning the new
@@ -192,17 +200,21 @@ class Scheduler:
                 self.stats.group_commits += 1
             self.stats.max_batch = max(self.stats.max_batch, len(batch))
         try:
-            self._refreshing = True
-            try:
-                self.server.refresh.drain()
-            finally:
-                self._refreshing = False
-            replies = (
-                self.server.fit_batch([p.request for p in batch])
-                if batch
-                else []
-            )
-            self._publish()
+            with obs.span("scheduler.commit", batch=len(batch)):
+                self._refreshing = True
+                try:
+                    self.server.refresh.drain()
+                finally:
+                    self._refreshing = False
+                replies = (
+                    self.server.fit_batch(
+                        [p.request for p in batch],
+                        ctxs=[p.ctx for p in batch],
+                    )
+                    if batch
+                    else []
+                )
+                self._publish()
             for p, r in zip(batch, replies):
                 if isinstance(r, BaseException):
                     p.error = r
@@ -260,53 +272,63 @@ class Scheduler:
             raise ValueError(
                 f"predict rows missing feature columns {missing}"
             )
-        key: TenantKey = (
-            self.server.fingerprint,
-            tuple(request.features),
-            request.response,
-            fd_key(request.fds),
-            request.spec,
-        )
-        snap = self._snapshot          # the one read that matters
-        pm = snap.published.get(key)
-        implicit = pm is None
-        if implicit:
-            self.fit(
-                FitRequest(
-                    spec=request.spec,
-                    features=tuple(request.features),
-                    response=request.response,
-                    fds=tuple(request.fds),
-                    subscribe=request.subscribe,
-                )
+        # the serve-boundary span for the read plane — the span itself is
+        # lock-free (contextvar set + ring push), preserving the
+        # no-locks-on-predict contract; an implicit fit joins this trace
+        with obs.span("scheduler.predict"):
+            key: TenantKey = (
+                self.server.fingerprint,
+                tuple(request.features),
+                request.response,
+                fd_key(request.fds),
+                request.spec,
             )
-            snap = self._snapshot      # the commit published our tenant
-            pm = snap.published[key]
+            snap = self._snapshot          # the one read that matters
+            pm = snap.published.get(key)
+            implicit = pm is None
+            if implicit:
+                self.fit(
+                    FitRequest(
+                        spec=request.spec,
+                        features=tuple(request.features),
+                        response=request.response,
+                        fds=tuple(request.fds),
+                        subscribe=request.subscribe,
+                    )
+                )
+                snap = self._snapshot      # the commit published our tenant
+                pm = snap.published[key]
+                with self._stats_mu:
+                    self.stats.implicit_fits += 1
+            clock = self.server.clock
+            t0 = clock()
+            with obs.span("scheduler.score", tenant=pm.tenant,
+                          version=snap.version):
+                preds = predict_join(
+                    pm.model, pm.params, self.server.session.db,
+                    join=request.rows,
+                )
+            dt = clock() - t0
+            obs.histogram(
+                "acdc_predict_seconds", tenant=pm.tenant
+            ).observe(dt)
+            stale = pm.fitted_at_delta < snap.deltas_applied
             with self._stats_mu:
-                self.stats.implicit_fits += 1
-        clock = self.server.clock
-        t0 = clock()
-        preds = predict_join(
-            pm.model, pm.params, self.server.session.db, join=request.rows
-        )
-        dt = clock() - t0
-        stale = pm.fitted_at_delta < snap.deltas_applied
-        with self._stats_mu:
-            self.stats.predicts += 1
-            if not implicit:
-                self.stats.lockfree_predicts += 1
-            if self._refreshing:
-                self.stats.predicts_during_refresh += 1
-            if stale:
-                self.stats.stale_predicts += 1
-        return PredictReply(
-            tenant=pm.tenant,
-            predictions=preds,
-            implicit_fit=implicit,
-            stale=stale,
-            seconds=dt,
-            snapshot_version=snap.version,
-        )
+                self.stats.predicts += 1
+                if not implicit:
+                    self.stats.lockfree_predicts += 1
+                if self._refreshing:
+                    self.stats.predicts_during_refresh += 1
+                if stale:
+                    self.stats.stale_predicts += 1
+            return PredictReply(
+                tenant=pm.tenant,
+                predictions=preds,
+                implicit_fit=implicit,
+                stale=stale,
+                seconds=dt,
+                snapshot_version=snap.version,
+            )
 
     # ------------------------------------------------------------------
     # delta plane
@@ -341,7 +363,7 @@ class Scheduler:
     def metrics(self) -> dict:
         """Scheduler counters + snapshot version, plain builtins."""
         with self._stats_mu:
-            stats = dataclasses.asdict(self.stats)
+            stats = self.stats.snapshot()
         snap = self._snapshot
         return {
             **stats,

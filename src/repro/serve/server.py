@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.predict import predict_join
 from repro.delta import Delta, DeltaReport
 from repro.session import (
@@ -160,7 +161,7 @@ class Tenant:
 
 
 @dataclasses.dataclass
-class ServerStats:
+class ServerStats(obs.StatsBase):
     requests: int = 0
     fits: int = 0
     predicts: int = 0
@@ -217,16 +218,20 @@ class ModelServer:
 
     # ------------------------------------------------------------------
     def handle(self, request):
-        """Dispatch one typed request; the single serving entry point."""
-        self.stats.requests += 1
-        if isinstance(request, DeltaEvent):
-            return self._enqueue(request)
-        # freshness guard: nothing is served over a pending queue
-        self.refresh.drain()
-        if isinstance(request, FitRequest):
-            return self._fit(request)
-        if isinstance(request, PredictRequest):
-            return self._predict(request)
+        """Dispatch one typed request; the single serving entry point.
+        A root span here mints the request's trace id when the server is
+        driven directly (the scheduler path mints at admission instead
+        and this span joins that trace)."""
+        with obs.span("server.handle", kind=type(request).__name__):
+            self.stats.requests += 1
+            if isinstance(request, DeltaEvent):
+                return self._enqueue(request)
+            # freshness guard: nothing is served over a pending queue
+            self.refresh.drain()
+            if isinstance(request, FitRequest):
+                return self._fit(request)
+            if isinstance(request, PredictRequest):
+                return self._predict(request)
         raise TypeError(f"unknown request type {type(request).__name__}")
 
     def serve(self, requests: Sequence) -> List:
@@ -337,6 +342,8 @@ class ModelServer:
         tenant.fitted_at_delta = self.session.stats.deltas_applied
         tenant.fit_seconds += dt
         self.stats.fit_seconds += dt
+        # server-side latency percentiles (p50/p99 in metrics.snapshot)
+        obs.histogram("acdc_fit_seconds", tenant=tenant.name).observe(dt)
         if tenant.pinned_bundle is not None:
             self._pin_tenant_bundle(tenant, result.bundle)
 
@@ -348,15 +355,16 @@ class ModelServer:
         passes_before = sess.stats.aggregate_passes
         solver_hits_before = sess.stats.solver_hits
         t0 = self.clock()
-        result = sess.fit(
-            tenant.spec,
-            tenant.features,
-            tenant.response,
-            fds=tenant.fds,
-            solver=tenant.solver or self.default_solver,
-            warm_from=warm_from,
-            admit=admit,
-        )
+        with obs.span("server.fit", tenant=tenant.name):
+            result = sess.fit(
+                tenant.spec,
+                tenant.features,
+                tenant.response,
+                fds=tenant.fds,
+                solver=tenant.solver or self.default_solver,
+                warm_from=warm_from,
+                admit=admit,
+            )
         dt = self.clock() - t0
         compiled = sess.stats.aggregate_passes > passes_before
         solver_hit = sess.stats.solver_hits > solver_hits_before
@@ -384,14 +392,25 @@ class ModelServer:
         tenant.pinned_bundle = bundle
 
     # ------------------------------------------------------------------
-    def fit_batch(self, requests: Sequence[FitRequest]) -> List:
+    def fit_batch(
+        self, requests: Sequence[FitRequest], ctxs: Optional[Sequence] = None
+    ) -> List:
         """Service N fit requests, collapsing compatible ones — same
         (features, response, fds, spec shape, solver), different ``lam``
         and warm starts — into ONE vmapped BGD solve
         (``Session.fit_batched``, DESIGN.md §12). Returns one entry per
         request IN ORDER: a ``FitReply``, or the exception that request
         raised — so a group-committing caller (the scheduler) can
-        re-raise to the right waiter without poisoning the batch."""
+        re-raise to the right waiter without poisoning the batch.
+
+        ``ctxs`` (optional, parallel to ``requests``) carries each
+        request's captured trace context (``obs.current_context()`` at
+        admission) across the waiter→leader thread hop: the leader
+        services request *i* under ctx *i*, so its spans land in the
+        originating request's trace. A grouped solve runs under the
+        first member's context."""
+        if ctxs is None:
+            ctxs = [None] * len(requests)
         out: List = [None] * len(requests)
         groups: Dict[tuple, List[int]] = {}
         for i, req in enumerate(requests):
@@ -416,12 +435,14 @@ class ModelServer:
             if len(idxs) == 1:
                 i = idxs[0]
                 try:
-                    out[i] = self._fit(requests[i])
+                    with obs.use_context(ctxs[i]):
+                        out[i] = self._fit(requests[i])
                 except Exception as e:
                     out[i] = e
                 continue
             try:
-                self._fit_group([requests[i] for i in idxs], idxs, out)
+                with obs.use_context(ctxs[idxs[0]]):
+                    self._fit_group([requests[i] for i in idxs], idxs, out)
             except Exception as e:
                 for i in idxs:
                     if out[i] is None:
@@ -439,18 +460,19 @@ class ModelServer:
         passes_before = sess.stats.aggregate_passes
         hits_before = sess.stats.solver_hits
         t0 = self.clock()
-        results = sess.fit_batched(
-            [r.spec for r in reqs],
-            tenants[0].features,
-            tenants[0].response,
-            fds=tenants[0].fds,
-            solver=tenants[0].solver or self.default_solver,
-            warm_from=[
-                t.last_fit if r.warm else None
-                for r, t in zip(reqs, tenants)
-            ],
-            admit=not probation,
-        )
+        with obs.span("server.fit_group", batch=len(reqs)):
+            results = sess.fit_batched(
+                [r.spec for r in reqs],
+                tenants[0].features,
+                tenants[0].response,
+                fds=tenants[0].fds,
+                solver=tenants[0].solver or self.default_solver,
+                warm_from=[
+                    t.last_fit if r.warm else None
+                    for r, t in zip(reqs, tenants)
+                ],
+                admit=not probation,
+            )
         if results is None:
             # ineligible batch (compressed gradients / sharded COO)
             for i, r in zip(idxs, reqs):
@@ -510,16 +532,18 @@ class ModelServer:
         if stale:
             self.stats.stale_predicts += 1
         t0 = self.clock()
-        preds = predict_join(
-            tenant.last_fit.model,
-            tenant.last_fit.params,
-            self.session.db,
-            join=req.rows,
-        )
+        with obs.span("server.predict", tenant=tenant.name):
+            preds = predict_join(
+                tenant.last_fit.model,
+                tenant.last_fit.params,
+                self.session.db,
+                join=req.rows,
+            )
         dt = self.clock() - t0
         tenant.predicts += 1
         self.stats.predicts += 1
         self.stats.predict_seconds += dt
+        obs.histogram("acdc_predict_seconds", tenant=tenant.name).observe(dt)
         return PredictReply(
             tenant=tenant.name,
             predictions=preds,

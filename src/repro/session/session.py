@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import executor
 from repro.core import fd as fdmod
 from repro.core import solver as solver_mod
@@ -60,7 +61,7 @@ from .specs import ExecutionPolicy, ModelSpec, SolverConfig
 
 
 @dataclasses.dataclass
-class SessionStats:
+class SessionStats(obs.StatsBase):
     aggregate_passes: int = 0      # factorized passes actually executed
     bundle_hits: int = 0           # compile() requests served by subsumption
     bundle_misses: int = 0
@@ -260,19 +261,20 @@ class Session:
         # factorization is session-memoized, per-database work: keep it out
         # of the per-bundle timer so bundle timings are comparable
         fz = self._factorized()
-        t0 = time.perf_counter()
-        regs = build_registers(wl.aggregates, self.info, self.db)
-        plan = build_plan(fz, regs)
-        plane = executor.global_plane()
-        ex0 = plane.stats
-        before = (ex0.hits, ex0.misses, ex0.traces, ex0.trace_seconds)
-        res = execute(plan, kernels=self.kernel_policy)
-        self.stats.executor_hits += ex0.hits - before[0]
-        self.stats.executor_misses += ex0.misses - before[1]
-        self.stats.executor_traces += ex0.traces - before[2]
-        self.stats.executor_trace_seconds += ex0.trace_seconds - before[3]
-        fz.num_join_rows = int(res.count)
-        agg_s = time.perf_counter() - t0
+        with obs.timer("session.compile", response=response,
+                       degree=degree) as tm:
+            regs = build_registers(wl.aggregates, self.info, self.db)
+            plan = build_plan(fz, regs)
+            plane = executor.global_plane()
+            ex0 = plane.stats
+            before = (ex0.hits, ex0.misses, ex0.traces, ex0.trace_seconds)
+            res = execute(plan, kernels=self.kernel_policy)
+            self.stats.executor_hits += ex0.hits - before[0]
+            self.stats.executor_misses += ex0.misses - before[1]
+            self.stats.executor_traces += ex0.traces - before[2]
+            self.stats.executor_trace_seconds += ex0.trace_seconds - before[3]
+            fz.num_join_rows = int(res.count)
+        agg_s = tm.seconds
         self.stats.aggregate_passes += 1
 
         bundle = AggregateBundle(
@@ -410,37 +412,39 @@ class Session:
         ``compile`` sees the new data. ``fit``/``fit_many`` accept
         ``warm_from`` to restart BGD from the pre-delta optimum.
         """
-        t0 = time.perf_counter()
-        delta.validate(self.db)
-        # verifies inserts-are-new / deletes-exist BEFORE anything mutates
-        new_rel = apply_to_relation(self.db, delta)
+        with obs.timer("session.apply_delta",
+                       relation=delta.relation) as tm:
+            delta.validate(self.db)
+            # verifies inserts-are-new / deletes-exist BEFORE any mutation
+            new_rel = apply_to_relation(self.db, delta)
 
-        # one delta factorization per signed batch, shared by every bundle
-        # (only the per-bundle plan/execute depends on the registers)
-        fz_ins = delta_factorize(
-            self.db, self.info, delta.relation, delta.inserts
-        )
-        fz_del = delta_factorize(
-            self.db, self.info, delta.relation, delta.deletes
-        )
-        refreshed = 0
-        for b in self.bundles:
-            if refresh_bundle(b, fz_ins, fz_del):
-                refreshed += 1
-            else:
-                self.stats.delta_noops += 1
+            # one delta factorization per signed batch, shared by every
+            # bundle (only the per-bundle plan/execute depends on the
+            # registers)
+            fz_ins = delta_factorize(
+                self.db, self.info, delta.relation, delta.inserts
+            )
+            fz_del = delta_factorize(
+                self.db, self.info, delta.relation, delta.deletes
+            )
+            refreshed = 0
+            for b in self.bundles:
+                if refresh_bundle(b, fz_ins, fz_del):
+                    refreshed += 1
+                else:
+                    self.stats.delta_noops += 1
 
-        self.db.relations[delta.relation] = new_rel
-        self._fz = None
-        self.stats.deltas_applied += 1
-        self.stats.bundle_refreshes += refreshed
+            self.db.relations[delta.relation] = new_rel
+            self._fz = None
+            self.stats.deltas_applied += 1
+            self.stats.bundle_refreshes += refreshed
         return DeltaReport(
             relation=delta.relation,
             n_inserts=delta.n_inserts,
             n_deletes=delta.n_deletes,
             bundles_refreshed=refreshed,
             bundles_unchanged=len(self.bundles) - refreshed,
-            seconds=time.perf_counter() - t0,
+            seconds=tm.seconds,
         )
 
     # ------------------------------------------------------------------
@@ -496,18 +500,20 @@ class Session:
         admit: bool = True,
     ) -> FitResult:
         solver = solver or SolverConfig()
-        model, sig, wl, bundle = self.materialize(
-            spec, features, response, fds, bundle, admit=admit
-        )
-        # a mid-fit bundle must survive any budget enforcement triggered
-        # while the solver runs (e.g. a refresh drain growing the tables)
-        bundle.pin()
-        try:
-            return self._fit_pinned(
-                spec, model, sig, wl, bundle, solver, warm_from
+        with obs.span("session.fit", spec=spec.name):
+            model, sig, wl, bundle = self.materialize(
+                spec, features, response, fds, bundle, admit=admit
             )
-        finally:
-            bundle.unpin()
+            # a mid-fit bundle must survive any budget enforcement
+            # triggered while the solver runs (e.g. a refresh drain
+            # growing the tables)
+            bundle.pin()
+            try:
+                return self._fit_pinned(
+                    spec, model, sig, wl, bundle, solver, warm_from
+                )
+            finally:
+                bundle.unpin()
 
     def _fit_pinned(
         self, spec, model, sig, wl, bundle, solver, warm_from
@@ -594,20 +600,20 @@ class Session:
         before = (
             sstats.hits, sstats.misses, sstats.traces, sstats.trace_seconds,
         )
-        t0 = time.perf_counter()
-        sol = bgd(
-            loss_fn,
-            params0,
-            max_iters=solver.max_iters,
-            tol=solver.tol,
-            alpha0=solver.alpha0,
-            bb_step=solver.bb_step,
-            grad_fn=grad_fn,
-            carry0=carry0,
-            cache_key=cache_key,
-            loss_args=loss_args or (),
-        )
-        conv_s = time.perf_counter() - t0
+        with obs.timer("session.solve", spec=spec.name) as tm:
+            sol = bgd(
+                loss_fn,
+                params0,
+                max_iters=solver.max_iters,
+                tol=solver.tol,
+                alpha0=solver.alpha0,
+                bb_step=solver.bb_step,
+                grad_fn=grad_fn,
+                carry0=carry0,
+                cache_key=cache_key,
+                loss_args=loss_args or (),
+            )
+        conv_s = tm.seconds
         self.stats.solver_hits += sstats.hits - before[0]
         self.stats.solver_misses += sstats.misses - before[1]
         self.stats.solver_traces += sstats.traces - before[2]
@@ -729,19 +735,20 @@ class Session:
                 sstats.hits, sstats.misses, sstats.traces,
                 sstats.trace_seconds,
             )
-            t0 = time.perf_counter()
-            sols = solver_mod.bgd_batched(
-                loss_fn,
-                params0,
-                batched_args=(lams,),
-                loss_args=loss_args,
-                max_iters=solver.max_iters,
-                tol=solver.tol,
-                alpha0=solver.alpha0,
-                bb_step=solver.bb_step,
-                cache_key=cache_key,
-            )
-            conv_s = time.perf_counter() - t0
+            with obs.timer("session.solve_batched",
+                           batch=len(specs)) as tm:
+                sols = solver_mod.bgd_batched(
+                    loss_fn,
+                    params0,
+                    batched_args=(lams,),
+                    loss_args=loss_args,
+                    max_iters=solver.max_iters,
+                    tol=solver.tol,
+                    alpha0=solver.alpha0,
+                    bb_step=solver.bb_step,
+                    cache_key=cache_key,
+                )
+            conv_s = tm.seconds
             self.stats.solver_hits += sstats.hits - before[0]
             self.stats.solver_misses += sstats.misses - before[1]
             self.stats.solver_traces += sstats.traces - before[2]

@@ -1,0 +1,28 @@
+"""ACDC006 negative: the sanctioned timing idioms — ``obs.timer()`` for
+telemetry, an injected ``clock=`` seam for tested time-dependent logic,
+and a lone ``time.time()`` stamp with no subtraction pair."""
+
+import time
+
+from repro import obs
+
+
+def handle(request, work):
+    with obs.timer("server.handle") as t:
+        reply = work(request)
+    reply.seconds = t.seconds
+    return reply
+
+
+class Daemon:
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.last_apply_unix = 0.0
+
+    def apply(self, session, delta):
+        t0 = self.clock()
+        report = session.apply_delta(delta)
+        report.seconds = self.clock() - t0
+        # a single wall-clock STAMP (no pair) is fine: human-readable only
+        self.last_apply_unix = time.time()
+        return report

@@ -1,0 +1,11 @@
+"""ACDC006 positive: a raw wall-clock timing pair on what the rule's
+scope treats as a hot path — the interval never reaches the span ring."""
+
+import time
+
+
+def handle(request, work):
+    t0 = time.perf_counter()
+    reply = work(request)
+    reply.seconds = time.perf_counter() - t0
+    return reply

@@ -187,7 +187,9 @@ def test_mode_knob_roundtrip():
 # acdc-lint: every rule has a firing positive and a clean negative
 # ----------------------------------------------------------------------
 
-RULE_IDS = ["ACDC001", "ACDC002", "ACDC003", "ACDC004", "ACDC005"]
+RULE_IDS = [
+    "ACDC001", "ACDC002", "ACDC003", "ACDC004", "ACDC005", "ACDC006",
+]
 
 
 @pytest.mark.parametrize("rule", RULE_IDS)

@@ -1,0 +1,457 @@
+"""The obs plane (DESIGN.md §15): contextvar spans over the lock-free
+ring, the typed metrics registry, exporters (Perfetto/Prometheus golden
+files, HTTP), the serve-to-kernel trace-propagation acceptance, and the
+``json.dumps`` round-trip gate over the full metrics snapshot."""
+
+import json
+import threading
+import urllib.request
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import export
+from repro.obs.metrics import BUCKET_BOUNDS, Histogram, Registry
+from repro.obs.trace import SpanRecord
+
+HERE = Path(__file__).parent
+GOLDENS = HERE / "goldens"
+
+
+@pytest.fixture
+def tracing():
+    """Enabled tracing with a private ring + registry; restores the
+    disabled default afterwards so other tests see zero overhead."""
+    obs.enable(ring_size=256)
+    obs.clear()
+    obs.reset_registry()
+    yield
+    obs.disable()
+    obs.clear()
+    obs.reset_registry()
+
+
+def by_name(records, name):
+    return [r for r in records if r.name == name]
+
+
+# ----------------------------------------------------------------------
+# span nesting, ids, context propagation
+# ----------------------------------------------------------------------
+
+
+def test_span_nesting_and_trace_propagation(tracing):
+    with obs.span("root", kind="test"):
+        root_trace = obs.current_trace_id()
+        with obs.span("child"):
+            assert obs.current_trace_id() == root_trace
+            obs.event("marker", step=1)
+        with obs.span("sibling"):
+            pass
+    assert obs.current_trace_id() is None
+
+    recs = obs.spans()
+    (root,) = by_name(recs, "root")
+    (child,) = by_name(recs, "child")
+    (sibling,) = by_name(recs, "sibling")
+    (marker,) = by_name(recs, "marker")
+    assert root.trace_id == child.trace_id == marker.trace_id
+    assert root.parent_id is None
+    assert child.parent_id == root.span_id
+    assert sibling.parent_id == root.span_id
+    assert marker.parent_id == child.span_id
+    assert marker.duration_ns == 0       # events are instants
+    assert child.duration_ns >= 0
+    assert dict(root.attrs) == {"kind": "test"}
+
+
+def test_sequential_roots_get_distinct_trace_ids(tracing):
+    with obs.span("a"):
+        pass
+    with obs.span("b"):
+        pass
+    a, b = obs.spans()
+    assert a.trace_id != b.trace_id
+
+
+def test_disabled_span_is_shared_noop():
+    assert not obs.enabled()
+    assert obs.span("x") is obs.span("y")     # zero-allocation singleton
+    with obs.span("x"):
+        assert obs.current_trace_id() is None
+    assert obs.spans() == []
+
+
+def test_timer_measures_even_when_disabled():
+    assert not obs.enabled()
+    with obs.timer("work") as t:
+        sum(range(1000))
+    assert t.seconds > 0.0
+    assert obs.spans() == []                  # no span emitted while off
+
+
+def test_timer_emits_span_when_enabled(tracing):
+    with obs.timer("work", tag=1) as t:
+        pass
+    assert t.seconds >= 0.0
+    (rec,) = obs.spans()
+    assert rec.name == "work" and dict(rec.attrs) == {"tag": 1}
+
+
+def test_use_context_carries_trace_across_threads(tracing):
+    """The scheduler hand-off: waiter captures its context at admission,
+    the group-commit leader activates it on another thread."""
+    captured = {}
+
+    with obs.span("waiter.root"):
+        captured["ctx"] = obs.current_context()
+
+    def leader():
+        with obs.use_context(captured["ctx"]):
+            with obs.span("leader.work"):
+                pass
+        # None must be a no-op so callers never branch
+        with obs.use_context(None):
+            assert obs.current_trace_id() is None
+
+    t = threading.Thread(target=leader, daemon=True)
+    t.start()
+    t.join()
+
+    (root,) = by_name(obs.spans(), "waiter.root")
+    (work,) = by_name(obs.spans(), "leader.work")
+    assert work.trace_id == root.trace_id
+    assert work.parent_id == root.span_id
+    assert work.thread != root.thread
+
+
+# ----------------------------------------------------------------------
+# ring buffer
+# ----------------------------------------------------------------------
+
+
+def test_ring_wraparound_keeps_newest(tracing):
+    obs.enable(ring_size=8)
+    for i in range(20):
+        obs.event("e", i=i)
+    stats = obs.ring_stats()
+    assert stats["size"] == 8
+    assert stats["recorded"] == 20
+    assert stats["dropped"] == 12
+    got = [dict(r.attrs)["i"] for r in obs.spans()]
+    assert got == list(range(12, 20))         # oldest→newest, newest kept
+
+
+def test_ring_multithreaded_push_never_tears(tracing):
+    obs.enable(ring_size=64)
+
+    def worker(k):
+        for i in range(200):
+            obs.event("w", k=k, i=i)
+
+    threads = [
+        threading.Thread(target=worker, args=(k,), daemon=True)
+        for k in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    recs = obs.spans()
+    assert len(recs) == 64                    # full ring, every slot a record
+    assert all(isinstance(r, SpanRecord) for r in recs)
+    assert obs.ring_stats()["recorded"] == 800
+
+
+def test_hottest_aggregates_by_name(tracing):
+    for _ in range(3):
+        with obs.span("hot"):
+            pass
+    with obs.span("cold"):
+        pass
+    rows = obs.hottest(10)
+    assert [r["name"] for r in rows][0] in {"hot", "cold"}
+    hot = next(r for r in rows if r["name"] == "hot")
+    assert hot["count"] == 3
+    assert hot["max_seconds"] <= hot["total_seconds"]
+
+
+# ----------------------------------------------------------------------
+# metrics: histogram math vs numpy
+# ----------------------------------------------------------------------
+
+
+def test_histogram_percentiles_track_numpy():
+    h = Histogram("lat", ())
+    rng = np.random.default_rng(7)
+    xs = rng.lognormal(mean=-6.0, sigma=1.5, size=5000)
+    for x in xs:
+        h.observe(float(x))
+    # log-bucketed grid: 8 buckets/decade → worst-case relative error is
+    # one bucket ratio (≈1.33x); linear interpolation does much better
+    ratio = 1.34
+    for q in (50, 90, 99):
+        exact = float(np.percentile(xs, q))
+        est = h.percentile(q)
+        assert exact / ratio <= est <= exact * ratio, (q, exact, est)
+    assert h.count == len(xs)
+    assert h.sum == pytest.approx(float(xs.sum()))
+    assert h.percentile(100) <= h.max
+
+
+def test_histogram_bucket_grid():
+    assert len(BUCKET_BOUNDS) == 81
+    assert BUCKET_BOUNDS[0] == pytest.approx(1e-7)
+    assert BUCKET_BOUNDS[-1] == pytest.approx(1e3)
+    assert obs.bucket_ratio() == pytest.approx(10 ** 0.125)
+
+
+def test_registry_labels_and_merge():
+    reg = Registry()
+    reg.histogram("acdc_fit_seconds", tenant="t0").observe(0.01)
+    reg.histogram("acdc_fit_seconds", tenant="t1").observe(0.02)
+    reg.counter("requests").inc()
+    reg.counter("requests").inc(2)
+    assert reg.counter("requests").value == 3
+    # same (name, labels) → same instrument
+    assert reg.histogram("acdc_fit_seconds", tenant="t0") is reg.histogram(
+        "acdc_fit_seconds", tenant="t0"
+    )
+    merged = reg.merged_histogram("acdc_fit_seconds")
+    assert merged.count == 2
+    assert merged.sum == pytest.approx(0.03)
+    with pytest.raises(TypeError):
+        reg.gauge("requests")                 # name already a counter
+    snap = reg.snapshot()
+    assert snap == json.loads(json.dumps(snap))
+    assert {s["labels"]["tenant"]
+            for s in snap["acdc_fit_seconds"]["series"]} == {"t0", "t1"}
+
+
+# ----------------------------------------------------------------------
+# exporters: golden files + HTTP
+# ----------------------------------------------------------------------
+
+
+def golden_spans():
+    """A tiny deterministic trace: a root, a child with attrs, and a
+    zero-duration kernel-dispatch marker on another thread."""
+    return [
+        SpanRecord(name="scheduler.fit", trace_id="t-000001", span_id=1,
+                   parent_id=None, start_ns=1_000_000, duration_ns=5_000_000,
+                   thread="MainThread"),
+        SpanRecord(name="executor.execute", trace_id="t-000001", span_id=2,
+                   parent_id=1, start_ns=2_000_000, duration_ns=2_500_000,
+                   thread="MainThread", attrs=(("hit", False), ("steps", 3))),
+        SpanRecord(name="kernel.seg_outer", trace_id="t-000001", span_id=3,
+                   parent_id=2, start_ns=2_100_000, duration_ns=0,
+                   thread="acdc-worker-1", attrs=(("steps", 2),)),
+    ]
+
+
+def golden_registry():
+    reg = Registry()
+    reg.counter("acdc_requests_total", kind="fit").inc(4)
+    reg.gauge("acdc_pending_batches").set(2)
+    h = reg.histogram("acdc_fit_seconds", tenant="t0")
+    for x in (0.001, 0.02, 0.02, 5.0):
+        h.observe(x)
+    return reg
+
+
+def test_perfetto_golden():
+    got = export.perfetto_trace(golden_spans(), pid=1)
+    want = json.loads((GOLDENS / "perfetto_trace.json").read_text())
+    assert got == want
+
+
+def test_perfetto_shapes():
+    events = export.perfetto_events(golden_spans(), pid=1)
+    meta = [e for e in events if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in meta} == {
+        "MainThread", "acdc-worker-1"
+    }
+    complete = [e for e in events if e["ph"] == "X"]
+    assert all(e["dur"] > 0 for e in complete)
+    (instant,) = [e for e in events if e["ph"] == "i"]
+    assert instant["name"] == "kernel.seg_outer"
+    assert all(e["args"]["trace_id"] == "t-000001"
+               for e in events if e["ph"] != "M")
+
+
+def test_prometheus_golden():
+    got = export.prometheus_text(golden_registry())
+    want = (GOLDENS / "prometheus.txt").read_text()
+    assert got == want
+
+
+def test_prometheus_cumulative_buckets_monotone():
+    text = export.prometheus_text(golden_registry())
+    cum = [
+        int(line.rsplit(" ", 1)[1])
+        for line in text.splitlines()
+        if line.startswith("acdc_fit_seconds_bucket")
+    ]
+    assert cum == sorted(cum)
+    assert cum[-1] == 4                       # +Inf sees every observation
+
+
+def test_spans_jsonl_round_trip(tmp_path):
+    path = export.write_spans_jsonl(
+        str(tmp_path / "spans.jsonl"), golden_spans()
+    )
+    rows = [json.loads(line) for line in open(path)]
+    assert [r["name"] for r in rows] == [
+        "scheduler.fit", "executor.execute", "kernel.seg_outer"
+    ]
+    assert rows[1]["attrs"] == {"hit": False, "steps": 3}
+
+
+def test_metrics_http_exporter(tracing):
+    obs.histogram("acdc_fit_seconds", tenant="t0").observe(0.01)
+    exporter = export.serve_metrics_http(
+        0, snapshot_fn=lambda: {"server": {"requests": 1}}
+    )
+    try:
+        def get(path):
+            with urllib.request.urlopen(exporter.url + path, timeout=5) as r:
+                return r.read().decode(), r.headers["Content-Type"]
+
+        prom, ctype = get("/metrics")
+        assert "acdc_fit_seconds_count" in prom and "0.0.4" in ctype
+        snap, ctype = get("/snapshot")
+        assert json.loads(snap) == {"server": {"requests": 1}}
+        health, _ = get("/healthz")
+        assert health == "ok\n"
+        with pytest.raises(urllib.error.HTTPError):
+            get("/nope")
+    finally:
+        exporter.close()
+
+
+# ----------------------------------------------------------------------
+# acceptance: one trace id from scheduler admission to kernel dispatch
+# ----------------------------------------------------------------------
+
+
+def _scheduler(monkeypatch=None):
+    from test_model_server import CFG, ORDER, make_db
+    from repro.core.executor import KernelPolicy
+    from repro.serve import ModelServer, Scheduler
+    from repro.session import Session
+
+    # force-mode kernels (interpret off-TPU) so named dispatch events
+    # (kernel.seg_outer / kernel.sigma_fused) appear at tiny scale
+    sess = Session(
+        make_db(), ORDER,
+        kernel_policy=KernelPolicy(mode="force", min_rows=0),
+    )
+    return Scheduler(ModelServer(sess, default_solver=CFG))
+
+
+def trace_names(recs, trace_id):
+    return {r.name for r in recs if r.trace_id == trace_id}
+
+
+@pytest.mark.slow
+def test_trace_follows_fit_and_predict_to_kernel_dispatch(tracing):
+    from test_model_server import LAM
+    from repro.serve import FitRequest, PredictRequest
+    from repro.session import LinearRegression, PolynomialRegression
+
+    sched = _scheduler()
+    rows = {a: np.zeros(3, dtype=np.int64) for a in ("A", "B")}
+    rows.update({a: np.zeros(3) for a in ("C", "D")})
+
+    # one explicit fit, admitted from a worker thread (the serve shape)
+    def client():
+        sched.fit(FitRequest(
+            spec=LinearRegression(lam=LAM), features=("A", "C"),
+            response="E",
+        ))
+
+    t = threading.Thread(target=client, daemon=True)
+    t.start()
+    t.join()
+
+    fit_recs = obs.spans()
+    (admission,) = by_name(fit_recs, "scheduler.fit")
+    fit_names = trace_names(fit_recs, admission.trace_id)
+    # the single trace id follows the request from scheduler admission
+    # through the server, session, engine, and executor to a NAMED
+    # kernel dispatch — the PR's acceptance bar
+    assert {
+        "scheduler.fit", "scheduler.commit", "server.fit", "session.fit",
+        "session.compile", "engine.execute", "executor.execute",
+        "executor.run",
+    } <= fit_names
+    assert any(n.startswith("kernel.") for n in fit_names), fit_names
+
+    # a predict whose tenant is NOT subsumed by the first fit's bundle
+    # (pr2 ⊋ lr) rides ONE implicit fit: same bar, predict-side
+    obs.clear()
+    reply = sched.predict(PredictRequest(
+        spec=PolynomialRegression(degree=2, lam=LAM),
+        features=("A", "B", "C", "D"), response="E", rows=rows,
+    ))
+    assert reply.implicit_fit
+    pred_recs = obs.spans()
+    (padmission,) = by_name(pred_recs, "scheduler.predict")
+    pred_names = trace_names(pred_recs, padmission.trace_id)
+    assert {
+        "scheduler.predict", "scheduler.fit", "server.fit", "session.fit",
+        "engine.execute", "executor.execute", "scheduler.score",
+    } <= pred_names
+    assert any(n.startswith("kernel.") for n in pred_names), pred_names
+
+    # every span of both requests carried exactly one trace id each
+    assert len({r.trace_id for r in pred_recs}) == 1
+
+
+@pytest.mark.slow
+def test_snapshot_round_trips_and_has_obs_planes(tracing):
+    from test_model_server import LAM
+    from repro.serve import FitRequest, snapshot
+    from repro.session import LinearRegression
+
+    sched = _scheduler()
+    sched.fit(FitRequest(
+        spec=LinearRegression(lam=LAM), features=("A", "C"), response="E",
+    ))
+    snap = snapshot(sched.server)
+    # the gate: everything in the snapshot is JSON-native builtins
+    assert snap == json.loads(json.dumps(snap))
+
+    ex = snap["executor"]
+    assert 0.0 <= ex["hit_rate"] <= 1.0
+    assert ex["execute_seconds"] >= ex["trace_seconds"] * 0.0
+    assert "hit_rate" in snap["solver_cache"]
+    assert snap["latency"]["fit_seconds_percentiles"]["p99"] > 0.0
+    assert snap["trace"]["enabled"] and snap["trace"]["recorded"] > 0
+    assert any(h["name"] == "session.fit" for h in snap["trace"]["hottest"])
+    assert "acdc_fit_seconds" in snap["histograms"]
+
+
+# ----------------------------------------------------------------------
+# acdc_top rendering (pure)
+# ----------------------------------------------------------------------
+
+
+def test_acdc_top_render_is_pure_and_complete():
+    from repro.launch.top import demo_snapshot, render
+
+    snap = demo_snapshot()
+    lines = render(snap, None, 1.0)
+    text = "\n".join(lines)
+    assert "acdc_top" in text
+    assert "solver.bgd" in text               # hottest spans table
+    assert "p50" in text and "p99" in text
+    # rates need a previous frame: 30 fits → 6 more over 2 seconds = 3/s
+    prev = json.loads(json.dumps(snap))
+    snap["server"]["fits"] += 6
+    moved = "\n".join(render(snap, prev, 2.0))
+    assert "fit    3.0/s" in moved
+    # demo snapshot itself is JSON-native (it stands in for /snapshot)
+    assert snap == json.loads(json.dumps(snap))
