@@ -641,3 +641,100 @@ def bench_obs_overhead(emit) -> None:
         f"overhead={overhead * 100:.2f}%;budget=5%;"
         f"spans_per_run={n_spans // 31}",
     )
+
+
+def bench_recovery(emit) -> None:
+    """ISSUE 10 acceptance bar: warm restart from a ``SessionStore``
+    snapshot beats a cold restart (full recompile + aggregate pass over
+    the same data) by >=5x, with refit parity <=1e-6. The serve stack
+    fits, streams deltas through the WAL, snapshots, then "crashes";
+    cold pays compile+aggregate from the post-delta base data, warm pays
+    np.load + bundle rebuild + WAL replay."""
+    import copy
+    import shutil
+    import tempfile
+
+    from repro.core import executor
+    from repro.ft.store import SessionStore
+    from repro.serve import DeltaEvent, FitRequest, ModelServer
+
+    db, feats = fragment("v1", SCALE)
+    spec = LinearRegression(lam=1e-2)
+    cfg = SolverConfig(max_iters=500, tol=1e-10, policy="single")
+    req = FitRequest(spec=spec, features=tuple(feats), response="units",
+                     solver=cfg)
+
+    state_dir = tempfile.mkdtemp(prefix="acdc_bench_recovery_")
+    try:
+        sess = Session(db, variable_order())
+        server = ModelServer(sess, default_solver=cfg)
+        store = SessionStore(state_dir).attach(server)
+        server.handle(req)
+        for d in retailer.deltas(sess.db, n_batches=2, frac=0.01, seed=3):
+            server.handle(DeltaEvent(d))
+        ref = server.handle(FitRequest(
+            spec=spec, features=tuple(feats), response="units",
+            solver=cfg, warm=False,
+        )).result
+        store.snapshot(sess, server=server)
+        post_db = copy.deepcopy(sess.db)
+
+        # cold restart: empty executor plane, recompile + full aggregate
+        # pass over the post-delta base data
+        executor.global_plane().clear()
+        t0 = time.perf_counter()
+        cold_sess = Session(copy.deepcopy(post_db), variable_order())
+        cold = cold_sess.fit(spec, feats, "units", solver=cfg)
+        cold_s = time.perf_counter() - t0
+        assert cold_sess.stats.aggregate_passes == 1
+
+        # warm restart: empty executor plane, restore the snapshot (the
+        # relations are replaced wholesale, so the seed db's contents
+        # don't matter) and refit off the restored bundle
+        executor.global_plane().clear()
+        t0 = time.perf_counter()
+        warm_sess = Session(copy.deepcopy(db), variable_order())
+        warm_server = ModelServer(warm_sess, default_solver=cfg)
+        warm_store = SessionStore(state_dir).attach(warm_server)
+        rep = warm_store.restore_into(warm_sess, server=warm_server)
+        warm = warm_server.handle(FitRequest(
+            spec=spec, features=tuple(feats), response="units",
+            solver=cfg, warm=False,
+        )).result
+        warm_s = time.perf_counter() - t0
+        assert warm_sess.stats.aggregate_passes == 0, (
+            "warm restart re-ran the aggregate pass"
+        )
+
+        import numpy as np
+
+        # parity is measured against the PRE-CRASH refit — the thing the
+        # durability plane promises to reproduce (bit-exact: the restored
+        # monomial tables are the saved ones). The cold run's params sit
+        # a solver-tolerance away (fresh aggregate pass -> tables differ
+        # at ~1e-10, and BGD stops at tol, not at machine epsilon); its
+        # deviation is reported, not gated.
+        parity = float(np.max(np.abs(
+            np.asarray(warm.params) - np.asarray(ref.params)
+        )))
+        cold_dev = float(np.max(np.abs(
+            np.asarray(cold.params) - np.asarray(ref.params)
+        )))
+        speedup = cold_s / max(warm_s, 1e-9)
+        assert parity <= 1e-6, f"recovered refit parity {parity:.2e} > 1e-6"
+        assert speedup >= 5.0, (
+            f"warm restart speedup {speedup:.1f}x below the 5x bar "
+            f"(cold={cold_s:.2f}s warm={warm_s:.2f}s)"
+        )
+        emit(
+            "recovery/v1-lr", warm_s * 1e6,
+            f"cold_s={cold_s:.3f};warm_s={warm_s:.3f};"
+            f"speedup={speedup:.1f}x;parity={parity:.1e};"
+            f"cold_solver_dev={cold_dev:.1e};"
+            f"bundles={rep.bundles};tenants={rep.tenants};"
+            f"wal_replayed={rep.wal_replayed};"
+            f"restore_s={rep.seconds:.3f};"
+            f"ref_loss={ref.loss:.4f}",
+        )
+    finally:
+        shutil.rmtree(state_dir, ignore_errors=True)

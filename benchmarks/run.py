@@ -41,6 +41,7 @@ BENCHES = [
     bench_acdc.bench_qps,
     bench_acdc.bench_grad_compression,
     bench_acdc.bench_obs_overhead,
+    bench_acdc.bench_recovery,
     bench_kernels.bench_sigma_fused,
     bench_kernels.bench_seg_outer,
     bench_kernels.bench_swa_vs_full,

@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Crash-recovery smoke (CI tier1-recovery): SIGKILL acdc_serve
+mid-stream, restart from the same --state-dir, assert warm recovery.
+
+    PYTHONPATH=src python scripts/recovery_smoke.py [--schema snowflake]
+
+Phase 1 launches ``repro.launch.indb_serve`` with the durability plane
+on and a periodic snapshot cadence, waits until at least one snapshot
+has committed (plus a little more served traffic), then delivers
+SIGKILL — no atexit, no flush, the process is simply gone, exactly the
+failure the WAL + atomic-snapshot protocol is built for.
+
+Phase 2 restarts the server on the same state dir with the metrics
+exporter up and asserts:
+
+  * the "[serve] warm restore" line appears (snapshot found and loaded);
+  * the run completes cleanly (exit 0) — leftover ``snap_*.tmp`` from a
+    mid-snapshot kill is ignored, the WAL tail replays or is dropped;
+  * ``GET /snapshot`` on the live exporter reports a healthy durability
+    plane: ``durability.enabled`` and at least one restore counted.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+import urllib.request
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SERVE = [sys.executable, "-u", "-m", "repro.launch.indb_serve"]
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return env
+
+
+def _spawn(extra):
+    return subprocess.Popen(
+        SERVE + extra, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, env=_env(), cwd=REPO,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--schema", default="snowflake")
+    ap.add_argument("--n-requests", type=int, default=60)
+    ap.add_argument("--scale", type=float, default=0.3)
+    ap.add_argument("--timeout", type=float, default=420.0)
+    args = ap.parse_args()
+
+    state_dir = tempfile.mkdtemp(prefix="acdc_recovery_smoke_")
+    base = [
+        "--schema", args.schema, "--n-requests", str(args.n_requests),
+        "--scale", str(args.scale), "--state-dir", state_dir,
+    ]
+
+    # ---- phase 1: serve, snapshot, then die without warning ----------
+    print(f"[smoke] phase 1: serving with state dir {state_dir}")
+    p1 = _spawn(base + ["--snapshot-every", "5"])
+    deadline = time.time() + args.timeout
+    snapshotted = served_after = 0
+    try:
+        for line in p1.stdout:
+            print(f"  [victim] {line}", end="")
+            if " snapshot " in line:
+                snapshotted += 1
+            elif snapshotted and re.search(r" (fit|predict) ", line):
+                served_after += 1
+            # kill once a snapshot committed AND more traffic was served
+            # on top of it (so recovery has something to be stale about)
+            if snapshotted and served_after >= 3:
+                break
+            if time.time() > deadline:
+                p1.kill()
+                sys.exit("[smoke] FAIL: no snapshot before timeout")
+        else:
+            sys.exit("[smoke] FAIL: victim finished before we could kill "
+                     "it — raise --n-requests")
+        os.kill(p1.pid, signal.SIGKILL)
+    finally:
+        p1.wait()
+        p1.stdout.close()
+    print(f"\n[smoke] SIGKILL delivered after {snapshotted} snapshot(s) "
+          f"and {served_after} further request(s); exit {p1.returncode}")
+    assert p1.returncode != 0, "SIGKILL'd process reported success?"
+
+    # ---- phase 2: restart on the same state dir ----------------------
+    print("[smoke] phase 2: restarting from the state dir")
+    p2 = _spawn(base + ["--metrics-port", "0"])
+    warm_line = url = None
+    out = []
+    try:
+        for line in p2.stdout:
+            print(f"  [restart] {line}", end="")
+            out.append(line)
+            if "warm restore" in line:
+                warm_line = line.strip()
+            m = re.search(r"exporter at (http://\S+)/metrics", line)
+            if m:
+                url = m.group(1)
+            if warm_line and url:
+                break
+            if time.time() > deadline:
+                p2.kill()
+                sys.exit("[smoke] FAIL: no warm restore before timeout")
+        if warm_line is None or url is None:
+            p2.wait()
+            sys.exit("[smoke] FAIL: restart produced no warm-restore or "
+                     "exporter line:\n" + "".join(out))
+
+        with urllib.request.urlopen(f"{url}/snapshot", timeout=30) as r:
+            snap = json.load(r)
+        dur = snap["durability"]
+        assert dur["enabled"] is True, dur
+        assert dur["store"]["restores"] >= 1, dur
+        assert dur["store"]["snapshots"] >= 0, dur
+        print(f"[smoke] /snapshot durability plane: {json.dumps(dur)}")
+
+        for line in p2.stdout:       # drain to completion
+            print(f"  [restart] {line}", end="")
+    finally:
+        rc = p2.wait()
+        p2.stdout.close()
+    if rc != 0:
+        sys.exit(f"[smoke] FAIL: restarted server exited {rc}")
+
+    print(f"[smoke] OK: {warm_line}")
+    print("[smoke] OK: restart served the full trace and exited 0")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

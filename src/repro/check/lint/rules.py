@@ -729,12 +729,125 @@ def check_acdc006(mod: _Module, out: List[LintDiagnostic]) -> None:
 
 
 # ----------------------------------------------------------------------
+# ACDC007 — non-atomic persistence writes / swallowed exceptions
+# ----------------------------------------------------------------------
+
+# the durability-sensitive paths: serve/, session/, ft/, ckpt/ modules
+# (plus the rule's own fixtures, which carry "acdc007" in their filename).
+# Elsewhere a plain open(path, "w") is usually a report or log — not
+# state some recovery path will read back after a crash.
+_ACDC007_SCOPE = re.compile(
+    r"(^|[\\/])(serve|session|ft|ckpt)[\\/]|acdc007"
+)
+_ACDC007_TMP_HINT = re.compile(r"tmp|temp", re.IGNORECASE)
+
+
+def _acdc007_write_mode(call: ast.Call) -> Optional[str]:
+    """The open() call's mode string when it truncates/creates ("w"/"x"
+    variants). Append and read(+) modes never clobber committed state."""
+    mode_node = None
+    if len(call.args) >= 2:
+        mode_node = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode_node = kw.value
+    if not (isinstance(mode_node, ast.Constant)
+            and isinstance(mode_node.value, str)):
+        return None
+    mode = mode_node.value
+    return mode if ("w" in mode or "x" in mode) else None
+
+
+def _acdc007_tmp_hinted(node: ast.AST) -> bool:
+    """True when the path expression itself names a tmp location — a
+    write into ``foo.tmp``/``tmpdir`` is the first half of the atomic
+    idiom even when the rename lives in the caller."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and _ACDC007_TMP_HINT.search(n.id):
+            return True
+        if isinstance(n, ast.Attribute) and _ACDC007_TMP_HINT.search(n.attr):
+            return True
+        if isinstance(n, ast.Constant) and isinstance(n.value, str) \
+                and _ACDC007_TMP_HINT.search(n.value):
+            return True
+        if isinstance(n, ast.arg) and _ACDC007_TMP_HINT.search(n.arg):
+            return True
+    return False
+
+
+def check_acdc007(mod: _Module, out: List[LintDiagnostic]) -> None:
+    """ACDC007: durability hygiene on serve/session/ft/ckpt paths.
+
+    (a) **Non-atomic persistence write**: ``open(path, "w"/"wb"/"x"...)``
+    truncates the destination in place — a crash mid-write leaves a
+    half-written file where committed state used to be. The idiom this
+    repo commits state with (``ckpt.checkpoint``, ``ft.store``) is
+    write-to-tmp → fsync → ``os.rename`` → fsync dir. The rule flags a
+    truncating open unless the enclosing function also calls
+    ``os.rename``/``os.replace`` (it IS the atomic writer) or the path
+    expression names a tmp location (the rename lives in the caller).
+
+    (b) **Swallowed exception**: an ``except Exception:``/bare
+    ``except:`` handler whose entire body is ``pass``. On these paths an
+    error swallowed whole is an acked delta silently dropped or a torn
+    snapshot reported as success — at minimum count it or log it; a
+    deliberate ignore must say which exception and why
+    (``contextlib.suppress(SpecificError)`` or a narrow except).
+    """
+    if not _ACDC007_SCOPE.search(mod.path):
+        return
+    for call in [n for n in ast.walk(mod.tree) if isinstance(n, ast.Call)]:
+        # bare open() only: os.open's integer-flags API is the low-level
+        # seam the fsync helpers themselves use
+        if not (isinstance(call.func, ast.Name)
+                and call.func.id == "open"):
+            continue
+        mode = _acdc007_write_mode(call)
+        if mode is None:
+            continue
+        if call.args and _acdc007_tmp_hinted(call.args[0]):
+            continue
+        fn = mod.enclosing_function(call)
+        renames = fn is not None and any(
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr in ("rename", "replace")
+            for n in ast.walk(fn)
+        )
+        if not renames:
+            mod.emit(
+                out, call, "ACDC007",
+                f"open(..., {mode!r}) truncates committed state in "
+                f"place with no tmp+os.rename in sight: a crash "
+                f"mid-write corrupts the file a recovery path will "
+                f"read — write to a tmp name, fsync, rename (the "
+                f"ckpt/ft.store idiom)",
+            )
+    for handler in [n for n in ast.walk(mod.tree)
+                    if isinstance(n, ast.ExceptHandler)]:
+        broad = handler.type is None or (
+            isinstance(handler.type, ast.Name)
+            and handler.type.id in ("Exception", "BaseException")
+        )
+        if not broad:
+            continue
+        if len(handler.body) == 1 and isinstance(handler.body[0], ast.Pass):
+            mod.emit(
+                out, handler, "ACDC007",
+                "except Exception: pass on a durability path swallows "
+                "the failure whole — an acked delta or a torn snapshot "
+                "vanishes silently; count it, log it, or narrow the "
+                "except to the exception you mean to ignore",
+            )
+
+
+# ----------------------------------------------------------------------
 # Driver
 # ----------------------------------------------------------------------
 
 RULES = (
     check_acdc001, check_acdc002, check_acdc003, check_acdc004,
-    check_acdc005, check_acdc006,
+    check_acdc005, check_acdc006, check_acdc007,
 )
 
 

@@ -38,6 +38,18 @@ def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
     return list(zip(keys, leaves)), treedef
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so the rename committed inside it survives power
+    loss — without this, a crash after ``os.rename`` can roll the
+    directory entry back to the ``.tmp`` name even though every file's
+    bytes were fsynced (the classic atomic-rename durability gap)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     """Synchronous atomic save. Returns the final checkpoint path."""
     os.makedirs(directory, exist_ok=True)
@@ -62,7 +74,10 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
             {"key": key, "shape": list(arr.shape), "dtype": stored_as}
         )
     manifest["treedef"] = str(treedef)
-    np.savez(os.path.join(tmp, "shards.npz"), **arrays)
+    with open(os.path.join(tmp, "shards.npz"), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -70,6 +85,7 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(directory)
     return final
 
 

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.ft.chaos import fault_point
 
 from .engine import EnginePlan, SigPlan, _lambda_matrix
 from .schema import Kind
@@ -442,6 +443,11 @@ class ExecutorPlane:
         already verified against this executable shape — strict runs the
         full O(n_exp) index-bound scan on every pass (DESIGN.md §13)."""
         policy = policy or DEFAULT_POLICY
+        # the named transient-fault site of the durability plane (ft.chaos,
+        # DESIGN.md §16): inert in production, raises FaultInjected (a
+        # retryable TransientError) when armed so the serve path's retry
+        # policy can be exercised deterministically
+        fault_point("executor.dispatch")
         signature, lams, bufs, (root_meta, fused, moments) = _prepare(
             plan, dtype, policy
         )

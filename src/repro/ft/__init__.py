@@ -1,0 +1,70 @@
+"""Durability & fault-tolerance plane (DESIGN.md §16).
+
+Three legs:
+
+  * ``ft.wal`` / ``ft.store`` — crash-safe delta WAL + atomic session
+    snapshots; together they make a restart a cache hit instead of a
+    re-aggregation, with no acked delta lost.
+  * ``ft.resilience`` — deadlines, retry with deterministic backoff,
+    overload shedding for the serve path.
+  * ``ft.chaos`` — deterministic named crash/fault sites driving the
+    crash-matrix tests and the CI recovery smoke.
+
+``chaos`` and ``resilience`` are stdlib-only and imported eagerly (the
+core executor's fault site must not pull in the session/serve layers);
+``wal`` and ``store`` load lazily on first attribute access.
+"""
+
+from . import chaos
+from .chaos import FaultInjected, SimulatedCrash, crash_point, fault_point
+from .resilience import (
+    Deadline,
+    DeadlineExceeded,
+    RetryPolicy,
+    ServerOverloaded,
+    TransientError,
+    retry_call,
+)
+
+__all__ = [
+    "chaos",
+    "crash_point",
+    "fault_point",
+    "SimulatedCrash",
+    "FaultInjected",
+    "Deadline",
+    "DeadlineExceeded",
+    "RetryPolicy",
+    "ServerOverloaded",
+    "TransientError",
+    "retry_call",
+    "CorruptWal",
+    "DeltaWAL",
+    "fsync_dir",
+    "RestoreReport",
+    "SessionStore",
+    "StoreStats",
+    "WalStats",
+]
+
+_LAZY = {
+    "DeltaWAL": "wal",
+    "WalStats": "wal",
+    "CorruptWal": "wal",
+    "fsync_dir": "wal",
+    "SessionStore": "store",
+    "StoreStats": "store",
+    "RestoreReport": "store",
+    "wal": "wal",
+    "store": "store",
+}
+
+
+def __getattr__(name: str):
+    mod_name = _LAZY.get(name)
+    if mod_name is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    return mod if name == mod_name else getattr(mod, name)

@@ -1,0 +1,162 @@
+"""Deterministic fault injection for the durability plane (DESIGN.md §16).
+
+Crash-consistency claims are only as good as the crashes they survive,
+so the WAL, the snapshot writer, and the executor dispatch each pass
+through a *named* site here:
+
+    chaos.crash_point("store.snapshot.pre_rename")
+    chaos.fault_point("executor.dispatch")
+
+A site is inert (one dict lookup + one env check) unless armed. Two
+arming mechanisms, both deterministic:
+
+  * **in-process** — ``arm(site, action=...)``: the next ``count`` hits
+    trip the site. ``action="raise"`` raises ``SimulatedCrash`` (a
+    ``BaseException``, so no ``except Exception`` handler on the way up
+    can swallow the "process died here" fiction); ``action="fault"``
+    raises ``FaultInjected`` (a ``TransientError`` — the retryable
+    kind); ``action="exit"`` calls ``os._exit(137)`` — a real SIGKILL-
+    grade death for subprocess tests.
+  * **cross-process** — ``ACDC_CRASH_POINT=<site>`` in the environment
+    kills the process with ``os._exit(137)`` on the Nth hit of that
+    crash site (``ACDC_CRASH_HITS``, default 1). This is how the CI
+    recovery smoke murders a live ``acdc_serve`` at an exact barrier.
+
+The crash matrix in ``tests/test_ft.py`` arms every named site in turn,
+restarts from the state dir, and proves refit parity — the sites are the
+contract, so add one next to every new durability barrier.
+
+Named sites (keep in sync with DESIGN.md §16):
+
+    wal.append.mid                    after the record header is on disk,
+                                      before the payload (torn tail)
+    wal.append.pre_fsync              full frame written, not yet fsynced
+    wal.rotate.pre_dirsync            new segment created, dir not synced
+    store.snapshot.mid_write          some snapshot files written, not all
+    store.snapshot.pre_rename         tmp dir complete, rename pending
+    store.snapshot.post_rename_pre_truncate
+                                      snapshot live, WAL not yet truncated
+    executor.dispatch                 fault site: transient executor error
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional
+
+from .resilience import TransientError
+
+
+class SimulatedCrash(BaseException):
+    """An armed crash site tripped. Deliberately NOT an ``Exception`` —
+    the point of a simulated crash is that nothing on the unwind path
+    gets to handle it and "keep going"."""
+
+    def __init__(self, site: str):
+        super().__init__(f"simulated crash at {site!r}")
+        self.site = site
+
+
+class FaultInjected(TransientError):
+    """An armed fault site tripped: a retryable transient failure."""
+
+    def __init__(self, site: str):
+        super().__init__(f"injected transient fault at {site!r}")
+        self.site = site
+
+
+class _Arm:
+    __slots__ = ("action", "remaining", "skip")
+
+    def __init__(self, action: str, count: int, after: int):
+        self.action = action
+        self.remaining = count
+        self.skip = after           # hits to let through before tripping
+
+
+_mu = threading.Lock()
+_armed: Dict[str, _Arm] = {}        # lock: _mu
+_hits: Dict[str, int] = {}          # lock: _mu
+
+
+def arm(site: str, action: str = "raise", count: int = 1,
+        after: int = 0) -> None:
+    """Arm ``site`` to trip on its next ``count`` hits (after letting
+    ``after`` hits pass). Actions: ``raise`` -> SimulatedCrash,
+    ``fault`` -> FaultInjected, ``exit`` -> os._exit(137)."""
+    if action not in ("raise", "fault", "exit"):
+        raise ValueError(f"unknown chaos action {action!r}")
+    with _mu:
+        _armed[site] = _Arm(action, count, after)
+
+
+def disarm_all() -> None:
+    """Reset every armed site and hit counter (test teardown)."""
+    with _mu:
+        _armed.clear()
+        _hits.clear()
+
+
+def hits(site: str) -> int:
+    """How many times ``site`` has been passed through (armed or not)."""
+    with _mu:
+        return _hits.get(site, 0)
+
+
+def _trip(site: str) -> Optional[str]:
+    """Record a hit; return the armed action to take, if any."""
+    with _mu:
+        _hits[site] = _hits.get(site, 0) + 1
+        a = _armed.get(site)
+        if a is None:
+            return None
+        if a.skip > 0:
+            a.skip -= 1
+            return None
+        if a.remaining <= 0:
+            return None
+        a.remaining -= 1
+        if a.remaining <= 0:
+            del _armed[site]
+        return a.action
+
+
+def _env_kill(site: str, env_var: str) -> None:
+    if os.environ.get(env_var) != site:
+        return
+    threshold = int(os.environ.get("ACDC_CRASH_HITS", "1"))
+    with _mu:
+        n = _hits.get(site, 0)      # _trip already counted this hit
+    if n >= threshold:
+        os._exit(137)               # the SIGKILL fiction, made real
+
+
+def crash_point(site: str) -> None:
+    """A named crash barrier. Inert unless armed or selected by the
+    ``ACDC_CRASH_POINT`` environment variable."""
+    action = _trip(site)
+    _env_kill(site, "ACDC_CRASH_POINT")
+    if action is None:
+        return
+    if action == "exit":
+        os._exit(137)
+    if action == "fault":
+        raise FaultInjected(site)
+    raise SimulatedCrash(site)
+
+
+def fault_point(site: str) -> None:
+    """A named transient-fault site (retryable). Inert unless armed or
+    selected by ``ACDC_FAULT_POINT``; ``arm(site, action="raise")``
+    still escalates it to a crash when a test wants one."""
+    action = _trip(site)
+    if os.environ.get("ACDC_FAULT_POINT") == site:
+        raise FaultInjected(site)
+    if action is None:
+        return
+    if action == "exit":
+        os._exit(137)
+    if action == "raise":
+        raise SimulatedCrash(site)
+    raise FaultInjected(site)

@@ -1,0 +1,132 @@
+"""Serve-path resilience primitives: deadlines, retry with backoff,
+overload shedding (DESIGN.md §16).
+
+Pure stdlib and fully clock-injectable — every time source and sleep is
+a parameter, so the deadline/backoff tests run on fake clocks with zero
+real waiting, exactly like the rest of the serving plane
+(``Session.clock``, DESIGN.md §12).
+
+  * ``Deadline`` — an absolute expiry on an injectable monotonic clock;
+    threaded per-request through ``ModelServer``/``Scheduler`` so a
+    caller's time budget bounds queue wait + drain + solve together.
+  * ``RetryPolicy``/``retry_call`` — exponential backoff with
+    deterministic seeded jitter for *transient* failures only
+    (``TransientError``); a deterministic bug fails fast, a flaky
+    executor dispatch gets ``max_attempts`` tries.
+  * ``ServerOverloaded`` — the load-shedding signal: raised instead of
+    queueing when the scheduler is in degraded mode or its fit backlog
+    is past ``max_pending_fits``. Predicts keep flowing off the
+    lock-free snapshot while fits shed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Callable, Iterator, Optional, Tuple, Type, Union
+
+
+class TransientError(Exception):
+    """Base class for failures worth retrying: the operation may succeed
+    on a clean re-run (executor dispatch hiccup, injected fault). Raise
+    a plain ``Exception`` for deterministic errors — retrying those only
+    triples the latency of the same failure."""
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's time budget ran out (queue wait included)."""
+
+
+class ServerOverloaded(RuntimeError):
+    """The write plane shed this request (degraded mode or a full fit
+    backlog). The caller should back off and retry; predicts against
+    the published snapshot remain available throughout."""
+
+
+class Deadline:
+    """An absolute expiry on an injectable monotonic clock."""
+
+    __slots__ = ("budget_s", "expires_at", "clock")
+
+    def __init__(self, budget_s: float,
+                 clock: Callable[[], float] = time.monotonic):
+        self.budget_s = budget_s
+        self.clock = clock
+        self.expires_at = clock() + budget_s
+
+    @staticmethod
+    def of(budget_s: Optional[float],
+           clock: Callable[[], float] = time.monotonic
+           ) -> Optional["Deadline"]:
+        """``None`` budget -> no deadline (the common case costs one if)."""
+        return None if budget_s is None else Deadline(budget_s, clock)
+
+    def remaining(self) -> float:
+        return self.expires_at - self.clock()
+
+    @property
+    def expired(self) -> bool:
+        return self.remaining() <= 0.0
+
+    def check(self, where: str = "") -> None:
+        """Raise ``DeadlineExceeded`` if the budget is spent."""
+        if self.expired:
+            suffix = f" at {where}" if where else ""
+            raise DeadlineExceeded(
+                f"deadline of {self.budget_s:.3f}s exceeded{suffix}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with deterministic seeded jitter.
+
+    Backoff before attempt k+1 is ``min(base_s * multiplier**k,
+    max_backoff_s) * (1 + jitter * u_k)`` with ``u_k`` drawn uniformly
+    from [-1, 1] by a ``random.Random(seed)`` — same seed, same delays,
+    so retry tests assert exact schedules."""
+
+    max_attempts: int = 3
+    base_s: float = 0.05
+    multiplier: float = 2.0
+    max_backoff_s: float = 2.0
+    jitter: float = 0.1
+    seed: int = 0
+
+    def backoffs(self) -> Iterator[float]:
+        rng = random.Random(self.seed)
+        for k in range(self.max_attempts - 1):
+            b = min(self.base_s * self.multiplier ** k, self.max_backoff_s)
+            yield b * (1.0 + self.jitter * rng.uniform(-1.0, 1.0))
+
+
+def retry_call(
+    fn: Callable[[], object],
+    policy: RetryPolicy,
+    retryable: Union[Type[BaseException],
+                     Tuple[Type[BaseException], ...]] = TransientError,
+    deadline: Optional[Deadline] = None,
+    sleep: Callable[[float], None] = time.sleep,
+    on_retry: Optional[Callable[[int, BaseException, float], None]] = None,
+):
+    """Call ``fn`` up to ``policy.max_attempts`` times, sleeping the
+    policy's backoff between attempts. Only ``retryable`` exceptions are
+    retried; anything else (including ``SimulatedCrash``, a
+    ``BaseException``) propagates immediately. With a ``deadline``, a
+    retry is abandoned — the last transient error re-raised — rather
+    than sleeping past the caller's budget."""
+    backoffs = policy.backoffs()
+    for attempt in range(policy.max_attempts):
+        try:
+            return fn()
+        except retryable as e:
+            if attempt + 1 >= policy.max_attempts:
+                raise
+            delay = next(backoffs)
+            if deadline is not None and deadline.remaining() < delay:
+                raise
+            if on_retry is not None:
+                on_retry(attempt + 1, e, delay)
+            sleep(delay)
+    raise AssertionError("unreachable")  # loop returns or raises

@@ -1,0 +1,508 @@
+"""``SessionStore`` — durable session/server state: snapshot + restore
+(DESIGN.md §16).
+
+A snapshot persists everything a warm restart needs to skip the
+expensive work: the post-delta relation data, dictionaries and active
+domains, every compiled bundle's monomial tables (the output of the
+factorized aggregate pass — the state AC/DC's whole economics argue for
+reusing), the tenant registry with each tenant's latest parameters, and
+the WAL applied-position. Restore rebuilds bundles around the persisted
+tables — workload/registers/plan are recomputed structurally, but the
+aggregate pass itself (the XLA trace + execution that dominates a cold
+start) is NOT re-run — then replays the WAL records the snapshot does
+not cover back into the refresh queue. ``bench_recovery`` holds the
+line: warm restore ≥5× faster than cold re-aggregation.
+
+On-disk layout (one directory per snapshot, atomically renamed):
+
+    state_dir/
+      wal/                      ft.wal.DeltaWAL segments
+      snap_00000007/
+        manifest.json           format, epoch, wal position, bundle and
+                                tenant descriptors — written LAST
+        db.npz                  rel__<relation>__<attr> columns
+        dicts.npz               dictionary-decode tables
+        bundle_0.npz            t<i>__vals / t<i>__k__<attr> per monomial
+        tenants.npz             p<i>__theta [p<i>__V] per tenant
+
+Write protocol — the tmp→fsync→rename idiom of ``ckpt.checkpoint``,
+completed with the parent-directory fsync: write into
+``snap_N.tmp/``, fsync every file, fsync the tmp dir, rename to
+``snap_N/``, fsync ``state_dir`` — then (and only then) truncate the
+WAL's consumed prefix. A crash anywhere leaves either the old snapshot
+plus a longer WAL (replay covers the gap) or the new snapshot plus an
+untruncated WAL (replay filters on the manifest's watermark); in no
+interleaving is an acknowledged delta lost or applied twice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.schema import FD
+from repro.core.solver import SolverResult
+from repro.session import (
+    FactorizationMachine,
+    FitResult,
+    LinearRegression,
+    ModelSpec,
+    PolynomialRegression,
+    Session,
+)
+from repro.session.bundle import BundleKey, fd_key
+
+from . import chaos
+from .wal import DeltaWAL, fsync_dir
+
+_FORMAT = 1
+
+_SPEC_CLASSES = {
+    c.__name__: c
+    for c in (LinearRegression, PolynomialRegression, FactorizationMachine)
+}
+
+
+def _spec_to_json(spec: ModelSpec) -> dict:
+    cls = type(spec).__name__
+    if cls not in _SPEC_CLASSES:
+        raise ValueError(
+            f"cannot persist unknown spec class {cls!r}; register it in "
+            "ft.store._SPEC_CLASSES"
+        )
+    return {"class": cls, **dataclasses.asdict(spec)}
+
+
+def _spec_from_json(d: dict) -> ModelSpec:
+    d = dict(d)
+    return _SPEC_CLASSES[d.pop("class")](**d)
+
+
+def _fds_to_json(fds) -> list:
+    return [[f.determinant, list(f.determined)] for f in fds]
+
+
+def _fds_from_json(rows) -> Tuple[FD, ...]:
+    return tuple(FD(det, tuple(dets)) for det, dets in rows)
+
+
+def _mono_to_json(mono) -> list:
+    return [[var, int(power)] for var, power in mono]
+
+
+def _mono_from_json(rows) -> tuple:
+    return tuple((str(var), int(power)) for var, power in rows)
+
+
+def _write_npz(tmp_path: str, arrays: Dict[str, np.ndarray],
+               fsync: bool) -> None:
+    """Write one npz into the snapshot's tmp dir (the caller's rename is
+    the commit, so writing in place here is safe by construction)."""
+    with open(tmp_path, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+
+
+@dataclasses.dataclass
+class StoreStats(obs.StatsBase):
+    snapshots: int = 0
+    snapshot_seconds_last: float = 0.0
+    snapshot_seconds_total: float = 0.0
+    restores: int = 0
+    restore_seconds_last: float = 0.0
+    bundles_saved: int = 0
+    bundles_restored: int = 0
+    tenants_saved: int = 0
+    tenants_restored: int = 0
+    wal_records_requeued: int = 0   # replayed into the refresh queue
+    snapshots_pruned: int = 0       # retention removals
+
+
+@dataclasses.dataclass
+class RestoreReport:
+    snapshot_id: int
+    deltas_applied: int
+    bundles: int
+    tenants: int
+    wal_replayed: int
+    seconds: float
+
+
+class SessionStore:
+    """Durable state directory for one serving session."""
+
+    def __init__(self, state_dir: str, keep: int = 2, fsync: bool = True,
+                 wal_rotate_bytes: int = 4 << 20):
+        self.state_dir = state_dir
+        self.keep = keep
+        self.fsync = fsync
+        self.wal_rotate_bytes = wal_rotate_bytes
+        self.stats = StoreStats()
+        self._wal: Optional[DeltaWAL] = None
+        os.makedirs(state_dir, exist_ok=True)
+
+    @property
+    def wal(self) -> DeltaWAL:
+        if self._wal is None:
+            self._wal = DeltaWAL(
+                os.path.join(self.state_dir, "wal"),
+                rotate_bytes=self.wal_rotate_bytes,
+                fsync=self.fsync,
+            )
+        return self._wal
+
+    def attach(self, server) -> "SessionStore":
+        """Wire this store into a ``ModelServer``: deltas are WAL-logged
+        before ack, and the metrics snapshot grows a durability plane."""
+        server.refresh.wal = self.wal
+        server.state_store = self
+        return self
+
+    # ------------------------------------------------------------------
+    def _snapshot_ids(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.state_dir):
+            if name.startswith("snap_") and not name.endswith(".tmp"):
+                manifest = os.path.join(self.state_dir, name, "manifest.json")
+                if os.path.exists(manifest):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        """Newest committed snapshot id (a ``.tmp`` from a crashed writer
+        is never a candidate — the rename is the commit)."""
+        ids = self._snapshot_ids()
+        return ids[-1] if ids else None
+
+    # ------------------------------------------------------------------
+    # snapshot
+    # ------------------------------------------------------------------
+    def snapshot(self, session: Session, server=None) -> str:
+        """Atomically persist the session (and, with ``server``, the
+        tenant registry). Must not run concurrently with drains/fits —
+        the scheduler's write lock (or any quiescent point) is the
+        caller's responsibility."""
+        t0 = time.monotonic()
+        with obs.span("ft.snapshot"):
+            sid = (self.latest() or 0) + 1
+            final = os.path.join(self.state_dir, f"snap_{sid:08d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+
+            db = session.db
+            db_arrays: Dict[str, np.ndarray] = {}
+            relation_attrs = {}
+            for rname, rel in db.relations.items():
+                relation_attrs[rname] = list(rel.attrs)
+                for attr, col in rel.columns.items():
+                    db_arrays[f"rel__{rname}__{attr}"] = np.asarray(col)
+            _write_npz(os.path.join(tmp, "db.npz"), db_arrays, self.fsync)
+
+            # the mid-write barrier: db.npz exists, the rest does not —
+            # the tmp dir must be ignored by restore
+            chaos.crash_point("store.snapshot.mid_write")
+
+            _write_npz(
+                os.path.join(tmp, "dicts.npz"),
+                {a: np.asarray(v) for a, v in db.dictionaries.items()},
+                self.fsync,
+            )
+
+            bundles_meta = []
+            for bi, b in enumerate(session.bundles):
+                fname = f"bundle_{bi}.npz"
+                arrays: Dict[str, np.ndarray] = {}
+                monos = []
+                for ti, (mono, (keys, vals)) in enumerate(
+                    b.result.tables.items()
+                ):
+                    monos.append(_mono_to_json(mono))
+                    arrays[f"t{ti}__vals"] = np.asarray(vals)
+                    for attr, col in keys.items():
+                        arrays[f"t{ti}__k__{attr}"] = np.asarray(col)
+                _write_npz(os.path.join(tmp, fname), arrays, self.fsync)
+                bundles_meta.append({
+                    "file": fname,
+                    "key": {
+                        "features": list(b.key.features),
+                        "response": b.key.response,
+                        "degree": b.key.degree,
+                        "squares": b.key.squares,
+                        "fds": [[d, list(ds)] for d, ds in b.key.fds],
+                        "fingerprint": b.key.fingerprint,
+                    },
+                    "fds": _fds_to_json(b.fds),
+                    "monomials": monos,
+                    "count": float(b.result.count),
+                    "aggregate_seconds": float(b.aggregate_seconds),
+                })
+
+            tenants_meta = []
+            if server is not None:
+                t_arrays: Dict[str, np.ndarray] = {}
+                for ti, t in enumerate(server.tenants.values()):
+                    meta = {
+                        "name": t.name,
+                        "spec": _spec_to_json(t.spec),
+                        "features": list(t.features),
+                        "response": t.response,
+                        "fds": _fds_to_json(t.fds),
+                        "subscribed": t.subscribed,
+                        "fitted_at_delta": int(t.fitted_at_delta),
+                        "has_fit": t.last_fit is not None,
+                    }
+                    if t.last_fit is not None:
+                        meta["loss"] = float(t.last_fit.loss)
+                        params = t.last_fit.params
+                        if isinstance(params, dict):  # FaMa {theta, V}
+                            t_arrays[f"p{ti}__theta"] = np.asarray(
+                                params["theta"]
+                            )
+                            # V is a dict: feature index -> (card, rank)
+                            # factor matrix; one npz entry per factor
+                            for vk, vmat in params["V"].items():
+                                t_arrays[f"p{ti}__V__{int(vk)}"] = (
+                                    np.asarray(vmat)
+                                )
+                        else:
+                            t_arrays[f"p{ti}__theta"] = np.asarray(params)
+                    tenants_meta.append(meta)
+                _write_npz(
+                    os.path.join(tmp, "tenants.npz"), t_arrays, self.fsync
+                )
+
+            manifest = {
+                "format": _FORMAT,
+                "snapshot_id": sid,
+                "deltas_applied": int(session.stats.deltas_applied),
+                "fingerprint": session.schema_fingerprint,
+                "relation_attrs": relation_attrs,
+                "adom": {a: int(v) for a, v in db.adom.items()},
+                "wal": (
+                    self._wal.position() if self._wal is not None
+                    else {"watermark": 0, "applied_above": []}
+                ),
+                "bundles": bundles_meta,
+                "tenants": tenants_meta,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                if self.fsync:
+                    os.fsync(f.fileno())
+            if self.fsync:
+                fsync_dir(tmp)
+
+            chaos.crash_point("store.snapshot.pre_rename")
+            os.rename(tmp, final)
+            if self.fsync:
+                fsync_dir(self.state_dir)
+            chaos.crash_point("store.snapshot.post_rename_pre_truncate")
+
+            # the snapshot is live: its watermark covers every applied
+            # record, so the consumed WAL prefix can go
+            if self._wal is not None:
+                self.wal.truncate()
+
+            for old in self._snapshot_ids()[: -self.keep]:
+                shutil.rmtree(
+                    os.path.join(self.state_dir, f"snap_{old:08d}"),
+                    ignore_errors=True,
+                )
+                self.stats.snapshots_pruned += 1
+
+        dt = time.monotonic() - t0
+        self.stats.snapshots += 1
+        self.stats.snapshot_seconds_last = dt
+        self.stats.snapshot_seconds_total += dt
+        self.stats.bundles_saved += len(bundles_meta)
+        self.stats.tenants_saved += len(tenants_meta)
+        obs.counter("acdc_store_snapshots").inc()
+        return final
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+    def restore_into(self, session: Session, server=None) -> RestoreReport:
+        """Warm-restore the latest snapshot into a freshly constructed
+        session (same schema/catalog, base data regenerated or reloaded
+        any way the caller likes — every relation is replaced
+        wholesale). With ``server``, the tenant registry and published
+        params are rebuilt and unapplied WAL records re-enter the
+        refresh queue (applied on the next drain, exactly as if they had
+        been submitted moments before the crash)."""
+        t0 = time.monotonic()
+        with obs.span("ft.restore"):
+            sid = self.latest()
+            if sid is None:
+                raise FileNotFoundError(
+                    f"no committed snapshot under {self.state_dir}"
+                )
+            snap_dir = os.path.join(self.state_dir, f"snap_{sid:08d}")
+            with open(os.path.join(snap_dir, "manifest.json")) as f:
+                manifest = json.load(f)
+            if manifest["format"] != _FORMAT:
+                raise ValueError(
+                    f"snapshot format {manifest['format']} != {_FORMAT}"
+                )
+            if manifest["fingerprint"] != session.schema_fingerprint:
+                raise ValueError(
+                    "snapshot schema fingerprint "
+                    f"{manifest['fingerprint']!r} does not match the "
+                    f"session's {session.schema_fingerprint!r} — restore "
+                    "needs a session built over the same (catalog, query)"
+                )
+            missing = set(manifest["relation_attrs"]) ^ set(
+                session.db.relations
+            )
+            if missing:
+                raise ValueError(
+                    f"snapshot/session relation mismatch: {sorted(missing)}"
+                )
+
+            db_z = np.load(os.path.join(snap_dir, "db.npz"))
+            relations = {
+                rname: {
+                    attr: db_z[f"rel__{rname}__{attr}"] for attr in attrs
+                }
+                for rname, attrs in manifest["relation_attrs"].items()
+            }
+            dicts_z = np.load(
+                os.path.join(snap_dir, "dicts.npz"), allow_pickle=True
+            )
+            dictionaries = {a: dicts_z[a] for a in dicts_z.files}
+            session.install_restored(
+                relations,
+                adom={a: int(v) for a, v in manifest["adom"].items()},
+                dictionaries=dictionaries,
+                deltas_applied=manifest["deltas_applied"],
+            )
+
+            for bm in manifest["bundles"]:
+                bz = np.load(os.path.join(snap_dir, bm["file"]))
+                tables = {}
+                for ti, mono_json in enumerate(bm["monomials"]):
+                    keys = {
+                        name[len(f"t{ti}__k__"):]: bz[name]
+                        for name in bz.files
+                        if name.startswith(f"t{ti}__k__")
+                    }
+                    tables[_mono_from_json(mono_json)] = (
+                        keys, jnp.asarray(bz[f"t{ti}__vals"])
+                    )
+                km = bm["key"]
+                key = BundleKey(
+                    features=tuple(km["features"]),
+                    response=km["response"],
+                    degree=km["degree"],
+                    squares=km["squares"],
+                    fds=tuple((d, tuple(ds)) for d, ds in km["fds"]),
+                    fingerprint=km["fingerprint"],
+                )
+                session.restore_bundle(
+                    key,
+                    tables,
+                    count=bm["count"],
+                    aggregate_seconds=bm["aggregate_seconds"],
+                    fds=_fds_from_json(bm["fds"]),
+                )
+            self.stats.bundles_restored += len(manifest["bundles"])
+
+            n_tenants = 0
+            if server is not None and manifest["tenants"]:
+                n_tenants = self._restore_tenants(
+                    session, server, snap_dir, manifest["tenants"]
+                )
+
+            wal_pos = manifest["wal"]
+            replayed = 0
+            if server is not None:
+                self.wal.set_position(
+                    wal_pos["watermark"], wal_pos["applied_above"]
+                )
+                for seq, delta in self.wal.replay():
+                    server.refresh.restore_entry(delta, seq)
+                    replayed += 1
+                self.stats.wal_records_requeued += replayed
+
+        dt = time.monotonic() - t0
+        self.stats.restores += 1
+        self.stats.restore_seconds_last = dt
+        obs.counter("acdc_store_restores").inc()
+        return RestoreReport(
+            snapshot_id=sid,
+            deltas_applied=manifest["deltas_applied"],
+            bundles=len(manifest["bundles"]),
+            tenants=n_tenants,
+            wal_replayed=replayed,
+            seconds=dt,
+        )
+
+    def _restore_tenants(self, session: Session, server, snap_dir: str,
+                         tenants_meta: list) -> int:
+        from repro.serve.server import Tenant  # runtime: serve layers above ft
+
+        params_z = np.load(os.path.join(snap_dir, "tenants.npz"))
+        for ti, meta in enumerate(tenants_meta):
+            spec = _spec_from_json(meta["spec"])
+            features = tuple(meta["features"])
+            fds = _fds_from_json(meta["fds"])
+            key = (
+                server.fingerprint, features, meta["response"],
+                fd_key(fds), spec,
+            )
+            tenant = Tenant(
+                name=meta["name"],
+                key=key,
+                spec=spec,
+                features=features,
+                response=meta["response"],
+                fds=fds,
+                subscribed=meta["subscribed"],
+                fitted_at_delta=meta["fitted_at_delta"],
+            )
+            if meta["has_fit"]:
+                # rebuild the predictable model around the restored
+                # params; the bundle lookup is a subsumption hit off the
+                # bundles restored above (no aggregate pass)
+                model, _sig, wl, _bundle = session.materialize(
+                    spec, features, meta["response"], fds
+                )
+                theta = jnp.asarray(params_z[f"p{ti}__theta"])
+                v_prefix = f"p{ti}__V__"
+                V = {
+                    int(name[len(v_prefix):]): jnp.asarray(params_z[name])
+                    for name in params_z.files
+                    if name.startswith(v_prefix)
+                }
+                params = {"theta": theta, "V": V} if V else theta
+                tenant.last_fit = FitResult(
+                    spec=spec,
+                    model=model,
+                    params=params,
+                    sigma=None,
+                    workload=wl,
+                    plan=None,
+                    solver=SolverResult(
+                        params=params, loss=float(meta["loss"]),
+                        iterations=0, converged=True,
+                    ),
+                    bundle=None,
+                    aggregate_seconds=0.0,
+                    converge_seconds=0.0,
+                )
+            server.tenants[key] = tenant
+        self.stats.tenants_restored += len(tenants_meta)
+        return len(tenants_meta)

@@ -1,0 +1,355 @@
+"""Crash-safe write-ahead log for ``DeltaEvent`` streams (DESIGN.md §16).
+
+The durability contract of the serving plane: a delta is acknowledged
+only after its record is appended AND fsynced here — so an acked delta
+survives any crash, and replay after restart re-queues exactly the
+records a snapshot has not yet captured. The log is the cheap half of
+ARIES-style recovery: snapshots (``ft.store``) bound its length, and
+``truncate()`` unlinks fully-consumed segments after each snapshot
+renames into place.
+
+On-disk format — append-only segments ``wal_<firstseq:016d>.log``:
+
+    MAGIC                                   b"ACDCWAL1\\n"
+    frame := header | payload
+    header := struct "<QII": seq (u64), payload length (u32), crc32 (u32)
+    payload := np.savez of the delta's columns
+               ("relation" 0-d str, "i__<attr>"/"d__<attr>" arrays)
+
+Replay verifies length + CRC per frame. A bad frame in the *last*
+segment is a torn tail — the record was mid-append at the crash, so it
+was never acked and is legitimately discarded (and truncated away on
+reopen, so later appends never land behind garbage). A bad frame in any
+earlier segment is real corruption and raises ``CorruptWal``.
+
+Applied-position tracking: ``mark_applied(seqs)`` advances a contiguous
+``watermark`` (every seq ≤ it is applied) plus an ``applied_above`` set
+for out-of-order applies; the pair is persisted in the snapshot manifest
+so replay after restore skips exactly the records whose effects the
+snapshot already contains — no acked delta lost, none applied twice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+import re
+import struct
+import threading
+import zlib
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.delta import Delta
+
+from . import chaos
+
+MAGIC = b"ACDCWAL1\n"
+_HEADER = struct.Struct("<QII")     # seq, payload_len, crc32
+_SEGMENT_RE = re.compile(r"^wal_(\d{16})\.log$")
+
+
+class CorruptWal(RuntimeError):
+    """A non-tail WAL frame failed its length/CRC check."""
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so renames/creates/unlinks inside it are
+    durable — the half of atomic-rename most writers forget (the
+    ``ckpt.checkpoint`` satellite fix of this PR does the same)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _encode(delta: Delta) -> bytes:
+    arrays: Dict[str, np.ndarray] = {"relation": np.array(delta.relation)}
+    for prefix, cols in (("i", delta.inserts), ("d", delta.deletes)):
+        for attr, v in cols.items():
+            arrays[f"{prefix}__{attr}"] = np.asarray(v)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _decode(payload: bytes) -> Delta:
+    z = np.load(io.BytesIO(payload), allow_pickle=False)
+    inserts: Dict[str, np.ndarray] = {}
+    deletes: Dict[str, np.ndarray] = {}
+    relation = ""
+    for name in z.files:
+        if name == "relation":
+            relation = str(z[name][()])
+        elif name.startswith("i__"):
+            inserts[name[3:]] = z[name]
+        elif name.startswith("d__"):
+            deletes[name[3:]] = z[name]
+    return Delta(relation, inserts=inserts, deletes=deletes)
+
+
+@dataclasses.dataclass
+class WalStats(obs.StatsBase):
+    appends: int = 0
+    bytes_appended: int = 0
+    fsyncs: int = 0
+    rotations: int = 0
+    segments_truncated: int = 0     # segments unlinked by truncate()
+    records_replayed: int = 0       # records yielded to a restore
+    records_skipped: int = 0        # replay records below the watermark
+    torn_tail_drops: int = 0        # partial tail frames discarded
+
+
+class DeltaWAL:
+    """Append-fsync-ack delta log with segment rotation and truncation."""
+
+    def __init__(self, directory: str, rotate_bytes: int = 4 << 20,
+                 fsync: bool = True):
+        self.directory = directory
+        self.rotate_bytes = rotate_bytes
+        self.fsync = fsync
+        self.stats = WalStats()     # lock: _mu
+        self._mu = threading.Lock()
+        self._fh = None             # lock: _mu — active segment handle
+        self._active: Optional[str] = None  # lock: _mu — active segment path
+        self._next_seq = 1          # lock: _mu
+        self._watermark = 0         # lock: _mu — every seq <= it is applied
+        self._applied: Set[int] = set()  # lock: _mu — applied above watermark
+        os.makedirs(directory, exist_ok=True)
+        self._recover_tail()
+
+    # ------------------------------------------------------------------
+    # open/scan
+    # ------------------------------------------------------------------
+    def _segment_paths(self) -> List[str]:
+        names = sorted(
+            n for n in os.listdir(self.directory) if _SEGMENT_RE.match(n)
+        )
+        return [os.path.join(self.directory, n) for n in names]
+
+    @staticmethod
+    def _scan_segment(path: str) -> Tuple[int, int]:
+        """Return (valid byte length, max seq) of the segment's intact
+        frame prefix; everything past it is a torn tail."""
+        size = os.path.getsize(path)
+        max_seq = 0
+        with open(path, "rb") as f:
+            if f.read(len(MAGIC)) != MAGIC:
+                return 0, 0
+            off = len(MAGIC)
+            while True:
+                header = f.read(_HEADER.size)
+                if len(header) < _HEADER.size:
+                    return off, max_seq
+                seq, length, crc = _HEADER.unpack(header)
+                if off + _HEADER.size + length > size:
+                    return off, max_seq
+                payload = f.read(length)
+                if len(payload) < length or zlib.crc32(payload) != crc:
+                    return off, max_seq
+                off += _HEADER.size + length
+                max_seq = max(max_seq, seq)
+
+    def _recover_tail(self) -> None:  # lock: held(_mu) — __init__-time,
+        # before the instance is visible to any other thread
+        segments = self._segment_paths()
+        max_seq = 0
+        for i, path in enumerate(segments):
+            valid, seg_max = self._scan_segment(path)
+            size = os.path.getsize(path)
+            if valid < size:
+                if i != len(segments) - 1:
+                    raise CorruptWal(
+                        f"corrupt frame mid-log in {path} "
+                        f"(valid prefix {valid} of {size} bytes)"
+                    )
+                # torn tail: the frame was mid-append at the crash and
+                # was never acked — drop it so new appends are readable
+                with open(path, "r+b") as f:
+                    f.truncate(valid)
+                self.stats.torn_tail_drops += 1
+            max_seq = max(max_seq, seg_max)
+        self._next_seq = max_seq + 1
+        if segments:
+            self._active = segments[-1]
+            self._fh = open(self._active, "ab")
+            if self._fh.tell() == 0:
+                # the tail truncation emptied a segment whose MAGIC was
+                # itself torn — re-stamp it before any append lands
+                self._fh.write(MAGIC)
+                self._fh.flush()
+                if self.fsync:
+                    os.fsync(self._fh.fileno())
+        else:
+            self._open_segment(self._next_seq)
+
+    def _open_segment(self, first_seq: int) -> None:  # lock: held(_mu)
+        path = os.path.join(self.directory, f"wal_{first_seq:016d}.log")
+        self._fh = open(path, "ab")
+        if self._fh.tell() == 0:
+            self._fh.write(MAGIC)
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+        self._active = path
+        chaos.crash_point("wal.rotate.pre_dirsync")
+        if self.fsync:
+            fsync_dir(self.directory)
+
+    # ------------------------------------------------------------------
+    # append (the ack barrier)
+    # ------------------------------------------------------------------
+    def append(self, delta: Delta) -> int:
+        """Durably log one delta; returns its sequence number. The fsync
+        happens BEFORE return — callers may ack as soon as this does."""
+        payload = _encode(delta)
+        header_and_payload_len = _HEADER.size + len(payload)
+        with self._mu:
+            seq = self._next_seq
+            header = _HEADER.pack(seq, len(payload), zlib.crc32(payload))
+            self._fh.write(header)
+            self._fh.flush()
+            # the torn-record barrier: header (or any prefix) on disk,
+            # payload not — replay must discard this frame
+            chaos.crash_point("wal.append.mid")
+            self._fh.write(payload)
+            self._fh.flush()
+            chaos.crash_point("wal.append.pre_fsync")
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+                self.stats.fsyncs += 1
+            self._next_seq = seq + 1
+            self.stats.appends += 1
+            self.stats.bytes_appended += header_and_payload_len
+            if self._fh.tell() >= self.rotate_bytes:
+                self._fh.close()
+                self._open_segment(self._next_seq)
+                self.stats.rotations += 1
+        obs.counter("acdc_wal_appends").inc()
+        return seq
+
+    # ------------------------------------------------------------------
+    # applied-position tracking
+    # ------------------------------------------------------------------
+    def mark_applied(self, seqs: Iterable[int]) -> None:
+        """Record that the session state now reflects these records."""
+        with self._mu:
+            for s in seqs:
+                if s > self._watermark:
+                    self._applied.add(s)
+            while (self._watermark + 1) in self._applied:
+                self._watermark += 1
+                self._applied.discard(self._watermark)
+
+    @property
+    def watermark(self) -> int:
+        with self._mu:
+            return self._watermark
+
+    def position(self) -> dict:
+        """The applied position, JSON-shaped for the snapshot manifest."""
+        with self._mu:
+            return {
+                "watermark": self._watermark,
+                "applied_above": sorted(self._applied),
+            }
+
+    def set_position(self, watermark: int,
+                     applied_above: Iterable[int] = ()) -> None:
+        """Adopt a manifest's applied position after a restore."""
+        with self._mu:
+            self._watermark = int(watermark)
+            self._applied = {
+                int(s) for s in applied_above if s > watermark
+            }
+
+    # ------------------------------------------------------------------
+    # replay / truncate
+    # ------------------------------------------------------------------
+    def replay(self) -> List[Tuple[int, Delta]]:
+        """Every durable record the current applied position does not
+        cover, in sequence order — the restart re-queue set."""
+        with self._mu:
+            watermark, applied = self._watermark, set(self._applied)
+            segments = self._segment_paths()
+        out: List[Tuple[int, Delta]] = []
+        skipped = 0
+        for i, path in enumerate(segments):
+            size = os.path.getsize(path)
+            with open(path, "rb") as f:
+                if f.read(len(MAGIC)) != MAGIC:
+                    raise CorruptWal(f"bad magic in {path}")
+                off = len(MAGIC)
+                while off < size:
+                    header = f.read(_HEADER.size)
+                    seq = length = crc = None
+                    payload = b""
+                    if len(header) == _HEADER.size:
+                        seq, length, crc = _HEADER.unpack(header)
+                        payload = f.read(length)
+                    if (
+                        len(header) < _HEADER.size
+                        or len(payload) < length
+                        or zlib.crc32(payload) != crc
+                    ):
+                        if i == len(segments) - 1:
+                            break   # torn tail: never acked, not replayed
+                        raise CorruptWal(
+                            f"corrupt frame at {path}:{off}"
+                        )
+                    off += _HEADER.size + length
+                    if seq <= watermark or seq in applied:
+                        skipped += 1
+                        continue
+                    out.append((seq, _decode(payload)))
+        out.sort(key=lambda pair: pair[0])
+        with self._mu:
+            self.stats.records_replayed += len(out)
+            self.stats.records_skipped += skipped
+        return out
+
+    def truncate(self) -> int:
+        """Unlink segments the watermark has fully consumed (called after
+        a snapshot commits). The active segment is rotated away first
+        when it too is consumed, so a long-lived quiet server does not
+        pin its whole history in one file."""
+        with self._mu:
+            if (
+                self._active is not None
+                and self._next_seq - 1 <= self._watermark
+                and self._fh.tell() > len(MAGIC)
+            ):
+                self._fh.close()
+                self._open_segment(self._next_seq)
+                self.stats.rotations += 1
+            segments = self._segment_paths()
+            firsts = [
+                int(_SEGMENT_RE.match(os.path.basename(p)).group(1))
+                for p in segments
+            ]
+            removed = 0
+            for i, path in enumerate(segments):
+                if path == self._active:
+                    continue
+                # a segment is dead iff every record in it is <= the
+                # watermark — true when the NEXT segment starts at or
+                # below watermark+1
+                if i + 1 < len(segments) and firsts[i + 1] <= self._watermark + 1:
+                    os.unlink(path)
+                    removed += 1
+            if removed:
+                self.stats.segments_truncated += removed
+                if self.fsync:
+                    fsync_dir(self.directory)
+        return removed
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        with self._mu:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None

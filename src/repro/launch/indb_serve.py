@@ -63,6 +63,15 @@ def acdc_serve(argv=None) -> int:
                    help="serve /metrics (Prometheus), /snapshot (JSON), "
                         "and /healthz on this port while the trace "
                         "replays (0 = ephemeral)")
+    p.add_argument("--state-dir", default=None,
+                   help="enable the durability plane (DESIGN.md §16): "
+                        "delta WAL + atomic snapshots under this "
+                        "directory; on startup the latest snapshot is "
+                        "warm-restored and unapplied WAL records re-enter "
+                        "the refresh queue")
+    p.add_argument("--snapshot-every", type=int, default=0,
+                   help="snapshot every N requests (0 = at exit only; "
+                        "needs --state-dir)")
     args = p.parse_args(argv)
 
     from repro import obs
@@ -142,6 +151,21 @@ def acdc_serve(argv=None) -> int:
     print(f"[serve] schema={args.schema} "
           f"fingerprint={server.fingerprint}")
 
+    store = None
+    if args.state_dir is not None:
+        from repro.ft.store import SessionStore
+
+        store = SessionStore(args.state_dir).attach(server)
+        if store.latest() is not None:
+            rep = store.restore_into(sess, server=server)
+            print(f"[serve] warm restore: snapshot {rep.snapshot_id}, "
+                  f"{rep.bundles} bundles, {rep.tenants} tenants, "
+                  f"{rep.wal_replayed} WAL records replayed, "
+                  f"{rep.seconds:.3f}s", flush=True)
+        else:
+            print(f"[serve] durability: fresh state dir {args.state_dir}",
+                  flush=True)
+
     exporter = None
     if args.metrics_port is not None:
         from repro.obs.export import serve_metrics_http
@@ -168,6 +192,15 @@ def acdc_serve(argv=None) -> int:
                   f"n={len(reply.predictions)}"
                   f"{' implicit-fit' if reply.implicit_fit else ''}"
                   f"{' STALE' if reply.stale else ''} {reply.seconds:.3f}s")
+        if (store is not None and args.snapshot_every
+                and (i + 1) % args.snapshot_every == 0):
+            store.snapshot(sess, server=server)
+            print(f"[serve] {i:03d} snapshot {store.latest()} "
+                  f"({store.stats.snapshot_seconds_last:.3f}s)", flush=True)
+
+    if store is not None:
+        store.snapshot(sess, server=server)
+        print(f"[serve] final snapshot {store.latest()} -> {args.state_dir}")
 
     snap = snapshot(server)
     if args.json:

@@ -10,6 +10,14 @@ streaming delta-refresh daemon with coalescing and staleness metrics
 driveable entrypoint is ``repro.launch.indb_serve`` (``acdc_serve``).
 """
 
+from repro.ft.resilience import (
+    Deadline,
+    DeadlineExceeded,
+    RetryPolicy,
+    ServerOverloaded,
+    TransientError,
+)
+
 from .cache import cache_snapshot, choose_victim, utility
 from .metrics import snapshot
 from .refresh import RefreshDaemon, RefreshStats, coalesce
@@ -33,6 +41,8 @@ from .server import (
 
 __all__ = [
     "BundleSnapshot",
+    "Deadline",
+    "DeadlineExceeded",
     "DeltaAck",
     "DeltaEvent",
     "FitReply",
@@ -43,10 +53,13 @@ __all__ = [
     "PublishedModel",
     "RefreshDaemon",
     "RefreshStats",
+    "RetryPolicy",
     "Scheduler",
     "SchedulerStats",
+    "ServerOverloaded",
     "ServerStats",
     "Tenant",
+    "TransientError",
     "cache_snapshot",
     "choose_victim",
     "coalesce",

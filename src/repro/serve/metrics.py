@@ -36,6 +36,21 @@ def _percentiles(name: str) -> dict:
     return {"p50": merged.percentile(50), "p99": merged.percentile(99)}
 
 
+def _durability(server: "ModelServer") -> dict:
+    """The ft plane (DESIGN.md §16): WAL + snapshot-store counters when a
+    ``SessionStore`` is attached, graceful absence otherwise — older
+    servers without a ``--state-dir`` report ``enabled: False`` rather
+    than a missing key."""
+    store = getattr(server, "state_store", None)
+    wal = getattr(server.refresh, "wal", None)
+    out: dict = {"enabled": store is not None or wal is not None}
+    if wal is not None:
+        out["wal"] = {**wal.stats.snapshot(), "watermark": wal.watermark}
+    if store is not None:
+        out["store"] = store.stats.snapshot()
+    return out
+
+
 def snapshot(server: "ModelServer") -> dict:
     sess = server.session
     st = server.stats
@@ -97,6 +112,8 @@ def snapshot(server: "ModelServer") -> dict:
         },
         "bundles": cache_snapshot(sess),
         "staleness": server.refresh.metrics(),
+        # durability & fault-tolerance plane (ft.wal / ft.store)
+        "durability": _durability(server),
         # process-wide planes (shared across every session in the process)
         "executor": executor_stats(),
         "solver_cache": solver_cache_stats().snapshot(),

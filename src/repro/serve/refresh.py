@@ -152,11 +152,17 @@ class RefreshDaemon:
         self.clock = clock
         self.on_applied = on_applied
         self.stats = RefreshStats()  # lock: _mu
-        # relation -> ordered [(delta, enqueued_at)]; _mu guards the queue
+        # the durability hook (ft.wal, DESIGN.md §16): when a
+        # SessionStore is attached this is its DeltaWAL, and submit()
+        # appends+fsyncs each batch BEFORE enqueueing it — the ack a
+        # caller sees therefore implies the delta survives a crash
+        self.wal = None  # lock: external(DeltaWAL._mu)
+        # relation -> ordered [(delta, enqueued_at, wal_seq)] with
+        # wal_seq = -1 when no WAL is attached; _mu guards the queue
         # map and the stats counters so producers may submit concurrently
         # with an in-flight drain (the scheduler serializes drains
         # themselves under its write lock, DESIGN.md §12)
-        self._queues: Dict[str, List[Tuple[Delta, float]]] = {}  # lock: _mu
+        self._queues: Dict[str, List[Tuple[Delta, float, int]]] = {}  # lock: _mu
         self._mu = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -165,12 +171,28 @@ class RefreshDaemon:
         malformed batch fails at submission, not out of some later
         innocent request's drain. (Set-semantics checks against the live
         relation still run at apply time — the relation may move under
-        the queue.) Thread-safe: a submit racing a drain lands behind
-        the prefix the drain consumes and survives to the next one."""
+        the queue.) With a WAL attached the batch is durably logged
+        before it becomes visible to any drain — the write-ahead in
+        write-ahead log. Thread-safe: a submit racing a drain lands
+        behind the prefix the drain consumes and survives to the next
+        one."""
+        delta.validate(self.session.db)
+        seq = self.wal.append(delta) if self.wal is not None else -1
+        with self._mu:
+            self._queues.setdefault(delta.relation, []).append(
+                (delta, self.clock(), seq)
+            )
+            self.stats.batches_enqueued += 1
+            self.stats.rows_enqueued += delta.n_inserts + delta.n_deletes
+
+    def restore_entry(self, delta: Delta, seq: int) -> None:
+        """Re-queue a WAL record during restore — already durable, so no
+        re-append; it applies on the next drain exactly as if submitted
+        moments before the crash (``SessionStore.restore_into``)."""
         delta.validate(self.session.db)
         with self._mu:
             self._queues.setdefault(delta.relation, []).append(
-                (delta, self.clock())
+                (delta, self.clock(), seq)
             )
             self.stats.batches_enqueued += 1
             self.stats.rows_enqueued += delta.n_inserts + delta.n_deletes
@@ -197,13 +219,13 @@ class RefreshDaemon:
             return sum(
                 d.n_inserts + d.n_deletes
                 for q in self._queues.values()
-                for d, _ in q
+                for d, _, _ in q
             )
 
     def data_age_seconds(self) -> float:
         """Seconds the oldest queued delta has been waiting (0 = fresh)."""
         with self._mu:
-            oldest = [t for q in self._queues.values() for _, t in q]
+            oldest = [t for q in self._queues.values() for _, t, _ in q]
         return self.clock() - min(oldest) if oldest else 0.0
 
     def metrics(self) -> dict:
@@ -215,9 +237,9 @@ class RefreshDaemon:
             pending_rows = sum(
                 d.n_inserts + d.n_deletes
                 for q in self._queues.values()
-                for d, _ in q
+                for d, _, _ in q
             )
-            oldest = [t for q in self._queues.values() for _, t in q]
+            oldest = [t for q in self._queues.values() for _, t, _ in q]
             stats = self.stats.snapshot()
         return {
             "pending_batches": pending_batches,
@@ -259,7 +281,7 @@ class RefreshDaemon:
                         if not entries:
                             self._queues.pop(relation, None)
                             continue
-                    raw = [d for d, _ in entries]
+                    raw = [d for d, _, _ in entries]
                     try:
                         folded = coalesce(raw, db=self.session.db)
                         applied = None
@@ -285,6 +307,15 @@ class RefreshDaemon:
                         )
                         self.stats.rows_cancelled += raw_rows - (
                             folded.n_inserts + folded.n_deletes
+                        )
+                    if self.wal is not None:
+                        # the session now reflects every consumed record
+                        # (a fully-cancelled run nets to nothing, which
+                        # the state also "reflects") — advance the
+                        # applied position so the next snapshot's
+                        # truncate can drop them
+                        self.wal.mark_applied(
+                            s for _, _, s in entries if s >= 0
                         )
                     if applied is None:
                         continue        # the run cancelled itself entirely

@@ -36,6 +36,7 @@ import threading
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro import obs
+from repro.ft.resilience import Deadline, DeadlineExceeded, ServerOverloaded
 from repro.session.bundle import fd_key
 
 from .server import (
@@ -90,6 +91,11 @@ class SchedulerStats(obs.StatsBase):
     predicts_during_refresh: int = 0   # proof predicts don't block on drains
     flushes: int = 0               # opportunistic delta-queue flushes
     stale_predicts: int = 0
+    # load shedding / degraded mode (DESIGN.md §16)
+    shed_fits: int = 0             # fits refused with ServerOverloaded
+    degraded_entries: int = 0      # enter_degraded() transitions
+    degraded_predicts: int = 0     # predicts served while degraded
+    deadline_timeouts: int = 0     # waiters abandoned on an expired deadline
 
 
 class _PendingFit:
@@ -98,14 +104,15 @@ class _PendingFit:
     waiter's trace context (captured at admission) so the leader's spans
     for this request land in the waiter's trace."""
 
-    __slots__ = ("request", "done", "reply", "error", "ctx")
+    __slots__ = ("request", "done", "reply", "error", "ctx", "deadline")
 
-    def __init__(self, request: FitRequest, ctx=None):
+    def __init__(self, request: FitRequest, ctx=None, deadline=None):
         self.request = request
         self.done = threading.Event()
         self.reply: Optional[FitReply] = None
         self.error: Optional[BaseException] = None
         self.ctx = ctx
+        self.deadline = deadline
 
 
 class Scheduler:
@@ -116,10 +123,18 @@ class Scheduler:
         server: ModelServer,
         on_publish: Optional[Callable[[BundleSnapshot], None]] = None,
         flush_pending_max: Optional[int] = None,
+        max_pending_fits: Optional[int] = None,
     ):
         self.server = server
         self.on_publish = on_publish
         self.flush_pending_max = flush_pending_max
+        # load shedding (DESIGN.md §16): a fit arriving when the group-
+        # commit backlog is already this deep is refused with
+        # ServerOverloaded instead of queued — bounded queues, bounded
+        # waits. None = unbounded (the pre-ft behavior).
+        self.max_pending_fits = max_pending_fits
+        self._degraded = threading.Event()  # lock: external(Event is atomic)
+        self._degraded_reason = ""  # lock: external(diagnostic; torn reads ok)
         self.stats = SchedulerStats()  # lock: _stats_mu
         # write plane: ONE lock serializes session mutation (fits, drains,
         # publishes); _pending is the group-commit queue behind it
@@ -141,6 +156,30 @@ class Scheduler:
     def snapshot(self) -> BundleSnapshot:
         """The current fully-published snapshot (a plain reference read)."""
         return self._snapshot
+
+    # ------------------------------------------------------------------
+    # degraded mode (DESIGN.md §16)
+    # ------------------------------------------------------------------
+    @property
+    def degraded(self) -> bool:
+        return self._degraded.is_set()
+
+    def enter_degraded(self, reason: str = "") -> None:
+        """Shed the write plane: new fits are refused with
+        ``ServerOverloaded`` while predicts keep flowing lock-free off
+        the last published snapshot (flagged ``degraded=True``). Used
+        during recovery/overload — the read plane's availability never
+        depends on the write plane's health."""
+        self._degraded_reason = reason
+        if not self._degraded.is_set():
+            self._degraded.set()
+            with self._stats_mu:
+                self.stats.degraded_entries += 1
+            obs.counter("acdc_degraded_entries").inc()
+
+    def exit_degraded(self) -> None:
+        self._degraded.clear()
+        self._degraded_reason = ""
 
     def handle(self, request):
         """Typed dispatch, mirroring ``ModelServer.handle``."""
@@ -170,13 +209,46 @@ class Scheduler:
         with obs.span("scheduler.fit"):
             with self._stats_mu:
                 self.stats.fits += 1
-            pending = _PendingFit(request, ctx=obs.current_context())
+            deadline = Deadline.of(request.deadline_s, self.server.clock)
+            if self._degraded.is_set():
+                with self._stats_mu:
+                    self.stats.shed_fits += 1
+                reason = self._degraded_reason
+                raise ServerOverloaded(
+                    "fit shed: scheduler degraded"
+                    + (f" ({reason})" if reason else "")
+                    + "; predicts remain available off the snapshot"
+                )
+            pending = _PendingFit(request, ctx=obs.current_context(),
+                                  deadline=deadline)
             with self._pending_mu:
+                if (
+                    self.max_pending_fits is not None
+                    and len(self._pending) >= self.max_pending_fits
+                ):
+                    with self._stats_mu:  # leaf lock, safe under _pending_mu
+                        self.stats.shed_fits += 1
+                    raise ServerOverloaded(
+                        f"fit shed: {len(self._pending)} fits already "
+                        f"pending (max_pending_fits={self.max_pending_fits})"
+                    )
                 self._pending.append(pending)
             with self._write:
                 if not pending.done.is_set():
                     self._commit()
-            pending.done.wait()
+            if not pending.done.wait(
+                timeout=None if deadline is None else max(
+                    deadline.remaining(), 0.0
+                )
+            ):
+                # the leader will still fill the reply eventually, but
+                # this waiter's budget is gone — surface the timeout now
+                with self._stats_mu:
+                    self.stats.deadline_timeouts += 1
+                raise DeadlineExceeded(
+                    f"fit deadline of {request.deadline_s:.3f}s expired "
+                    "waiting on the write plane"
+                )
             if pending.error is not None:
                 raise pending.error
             return pending.reply
@@ -210,6 +282,7 @@ class Scheduler:
                     self.server.fit_batch(
                         [p.request for p in batch],
                         ctxs=[p.ctx for p in batch],
+                        deadlines=[p.deadline for p in batch],
                     )
                     if batch
                     else []
@@ -313,6 +386,7 @@ class Scheduler:
                 "acdc_predict_seconds", tenant=pm.tenant
             ).observe(dt)
             stale = pm.fitted_at_delta < snap.deltas_applied
+            degraded = self._degraded.is_set()
             with self._stats_mu:
                 self.stats.predicts += 1
                 if not implicit:
@@ -321,6 +395,8 @@ class Scheduler:
                     self.stats.predicts_during_refresh += 1
                 if stale:
                     self.stats.stale_predicts += 1
+                if degraded:
+                    self.stats.degraded_predicts += 1
             return PredictReply(
                 tenant=pm.tenant,
                 predictions=preds,
@@ -328,6 +404,7 @@ class Scheduler:
                 stale=stale,
                 seconds=dt,
                 snapshot_version=snap.version,
+                degraded=degraded,
             )
 
     # ------------------------------------------------------------------
@@ -370,4 +447,6 @@ class Scheduler:
             "snapshot_version": snap.version,
             "published_tenants": len(snap.published),
             "snapshot_deltas_applied": snap.deltas_applied,
+            "degraded": self._degraded.is_set(),
+            "degraded_reason": self._degraded_reason,
         }

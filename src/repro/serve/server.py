@@ -39,6 +39,12 @@ from repro.session import (
     Session,
     SolverConfig,
 )
+from repro.ft.resilience import (
+    Deadline,
+    RetryPolicy,
+    TransientError,
+    retry_call,
+)
 from repro.session.bundle import fd_key
 
 from .refresh import RefreshDaemon
@@ -70,6 +76,8 @@ class FitRequest:
     pin: bool = False        # pin the tenant's bundle against eviction
     once: bool = False       # one-shot workload: compile on probation and
                              # never admit a bundle over the byte budget
+    deadline_s: Optional[float] = None  # time budget, queue wait included
+                             # (ft.resilience.Deadline, DESIGN.md §16)
 
 
 @dataclasses.dataclass(eq=False)
@@ -84,6 +92,7 @@ class PredictRequest:
     rows: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     fds: Tuple = ()
     subscribe: bool = False  # applies when this predict implicitly fits
+    deadline_s: Optional[float] = None  # time budget for this request
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +126,8 @@ class PredictReply:
     stale: bool               # params predate the latest applied delta
     seconds: float
     snapshot_version: int = -1  # scheduler snapshot served (-1: direct)
+    degraded: bool = False    # served off a stale snapshot while the
+                              # write plane sheds (DESIGN.md §16)
 
 
 @dataclasses.dataclass
@@ -175,6 +186,8 @@ class ServerStats(obs.StatsBase):
     solver_cache_hits: int = 0    # fits whose BGD drive was cache-served
     batched_fits: int = 0         # fits that rode a shared vmapped solve
     admission_rejects: int = 0    # probation bundles over the byte budget
+    fit_retries: int = 0          # transient fit failures retried (ft)
+    deadline_expired: int = 0     # requests rejected on an expired deadline
     # wall-clock per request kind, so metrics QPS math is consistent:
     # fit_seconds covers EVERY solve (explicit, implicit, refresh refits)
     fit_seconds: float = 0.0
@@ -190,8 +203,17 @@ class ModelServer:
         byte_budget: Optional[int] = None,
         default_solver: Optional[SolverConfig] = None,
         clock=time.monotonic,
+        retry: Optional[RetryPolicy] = None,
     ):
         self.session = session
+        # transient-failure policy for the shared fit path (DESIGN.md
+        # §16): None disables retries; a RetryPolicy retries
+        # TransientError (e.g. a flaky executor dispatch) with
+        # deterministic backoff. Deterministic errors still fail fast.
+        self.retry = retry
+        # a SessionStore sets itself here via attach(); metrics.snapshot
+        # reads it for the durability plane
+        self.state_store = None
         # tenant-key namespace: the session's schema fingerprint when it
         # was built through the frontend, else None (legacy hand-wired)
         self.fingerprint: Optional[str] = getattr(
@@ -226,8 +248,16 @@ class ModelServer:
             self.stats.requests += 1
             if isinstance(request, DeltaEvent):
                 return self._enqueue(request)
+            deadline = Deadline.of(
+                getattr(request, "deadline_s", None), self.clock
+            )
             # freshness guard: nothing is served over a pending queue
             self.refresh.drain()
+            if deadline is not None and deadline.expired:
+                # the drain ate the whole budget — refuse before the
+                # solve, so the caller's timeout is honest
+                self.stats.deadline_expired += 1
+                deadline.check(where="post-drain")
             if isinstance(request, FitRequest):
                 return self._fit(request)
             if isinstance(request, PredictRequest):
@@ -355,8 +385,9 @@ class ModelServer:
         passes_before = sess.stats.aggregate_passes
         solver_hits_before = sess.stats.solver_hits
         t0 = self.clock()
-        with obs.span("server.fit", tenant=tenant.name):
-            result = sess.fit(
+
+        def _solve():
+            return sess.fit(
                 tenant.spec,
                 tenant.features,
                 tenant.response,
@@ -365,6 +396,19 @@ class ModelServer:
                 warm_from=warm_from,
                 admit=admit,
             )
+
+        def _on_retry(attempt, exc, delay):
+            self.stats.fit_retries += 1
+            obs.counter("acdc_fit_retries", tenant=tenant.name).inc()
+
+        with obs.span("server.fit", tenant=tenant.name):
+            if self.retry is None:
+                result = _solve()
+            else:
+                result = retry_call(
+                    _solve, self.retry, retryable=TransientError,
+                    on_retry=_on_retry,
+                )
         dt = self.clock() - t0
         compiled = sess.stats.aggregate_passes > passes_before
         solver_hit = sess.stats.solver_hits > solver_hits_before
@@ -393,7 +437,10 @@ class ModelServer:
 
     # ------------------------------------------------------------------
     def fit_batch(
-        self, requests: Sequence[FitRequest], ctxs: Optional[Sequence] = None
+        self,
+        requests: Sequence[FitRequest],
+        ctxs: Optional[Sequence] = None,
+        deadlines: Optional[Sequence] = None,
     ) -> List:
         """Service N fit requests, collapsing compatible ones — same
         (features, response, fds, spec shape, solver), different ``lam``
@@ -414,6 +461,19 @@ class ModelServer:
         out: List = [None] * len(requests)
         groups: Dict[tuple, List[int]] = {}
         for i, req in enumerate(requests):
+            if (
+                deadlines is not None
+                and deadlines[i] is not None
+                and deadlines[i].expired
+            ):
+                # spent its whole budget queueing: reject before the
+                # solve rather than burning leader time on a dead request
+                self.stats.deadline_expired += 1
+                try:
+                    deadlines[i].check(where="fit_batch admission")
+                except Exception as e:
+                    out[i] = e
+                continue
             try:
                 tenant = self._tenant(req)
                 if req.solver is not None:

@@ -40,6 +40,7 @@ from repro.core import executor
 from repro.core import fd as fdmod
 from repro.core import solver as solver_mod
 from repro.core.engine import (
+    AggregateResult,
     EnginePlan,
     build_plan,
     delta_factorize,
@@ -48,7 +49,7 @@ from repro.core.engine import (
 )
 from repro.core.glm import Model
 from repro.core.monomials import Workload, build_registers, build_workload
-from repro.core.schema import Database
+from repro.core.schema import Database, Relation
 from repro.core.sigma import SigmaCSY
 from repro.core.solver import SolverResult, bgd
 from repro.core.variable_order import OrderInfo, VarNode, analyze
@@ -73,6 +74,7 @@ class SessionStats(obs.StatsBase):
     bytes_evicted: int = 0
     recompiles: int = 0            # misses whose key was previously evicted
     ttl_evictions: int = 0         # bundles hard-expired by cache_ttl_s
+    bundles_restored: int = 0      # bundles rebuilt from a snapshot (ft.store)
     # compiled-executor plane (core.executor, DESIGN.md §11): this
     # session's share of the process-wide compile cache traffic
     executor_hits: int = 0         # aggregate passes served by a cached trace
@@ -446,6 +448,86 @@ class Session:
             bundles_unchanged=len(self.bundles) - refreshed,
             seconds=tm.seconds,
         )
+
+    # ------------------------------------------------------------------
+    # warm restore (ft.store, DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def install_restored(
+        self,
+        relations,
+        adom,
+        dictionaries,
+        deltas_applied: int,
+    ) -> None:
+        """Replace the registered database's data wholesale with a
+        snapshot's post-delta state (``SessionStore.restore_into``). The
+        schema — attribute set, FDs, variable order — must already match
+        (the store checks the fingerprint); only column data, active
+        domains, dictionaries, and the delta epoch change. Every cached
+        derivation (order analysis, memoized factorization, bundles) is
+        invalidated; restored bundles re-enter via ``restore_bundle``."""
+        for rname, cols in relations.items():
+            old = self.db.relations[rname]
+            if set(cols) != set(old.columns):
+                raise ValueError(
+                    f"restored relation {rname!r} has attributes "
+                    f"{sorted(cols)} but the session expects "
+                    f"{sorted(old.columns)}"
+                )
+            self.db.relations[rname] = Relation(
+                rname, {a: np.asarray(cols[a]) for a in old.columns}
+            )
+        self.db.adom.clear()
+        self.db.adom.update(adom)
+        self.db.dictionaries.clear()
+        self.db.dictionaries.update(dictionaries)
+        self.info = analyze(self.order, self.db)
+        self._fz = None
+        self.bundles = []
+        self._evicted_keys = set()
+        self.stats.deltas_applied = int(deltas_applied)
+
+    def restore_bundle(
+        self,
+        key: BundleKey,
+        tables,
+        count: float,
+        aggregate_seconds: float = 0.0,
+        fds=(),
+    ) -> AggregateBundle:
+        """Rebuild a compiled bundle around persisted monomial tables —
+        the whole point of warm restart: the workload/registers/plan are
+        recomputed structurally (cheap), but the factorized aggregate
+        pass that produced the tables is NOT re-run. The restored bundle
+        is a first-class cache entry: it serves subsumption hits,
+        assembles Sigma views on demand, and is refreshable in place by
+        ``apply_delta`` (delta refresh needs ``plan.registers``)."""
+        wl = build_workload(
+            self.db, list(key.features), key.response, key.degree,
+            squares=key.squares,
+        )
+        missing = [m for m in wl.aggregates if m not in tables]
+        if missing:
+            raise ValueError(
+                f"restored tables are missing {len(missing)} monomials "
+                f"of the {key.response}/d{key.degree} workload "
+                f"(e.g. {missing[0]!r})"
+            )
+        regs = build_registers(wl.aggregates, self.info, self.db)
+        plan = build_plan(self._factorized(), regs)
+        bundle = AggregateBundle(
+            key=key,
+            workload=wl,
+            result=AggregateResult(tables=dict(tables), count=float(count)),
+            plan=plan,
+            aggregate_seconds=float(aggregate_seconds),
+            fds=tuple(fds),
+            executor_signature=None,
+        )
+        bundle.last_used = self.clock()
+        self.bundles.append(bundle)
+        self.stats.bundles_restored += 1
+        return bundle
 
     # ------------------------------------------------------------------
     def materialize(

@@ -1,0 +1,42 @@
+"""ACDC007 negative: the sanctioned durability idioms — tmp+fsync+rename
+atomic commit, tmp-named helper writes, append/read modes, and broad
+excepts that actually handle (re-raise, count, or narrow suppress)."""
+
+import contextlib
+import json
+import os
+
+
+def save_manifest_atomic(path, manifest):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+
+
+def write_shard(tmp_path, payload):
+    # the rename lives in the caller; the tmp-named path says so
+    with open(tmp_path, "wb") as f:
+        f.write(payload)
+
+
+def append_wal(path, frame):
+    with open(path, "ab") as f:
+        f.write(frame)
+
+
+def read_manifest(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def remove_segment(path, stats):
+    try:
+        os.unlink(path)
+    except Exception:
+        stats["unlink_errors"] = stats.get("unlink_errors", 0) + 1
+        raise
+    with contextlib.suppress(FileNotFoundError):
+        os.unlink(path + ".orphan")

@@ -1,0 +1,17 @@
+"""ACDC007 positive: a truncating in-place write of committed state with
+no tmp+rename anywhere, and a broad except whose whole body is pass."""
+
+import json
+import os
+
+
+def save_manifest(path, manifest):
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+
+
+def remove_segment(path):
+    try:
+        os.unlink(path)
+    except Exception:
+        pass

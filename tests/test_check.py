@@ -189,6 +189,7 @@ def test_mode_knob_roundtrip():
 
 RULE_IDS = [
     "ACDC001", "ACDC002", "ACDC003", "ACDC004", "ACDC005", "ACDC006",
+    "ACDC007",
 ]
 
 

@@ -1,0 +1,570 @@
+"""Durability & fault-tolerance plane (DESIGN.md §16).
+
+The acceptance drill is the **crash matrix**: arm every named crash
+site in turn (``ft.chaos``), run the serve plane into it, "crash"
+(``SimulatedCrash`` unwinds past every ``except Exception``), restart a
+fresh server from the same ``--state-dir``, and prove
+
+  * refit parameters match an uncrashed run applying exactly the acked
+    deltas, to ≤1e-6 (the ISSUE bound; in practice ~1e-15 on f64);
+  * no acknowledged delta is lost (table-level equality of the final
+    relations);
+  * the warm restart re-ran ZERO aggregate passes (the restore rebuilt
+    the bundles around persisted monomial tables).
+
+Around the matrix: WAL frame/torn-tail units, snapshot atomicity units,
+the ckpt parent-dir-fsync ordering satellite, and the resilience leg
+(deadlines, deterministic backoff, retried fault injection, degraded-
+mode shedding)."""
+
+import copy
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.schema import make_database
+from repro.core.variable_order import vo
+from repro.delta import Delta
+from repro.ft import chaos
+from repro.ft.chaos import FaultInjected, SimulatedCrash
+from repro.ft.resilience import (
+    Deadline,
+    DeadlineExceeded,
+    RetryPolicy,
+    ServerOverloaded,
+    TransientError,
+    retry_call,
+)
+from repro.ft.store import SessionStore
+from repro.ft.wal import CorruptWal, DeltaWAL, MAGIC
+from repro.serve import (
+    DeltaEvent,
+    FitRequest,
+    ModelServer,
+    PredictRequest,
+    Scheduler,
+)
+from repro.serve.metrics import snapshot as metrics_snapshot
+from repro.session import (
+    FactorizationMachine,
+    LinearRegression,
+    PolynomialRegression,
+    Session,
+    SolverConfig,
+)
+
+ORDER = vo("A", vo("B", vo("C"), vo("G", vo("D"))), vo("E"))
+FEATS = ["A", "B", "C", "D"]
+CFG = SolverConfig(max_iters=800, tol=1e-12, policy="single")
+LR = LinearRegression(lam=0.1)
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    chaos.disarm_all()
+    yield
+    chaos.disarm_all()
+
+
+def make_db(seed=1, nR=80, nS=50, nT=40):
+    rng = np.random.default_rng(seed)
+    bvals = rng.integers(0, 10, nS)
+    gmap = rng.integers(0, 3, 10)
+    return make_database(
+        relations={
+            "R": {"A": rng.integers(0, 8, nR),
+                  "B": rng.integers(0, 10, nR),
+                  "C": rng.normal(size=nR).round(2)},
+            "S": {"B": bvals, "G": gmap[bvals],
+                  "D": rng.normal(size=nS).round(2)},
+            "T": {"A": rng.integers(0, 8, nT),
+                  "E": rng.normal(size=nT).round(2)},
+        },
+        continuous=["C", "D", "E"],
+        categorical=["A", "B", "G"],
+        fds=[("B", ["G"])],
+    )
+
+
+def fresh_rows(rng, n, db):
+    return {
+        "A": rng.integers(0, db.adom["A"], n).astype(np.int64),
+        "B": rng.integers(0, db.adom["B"], n).astype(np.int64),
+        "C": rng.normal(size=n).round(6),
+    }
+
+
+def mkdelta(seed, db, n=2):
+    return Delta("R", inserts=fresh_rows(np.random.default_rng(seed), n, db))
+
+
+def fit_req(warm=True, **kw):
+    return FitRequest(spec=LR, features=tuple(FEATS), response="E",
+                      solver=CFG, warm=warm, **kw)
+
+
+# ----------------------------------------------------------------------
+# WAL units
+# ----------------------------------------------------------------------
+
+
+def test_wal_roundtrip_replay_and_truncate(tmp_path):
+    wal = DeltaWAL(str(tmp_path / "wal"), rotate_bytes=1)  # rotate every
+    db = make_db()                                          # append
+    deltas = [mkdelta(s, db) for s in (10, 11, 12)]
+    seqs = [wal.append(d) for d in deltas]
+    assert seqs == [1, 2, 3]
+    wal.close()
+
+    wal2 = DeltaWAL(str(tmp_path / "wal"))
+    replayed = wal2.replay()
+    assert [s for s, _ in replayed] == [1, 2, 3]
+    for (_, got), want in zip(replayed, deltas):
+        assert got.relation == want.relation
+        np.testing.assert_array_equal(got.inserts["A"], want.inserts["A"])
+        np.testing.assert_array_equal(got.inserts["C"], want.inserts["C"])
+    wal2.mark_applied([1, 3])           # out of order: watermark stalls
+    assert wal2.watermark == 1
+    wal2.mark_applied([2])              # gap closes, watermark jumps
+    assert wal2.watermark == 3
+    assert wal2.truncate() >= 1
+    assert wal2.replay() == []
+    # appends continue across the truncation with fresh sequence numbers
+    assert wal2.append(mkdelta(13, db)) == 4
+    assert [s for s, _ in wal2.replay()] == [4]
+    wal2.close()
+
+
+def test_wal_torn_tail_is_discarded_not_fatal(tmp_path):
+    wal = DeltaWAL(str(tmp_path / "wal"))
+    db = make_db()
+    wal.append(mkdelta(20, db))
+    wal.append(mkdelta(21, db))
+    seg = wal._active
+    wal.close()
+    size = os.path.getsize(seg)
+    with open(seg, "r+b") as f:         # tear the last frame mid-payload
+        f.truncate(size - 7)
+
+    wal2 = DeltaWAL(str(tmp_path / "wal"))
+    assert wal2.stats.torn_tail_drops == 1
+    assert [s for s, _ in wal2.replay()] == [1]   # record 2 never acked
+    # the torn bytes are GONE: the next append lands on a clean tail and
+    # is fully readable
+    assert wal2.append(mkdelta(22, db)) == 2
+    assert [s for s, _ in wal2.replay()] == [1, 2]
+    wal2.close()
+
+
+def test_wal_corruption_before_tail_raises(tmp_path):
+    wal = DeltaWAL(str(tmp_path / "wal"), rotate_bytes=1)
+    db = make_db()
+    wal.append(mkdelta(30, db))
+    first_seg = wal._segment_paths()[0]
+    wal.append(mkdelta(31, db))
+    wal.close()
+    with open(first_seg, "r+b") as f:   # flip a payload byte mid-log
+        f.seek(len(MAGIC) + 20)
+        b = f.read(1)
+        f.seek(len(MAGIC) + 20)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(CorruptWal):
+        DeltaWAL(str(tmp_path / "wal"))
+
+
+def test_wal_append_fsyncs_before_returning(tmp_path, monkeypatch):
+    """The ack barrier: os.fsync of the segment must happen before
+    append() returns (fsync=True)."""
+    calls = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(
+        os, "fsync", lambda fd: (calls.append("fsync"), real_fsync(fd))[1]
+    )
+    wal = DeltaWAL(str(tmp_path / "wal"))
+    calls.clear()
+    wal.append(mkdelta(40, make_db()))
+    assert "fsync" in calls
+    wal.close()
+
+
+# ----------------------------------------------------------------------
+# snapshot/restore units
+# ----------------------------------------------------------------------
+
+
+def _serve_stack(state_dir, db=None):
+    sess = Session(db if db is not None else make_db(), ORDER)
+    server = ModelServer(sess)
+    store = SessionStore(str(state_dir)).attach(server)
+    return sess, server, store
+
+
+def test_snapshot_restore_roundtrip_multi_spec(tmp_path):
+    sess, server, store = _serve_stack(tmp_path / "state")
+    pr2 = PolynomialRegression(lam=0.05)
+    fama = FactorizationMachine(rank=3, lam=0.05)
+    server.handle(FitRequest(spec=pr2, features=tuple(FEATS), response="E",
+                             solver=CFG))
+    server.handle(FitRequest(spec=LR, features=tuple(FEATS), response="E",
+                             solver=CFG))     # subsumption off the pr2 pass
+    server.handle(FitRequest(spec=fama, features=tuple(FEATS), response="E",
+                             solver=CFG))
+    assert sess.stats.aggregate_passes == 1
+    losses = {t.name: t.last_fit.loss for t in server.tenants.values()}
+    store.snapshot(sess, server=server)
+
+    sess2, server2, store2 = _serve_stack(tmp_path / "state")
+    rep = store2.restore_into(sess2, server=server2)
+    assert rep.bundles == 1 and rep.tenants == 3
+    assert sess2.stats.bundles_restored == 1
+    # every tenant came back with its params and name intact
+    assert {t.name for t in server2.tenants.values()} == set(losses)
+    for t in server2.tenants.values():
+        assert t.last_fit is not None
+        assert t.last_fit.loss == pytest.approx(losses[t.name], abs=1e-12)
+    # refits off the restored bundles pay ZERO aggregate passes
+    server2.handle(FitRequest(spec=pr2, features=tuple(FEATS), response="E",
+                              solver=CFG, warm=False))
+    assert sess2.stats.aggregate_passes == 0
+    assert sess2.stats.bundle_hits >= 1
+
+
+def test_restore_refuses_schema_mismatch(tmp_path):
+    sess, server, store = _serve_stack(tmp_path / "state")
+    sess.compile(FEATS, "E", degree=2)
+    store.snapshot(sess, server=server)
+    other = Session(make_db(), vo("A", vo("B", vo("C"), vo("G", vo("D"))),
+                                vo("E")))
+    other.schema_fingerprint = "different"
+    with pytest.raises(ValueError, match="fingerprint"):
+        SessionStore(str(tmp_path / "state")).restore_into(other)
+
+
+def test_restore_ignores_crashed_tmp_snapshot(tmp_path):
+    sess, server, store = _serve_stack(tmp_path / "state")
+    sess.compile(FEATS, "E", degree=2)
+    store.snapshot(sess, server=server)
+    # a crashed writer's leftovers: a bare .tmp dir newer than the commit
+    os.makedirs(tmp_path / "state" / "snap_00000002.tmp")
+    store2 = SessionStore(str(tmp_path / "state"))
+    assert store2.latest() == 1
+    sess2, server2, _ = _serve_stack(tmp_path / "state")
+    rep = SessionStore(str(tmp_path / "state")).restore_into(
+        sess2, server=server2
+    )
+    assert rep.snapshot_id == 1
+
+
+def test_snapshot_retention_keeps_newest(tmp_path):
+    sess, server, store = _serve_stack(tmp_path / "state")
+    store.keep = 2
+    sess.compile(FEATS, "E", degree=2)
+    for _ in range(4):
+        store.snapshot(sess, server=server)
+    assert store._snapshot_ids() == [3, 4]
+    assert store.stats.snapshots_pruned == 2
+
+
+# ----------------------------------------------------------------------
+# the crash matrix (the acceptance drill)
+# ----------------------------------------------------------------------
+
+# every named crash site: (site, where it fires, does the in-flight
+# delta survive the crash?). The in-flight delta was never ACKED, so
+# either outcome is contractually fine — what the matrix pins down is
+# that each site's outcome is DETERMINISTIC and the recovered state
+# matches a clean run of exactly the surviving records:
+#   wal.append.mid         torn frame (header only) — dropped on reopen
+#   wal.append.pre_fsync   frame fully flushed — replayed after restart
+#   wal.rotate.pre_dirsync frame durable, crash mid-rotation — replayed
+#   store.snapshot.*       delta plane untouched; snapshot either absent
+#                          (.tmp ignored) or present-with-WAL-intact
+CRASH_MATRIX = [
+    ("wal.append.mid", "delta", False),
+    ("wal.append.pre_fsync", "delta", True),
+    ("wal.rotate.pre_dirsync", "delta", True),
+    ("store.snapshot.mid_write", "snapshot", False),
+    ("store.snapshot.pre_rename", "snapshot", False),
+    ("store.snapshot.post_rename_pre_truncate", "snapshot", False),
+]
+
+
+@pytest.mark.parametrize("site,stage,survives", CRASH_MATRIX)
+def test_crash_matrix_recovers_with_refit_parity(tmp_path, site, stage,
+                                                 survives):
+    """Kill at the barrier, restart from the state dir, prove parity."""
+    db = make_db()
+    deltas = [mkdelta(s, db, n=2) for s in (100, 101, 102, 103, 104)]
+
+    # --- the crashing run -------------------------------------------
+    sess, server, store = _serve_stack(tmp_path / "state", db=make_db())
+    server.handle(fit_req())
+    for d in deltas[:2]:
+        server.handle(DeltaEvent(copy.deepcopy(d)))
+    server.handle(fit_req())            # drains deltas 0-1
+    store.snapshot(sess, server=server)  # snapshot covers them
+    for d in deltas[2:4]:
+        server.handle(DeltaEvent(copy.deepcopy(d)))
+    server.handle(fit_req())            # drains deltas 2-3 (acked+applied,
+                                        # NOT covered by any snapshot)
+    acked = list(deltas[:4])
+    chaos.arm(site, action="raise")
+    if stage == "delta":
+        if site == "wal.rotate.pre_dirsync":
+            # force the rotation path: tiny threshold so this append's
+            # post-fsync rotation opens a new segment and trips the site
+            store.wal.rotate_bytes = 1
+        with pytest.raises(SimulatedCrash):
+            server.handle(DeltaEvent(copy.deepcopy(deltas[4])))
+    else:
+        with pytest.raises(SimulatedCrash):
+            store.snapshot(sess, server=server)
+    acked_final = acked + ([deltas[4]] if survives else [])
+    assert chaos.hits(site) >= 1
+
+    # --- restart from the same state dir ----------------------------
+    chaos.disarm_all()
+    sess2, server2, store2 = _serve_stack(tmp_path / "state", db=make_db())
+    rep = store2.restore_into(sess2, server=server2)
+    server2.refresh.drain()             # apply whatever the WAL replayed
+    passes = sess2.stats.aggregate_passes
+    reply = server2.handle(fit_req(warm=False))
+    assert sess2.stats.aggregate_passes == passes == 0, (
+        "warm restart must not re-run the aggregate pass"
+    )
+
+    # --- the uncrashed reference: exactly the acked deltas -----------
+    ref_sess = Session(make_db(), ORDER)
+    ref_sess.compile(FEATS, "E", degree=2)
+    for d in acked_final:
+        ref_sess.apply_delta(copy.deepcopy(d))
+    ref = ref_sess.fit(LR, FEATS, "E", solver=CFG)
+
+    diff = float(np.max(np.abs(
+        np.asarray(reply.result.params) - np.asarray(ref.params)
+    )))
+    assert diff <= 1e-6, f"refit parity broke at {site}: {diff}"
+    # no acked delta lost: the recovered base relation equals the
+    # reference's, row-set-wise
+    rec = sess2.db.relations["R"]
+    want = ref_sess.db.relations["R"]
+    assert rec.num_rows == want.num_rows, (
+        f"acked delta lost (or ghost row) after crash at {site}: "
+        f"{rec.num_rows} rows recovered vs {want.num_rows} expected"
+    )
+    for attr in rec.attrs:
+        a = np.sort(np.asarray(rec.columns[attr]), kind="stable")
+        b = np.sort(np.asarray(want.columns[attr]), kind="stable")
+        np.testing.assert_array_equal(a, b, err_msg=f"{site}:{attr}")
+    assert rep.snapshot_id >= 1
+
+
+def test_crash_post_rename_pre_truncate_never_double_applies(tmp_path):
+    """The subtle half of the matrix: the new snapshot committed but the
+    WAL kept the consumed records — replay must filter them out via the
+    manifest's watermark, not apply them twice."""
+    db = make_db()
+    sess, server, store = _serve_stack(tmp_path / "state", db=make_db())
+    server.handle(fit_req())
+    d = mkdelta(200, db, n=3)
+    server.handle(DeltaEvent(copy.deepcopy(d)))
+    server.handle(fit_req())            # applied; watermark advances
+    chaos.arm("store.snapshot.post_rename_pre_truncate", action="raise")
+    with pytest.raises(SimulatedCrash):
+        store.snapshot(sess, server=server)
+    # the WAL still holds the record on disk...
+    assert any(p for p in store.wal._segment_paths())
+
+    sess2, server2, store2 = _serve_stack(tmp_path / "state", db=make_db())
+    rep = store2.restore_into(sess2, server=server2)
+    assert rep.wal_replayed == 0        # filtered by the watermark
+    assert rep.deltas_applied == 1
+    server2.refresh.drain()
+    rows = sess2.db.relations["R"].num_rows
+    assert rows == 80 + 3               # applied exactly once
+
+
+# ----------------------------------------------------------------------
+# ckpt satellite: parent-dir fsync ordering
+# ----------------------------------------------------------------------
+
+
+def test_checkpoint_fsyncs_parent_dir_after_rename(tmp_path, monkeypatch):
+    from repro.ckpt import checkpoint as ck
+
+    events = []
+    real_rename = os.rename
+    real_fsync_dir = ck._fsync_dir
+    monkeypatch.setattr(
+        os, "rename",
+        lambda a, b: (events.append(("rename", b)), real_rename(a, b))[1],
+    )
+    monkeypatch.setattr(
+        ck, "_fsync_dir",
+        lambda p: (events.append(("fsync_dir", p)), real_fsync_dir(p))[1],
+    )
+    path = ck.save_checkpoint(str(tmp_path / "ckpt"), 7, {"w": np.ones(3)})
+    kinds = [k for k, _ in events]
+    assert kinds == ["rename", "fsync_dir"], events
+    assert events[1][1] == str(tmp_path / "ckpt")   # the PARENT, not tmp
+    step, tree = ck.load_checkpoint(str(tmp_path / "ckpt"), {"w": np.zeros(3)})
+    assert step == 7
+    np.testing.assert_array_equal(tree["w"], np.ones(3))
+    assert path.endswith("step_0000000007")
+
+
+# ----------------------------------------------------------------------
+# resilience: deadlines, backoff, retries, shedding
+# ----------------------------------------------------------------------
+
+
+def test_deadline_on_fake_clock():
+    now = [0.0]
+    dl = Deadline(2.0, clock=lambda: now[0])
+    assert dl.remaining() == 2.0 and not dl.expired
+    now[0] = 1.5
+    dl.check()                          # still inside the budget
+    now[0] = 2.5
+    assert dl.expired
+    with pytest.raises(DeadlineExceeded, match="at solve"):
+        dl.check(where="solve")
+    assert Deadline.of(None) is None
+
+
+def test_retry_policy_backoffs_are_deterministic():
+    p = RetryPolicy(max_attempts=4, base_s=0.1, multiplier=2.0,
+                    max_backoff_s=0.3, jitter=0.5, seed=7)
+    a, b = list(p.backoffs()), list(p.backoffs())
+    assert a == b and len(a) == 3
+    # exponential shape under the cap, jitter within ±50%
+    for delay, base in zip(a, [0.1, 0.2, 0.3]):
+        assert 0.5 * base <= delay <= 1.5 * base
+
+
+def test_retry_call_retries_transient_only():
+    slept = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientError("hiccup")
+        return "ok"
+
+    out = retry_call(flaky, RetryPolicy(max_attempts=3, base_s=0.01),
+                     sleep=slept.append)
+    assert out == "ok" and calls["n"] == 3 and len(slept) == 2
+
+    def deterministic():
+        raise ValueError("a real bug")
+
+    with pytest.raises(ValueError):     # not retried: fails on attempt 1
+        retry_call(deterministic, RetryPolicy(max_attempts=3, base_s=0.01),
+                   sleep=slept.append)
+    assert len(slept) == 2              # no extra sleeps
+
+
+def test_retry_call_abandons_on_deadline():
+    now = [0.0]
+    dl = Deadline(0.005, clock=lambda: now[0])
+
+    def always():
+        raise TransientError("x")
+
+    with pytest.raises(TransientError):
+        retry_call(always, RetryPolicy(max_attempts=5, base_s=10.0),
+                   deadline=dl, sleep=lambda s: None)
+
+
+def test_server_retries_injected_executor_fault(tmp_path):
+    """The fault leg end-to-end: executor.dispatch trips twice, the
+    server's RetryPolicy eats both, the fit succeeds, and the retries
+    are counted."""
+    sess = Session(make_db(), ORDER)
+    server = ModelServer(
+        sess, retry=RetryPolicy(max_attempts=3, base_s=0.0, jitter=0.0)
+    )
+    chaos.arm("executor.dispatch", action="fault", count=2)
+    reply = server.handle(fit_req())
+    assert reply.result.solver.converged
+    assert server.stats.fit_retries == 2
+
+    # without a retry policy the same fault is fatal
+    chaos.arm("executor.dispatch", action="fault", count=1)
+    server_bare = ModelServer(Session(make_db(), ORDER))
+    with pytest.raises(FaultInjected):
+        server_bare.handle(fit_req())
+
+
+def test_fit_deadline_expired_after_drain(tmp_path):
+    sess = Session(make_db(), ORDER)
+    server = ModelServer(sess)
+    with pytest.raises(DeadlineExceeded):
+        server.handle(fit_req(deadline_s=0.0))
+    assert server.stats.deadline_expired == 1
+
+
+def test_scheduler_degraded_mode_sheds_fits_keeps_predicts():
+    sess = Session(make_db(), ORDER)
+    server = ModelServer(sess)
+    sched = Scheduler(server)
+    sched.fit(fit_req())                # publish a model first
+    rows = {
+        **fresh_rows(np.random.default_rng(9), 4, sess.db),
+        "D": np.random.default_rng(9).normal(size=4),
+    }
+    sched.enter_degraded("recovery drill")
+    assert sched.degraded
+    with pytest.raises(ServerOverloaded):
+        sched.fit(fit_req())
+    reply = sched.predict(PredictRequest(
+        spec=LR, features=tuple(FEATS), response="E", rows=rows,
+    ))
+    assert reply.degraded and len(np.asarray(reply.predictions)) == 4
+    sched.exit_degraded()
+    assert not sched.degraded
+    sched.fit(fit_req())                # write plane is back
+    reply2 = sched.predict(PredictRequest(
+        spec=LR, features=tuple(FEATS), response="E", rows=rows,
+    ))
+    assert not reply2.degraded
+    m = sched.metrics()
+    assert m["shed_fits"] == 1 and m["degraded_entries"] == 1
+    assert m["degraded_predicts"] == 1 and m["degraded"] is False
+
+
+def test_scheduler_backlog_shedding():
+    sess = Session(make_db(), ORDER)
+    server = ModelServer(sess)
+    sched = Scheduler(server, max_pending_fits=0)
+    # backlog cap 0: every fit that cannot immediately lead is shed; the
+    # leaderless path here means even the first is refused at enqueue
+    with pytest.raises(ServerOverloaded, match="max_pending_fits"):
+        sched.fit(fit_req())
+
+
+# ----------------------------------------------------------------------
+# metrics plane
+# ----------------------------------------------------------------------
+
+
+def test_metrics_snapshot_durability_plane_json_roundtrip(tmp_path):
+    sess, server, store = _serve_stack(tmp_path / "state")
+    server.handle(fit_req())
+    server.handle(DeltaEvent(mkdelta(300, sess.db)))
+    server.handle(fit_req())
+    store.snapshot(sess, server=server)
+    snap = metrics_snapshot(server)
+    dur = snap["durability"]
+    assert dur["enabled"] is True
+    assert dur["wal"]["appends"] == 1
+    assert dur["wal"]["watermark"] == 1
+    assert dur["store"]["snapshots"] == 1
+    assert dur["store"]["bundles_saved"] == 1
+    json.dumps(snap)                    # the whole plane stays plain
+
+    # absence is graceful: a server with no store reports enabled=False
+    bare = ModelServer(Session(make_db(), ORDER))
+    assert metrics_snapshot(bare)["durability"] == {"enabled": False}
